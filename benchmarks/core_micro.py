@@ -1,0 +1,63 @@
+"""Microbenchmarks of the core primitives (summarize / merge / kernels).
+
+Not a paper table; used by the §Perf loop to track the histogram plane's
+own cost (it must stay negligible next to a training step).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Histogram, build_exact, merge
+from repro.kernels import (
+    bucket_sizes_pallas,
+    merge_pallas,
+    sort_tiles_pallas,
+    summarize_pallas,
+)
+
+
+def timed(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(emit):
+    rng = np.random.default_rng(0)
+    x1m = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+
+    emit("build_exact_1M_T1024", timed(lambda: build_exact(x1m, 1024)) * 1e6, "sort-based")
+    emit(
+        "summarize_pallas_1M",
+        timed(lambda: summarize_pallas(x1m, tile_len=8192, T_tile=512, T_out=1024)) * 1e6,
+        "tile-sort + fused merge (interpret)",
+    )
+    emit(
+        "bucket_count_1M_T256",
+        timed(lambda: bucket_sizes_pallas(x1m, build_exact(x1m, 256).boundaries)) * 1e6,
+        "",
+    )
+    hs = [build_exact(jnp.asarray(rng.normal(size=50_000).astype(np.float32)), 1024)
+          for _ in range(32)]
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in hs]), jnp.stack([h.sizes for h in hs])
+    )
+    emit("merge_32x1024_to_254", timed(lambda: merge(stacked, 254)) * 1e6, "vectorized")
+    emit(
+        "merge_pallas_32x1024_to_254",
+        timed(lambda: merge_pallas(stacked.boundaries, stacked.sizes, 254)) * 1e6,
+        "fused kernel (interpret)",
+    )
+    xt = jnp.asarray(rng.normal(size=(64, 4096)).astype(np.float32))
+    emit("tile_sort_64x4096", timed(lambda: sort_tiles_pallas(xt)) * 1e6, "bitonic (interpret)")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

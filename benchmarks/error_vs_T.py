@@ -1,0 +1,70 @@
+"""Paper Figures 14 & 15: μ_b and μ_s against T, merge vs tuple sampling.
+
+T sweeps B·2^n summary buckets for the merge method; the tuple baseline
+gets the *same budget* as its sample size (the paper's comparison).  Both
+datasets (real-like, Gumbel-skewed), B = 254 output buckets.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    boundary_error,
+    build_exact,
+    merge_list,
+    sample_histogram,
+    empirical_size_error,
+)
+from benchmarks.paper_data import B_PAPER, month
+
+
+def run(kind: str, days: int = 8, per_day: int = 100_000, n_exp: int = 7):
+    data = month(kind, days=days, per_day=per_day)
+    pooled = jnp.asarray(np.concatenate(data))
+    exact = build_exact(pooled, B_PAPER)
+    rows = []
+    for n in range(n_exp):
+        T = B_PAPER * (2**n)
+        t0 = time.perf_counter()
+        summaries = [build_exact(jnp.asarray(d), T) for d in data]
+        t_summarize = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        merged = merge_list(summaries, B_PAPER)
+        jax.block_until_ready(merged.sizes)
+        t_merge = time.perf_counter() - t0
+
+        budget = min(T * days, pooled.shape[0])  # same stored-value budget
+        t0 = time.perf_counter()
+        tup = sample_histogram(pooled, B_PAPER, budget, jax.random.PRNGKey(n))
+        jax.block_until_ready(tup.sizes)
+        t_tuple = time.perf_counter() - t0
+
+        rows.append({
+            "kind": kind, "T": T,
+            "mu_b_merge": float(boundary_error(merged, exact)),
+            "mu_s_merge": float(empirical_size_error(merged, pooled)),
+            "mu_b_tuple": float(boundary_error(tup, exact)),
+            "mu_s_tuple": float(empirical_size_error(tup, pooled)),
+            "t_summarize_s": t_summarize, "t_merge_s": t_merge,
+            "t_tuple_s": t_tuple,
+        })
+    return rows
+
+
+def main(emit):
+    for kind, fig in (("real", "fig14"), ("skewed", "fig15")):
+        for r in run(kind):
+            emit(
+                f"{fig}_{kind}_T{r['T']}",
+                r["t_merge_s"] * 1e6,
+                f"mu_b merge/tuple={r['mu_b_merge']:.4g}/{r['mu_b_tuple']:.4g} "
+                f"mu_s={r['mu_s_merge']:.4g}/{r['mu_s_tuple']:.4g}",
+            )
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -1,0 +1,63 @@
+"""Paper Figures 16 & 17: error against the merged time interval.
+
+Intervals of 1 day / 1 / 2 / 3 weeks / 1 month, T fixed (the paper used
+B·254·2^12 for real data; scaled here), merge vs tuple at equal budget.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    boundary_error,
+    build_exact,
+    merge_list,
+    sample_histogram,
+    empirical_size_error,
+)
+from benchmarks.paper_data import B_PAPER, month
+
+INTERVALS = [1, 7, 14, 21, 31]
+
+
+def run(kind: str, per_day: int = 100_000, T_factor: int = 32):
+    T = B_PAPER * T_factor
+    data = month(kind, days=31, per_day=per_day)
+    summaries = [build_exact(jnp.asarray(d), T) for d in data]
+    rows = []
+    for days in INTERVALS:
+        pooled = jnp.asarray(np.concatenate(data[:days]))
+        exact = build_exact(pooled, B_PAPER)
+        t0 = time.perf_counter()
+        merged = merge_list(summaries[:days], B_PAPER)
+        jax.block_until_ready(merged.sizes)
+        t_merge = time.perf_counter() - t0
+        budget = min(T * days, pooled.shape[0])
+        tup = sample_histogram(pooled, B_PAPER, budget, jax.random.PRNGKey(days))
+        rows.append({
+            "kind": kind, "days": days,
+            "mu_b_merge": float(boundary_error(merged, exact)),
+            "mu_s_merge": float(empirical_size_error(merged, pooled)),
+            "mu_b_tuple": float(boundary_error(tup, exact)),
+            "mu_s_tuple": float(empirical_size_error(tup, pooled)),
+            "t_merge_s": t_merge,
+        })
+    return rows
+
+
+def main(emit):
+    for kind, fig in (("real", "fig16"), ("skewed", "fig17")):
+        for r in run(kind):
+            emit(
+                f"{fig}_{kind}_days{r['days']}",
+                r["t_merge_s"] * 1e6,
+                f"mu_b merge/tuple={r['mu_b_merge']:.4g}/{r['mu_b_tuple']:.4g} "
+                f"mu_s={r['mu_s_merge']:.4g}/{r['mu_s_tuple']:.4g}",
+            )
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

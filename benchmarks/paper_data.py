@@ -1,0 +1,33 @@
+"""Workload generators mirroring the paper's two datasets (§7, scaled).
+
+  * "real"   — heavy-tailed page-size-like distribution (the Wikipedia
+               hourly pageview `pagesize` column): log-normal body with a
+               Zipf tail.
+  * "skewed" — Gumbel, exactly as the paper's synthetic skewed workload.
+
+Scaled to CPU: ``days × per_day`` tuples instead of 5 B; every comparison
+(merge vs corrected tuple sampling, B=254 Oracle-default buckets) and both
+error metrics (Eq. 9, Eq. 10) match the paper's methodology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+B_PAPER = 254  # Oracle's default histogram bucket count (paper §7)
+
+
+def day_values(kind: str, day: int, per_day: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, day, hash(kind) & 0xFFFF]))
+    if kind == "real":
+        body = rng.lognormal(mean=8.0, sigma=1.2, size=per_day)
+        tail = (rng.zipf(1.5, size=per_day) * 1000.0) * (
+            rng.random(per_day) < 0.02
+        )
+        return (body + tail).astype(np.float32)
+    if kind == "skewed":
+        return rng.gumbel(loc=0.0, scale=1.0, size=per_day).astype(np.float32)
+    raise ValueError(kind)
+
+
+def month(kind: str, days: int = 31, per_day: int = 100_000, seed: int = 0):
+    return [day_values(kind, d, per_day, seed) for d in range(days)]

@@ -1,0 +1,98 @@
+"""Render the dry-run JSONs into the §Dry-run / §Roofline tables.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits a
+markdown table per mesh plus per-cell one-liners on what would move the
+dominant term.  Used both standalone and by benchmarks.run.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+GB = 1e9
+
+ADVICE = {
+    ("compute_s", "train"): "more chips or lower-precision matmuls; compute-bound is the goal state",
+    ("memory_s", "train"): "fuse residual/norm chains & cast params pre-gather (bytes term counts bf16 use at fp32 today)",
+    ("collective_s", "train"): "cast params to bf16 BEFORE the FSDP all-gather and shrink SP all-gathers (biggest single lever)",
+    ("memory_s", "prefill"): "KV-cache write + attention reads dominate; flash-style fused attention kernel removes logit round-trips",
+    ("collective_s", "prefill"): "sequence-parallel boundary all-gathers; overlap with per-layer compute",
+    ("memory_s", "decode"): "decode is weight-streaming-bound by nature; int8/fp8 weights or wider batch raise arithmetic intensity",
+    ("collective_s", "decode"): "TP all-reduces per token; fuse QKV/out projections or use 1D TP on d_ff only",
+    ("memory_s", "decode_long"): "KV reads dominate; KV quantization (int8 KV) halves the term",
+    ("collective_s", "decode_long"): "split-KV softmax combine collectives; tree-reduce over (data,model)",
+}
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (
+            f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — | — | "
+            f"{r['reason'][:60]} |"
+        )
+    if r["status"] != "ok":
+        return (
+            f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — | — | "
+            f"{r.get('error','')[:60]} |"
+        )
+    t = r["terms"]
+    dom = r["dominant"].replace("_s", "")
+    mem = r.get("memory", {}).get("peak_bytes_per_device", 0) / GB
+    advice = ADVICE.get((r["dominant"], r["kind"]), "")
+    return (
+        f"| {r['arch']} | {r['shape']} | ok | {t['compute_s']:.4f} | "
+        f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | **{dom}** | "
+        f"{r['useful_compute_ratio']:.2f} | {mem:.1f} GB | {advice} |"
+    )
+
+
+def render(out_dir: str = "results/dryrun") -> str:
+    recs = load(out_dir)
+    lines = []
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if not sub:
+            continue
+        lines.append(f"\n### Mesh {mesh} ({256 if mesh=='16x16' else 512} chips)\n")
+        lines.append(
+            "| arch | shape | status | compute (s) | memory (s) | "
+            "collective (s) | dominant | useful-FLOP ratio | peak HBM/dev | "
+            "what moves the dominant term |"
+        )
+        lines.append("|" + "---|" * 10)
+        order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+        for r in sorted(sub, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+            lines.append(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] not in ("ok", "skip")]
+    lines.append(
+        f"\n{len(ok)} compiled ok, {len(skip)} assignment-skips, {len(err)} errors."
+    )
+    return "\n".join(lines)
+
+
+def main(emit=None):
+    txt = render()
+    print(txt)
+    if emit:
+        for r in load():
+            if r["status"] == "ok":
+                emit(
+                    f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    r["roofline_step_s"] * 1e6,
+                    f"dominant={r['dominant']} useful={r['useful_compute_ratio']:.2f}",
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+``python -m benchmarks.run [--only fig14,...]`` prints
+``name,us_per_call,derived`` CSV rows for:
+  * error_vs_T        — paper Figures 14 & 15 (mu_b, mu_s vs T; merge vs tuple)
+  * error_vs_days     — paper Figures 16 & 17 (error vs merged interval)
+  * table2_runtimes   — paper Table 2 (summarize/merge/sample timings)
+  * core_micro        — core-primitive microbenchmarks
+  * roofline          — dry-run derived roofline rows (if results exist)
+"""
+import argparse
+import sys
+
+from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
+from benchmarks import roofline_report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    chosen = set(args.only.split(",")) if args.only != "all" else None
+
+    def emit(name: str, us_per_call: float, derived: str = "") -> None:
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    sections = {
+        "error_vs_T": error_vs_T.main,
+        "error_vs_days": error_vs_days.main,
+        "table2": table2_runtimes.main,
+        "core_micro": core_micro.main,
+    }
+    for key, fn in sections.items():
+        if chosen is None or key in chosen:
+            fn(emit)
+    if chosen is None or "roofline" in chosen:
+        try:
+            roofline_report.main(emit)
+        except Exception as e:  # dry-run results may not exist yet
+            print(f"roofline,0.0,unavailable: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

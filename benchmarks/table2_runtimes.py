@@ -1,0 +1,86 @@
+"""Paper Table 2: mean running times of monthly histogram construction.
+
+Rows mirror the paper: exact construction over the pooled month, offline
+per-day summarization (Summarizer), merging of daily summaries (Merger),
+offline per-day sampling, merge-of-samples — for both datasets.  Also
+benchmarks the three merge implementations (Algorithm-1 sequential,
+vectorized rank-select, fused Pallas kernel) head-to-head — the paper-
+faithful baseline vs our TPU-shaped forms.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Histogram,
+    build_exact,
+    merge,
+    merge_histograms_sequential,
+    merge_list,
+    sample_histogram,
+)
+from repro.kernels import merge_pallas
+from benchmarks.paper_data import B_PAPER, month
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(kind: str, days: int = 16, per_day: int = 100_000, T_factor: int = 16):
+    T = B_PAPER * T_factor
+    data = month(kind, days=days, per_day=per_day)
+    pooled = jnp.asarray(np.concatenate(data))
+    rows = {}
+
+    t, _ = timed(lambda: build_exact(pooled, B_PAPER))
+    rows["exact_hist_construction"] = t
+
+    t0 = time.perf_counter()
+    summaries = [build_exact(jnp.asarray(d), T) for d in data]
+    jax.block_until_ready(summaries[-1].sizes)
+    rows["summarize_each_day"] = (time.perf_counter() - t0) / days
+
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in summaries]),
+        jnp.stack([h.sizes for h in summaries]),
+    )
+    t, _ = timed(lambda: merge(stacked, B_PAPER))
+    rows["merge_daily_summaries_vectorized"] = t
+    t0 = time.perf_counter()
+    merge_histograms_sequential(summaries, B_PAPER)
+    rows["merge_daily_summaries_algorithm1"] = time.perf_counter() - t0
+    t, _ = timed(
+        lambda: merge_pallas(stacked.boundaries, stacked.sizes, B_PAPER)
+    )
+    rows["merge_daily_summaries_pallas"] = t
+
+    t0 = time.perf_counter()
+    samples = [
+        sample_histogram(jnp.asarray(d), B_PAPER, T, jax.random.PRNGKey(i))
+        for i, d in enumerate(data)
+    ]
+    jax.block_until_ready(samples[-1].sizes)
+    rows["sample_each_day"] = (time.perf_counter() - t0) / days
+    t, _ = timed(lambda: merge_list(samples, B_PAPER))
+    rows["merge_daily_samplings"] = t
+    return rows
+
+
+def main(emit):
+    for kind in ("real", "skewed"):
+        for name, seconds in run(kind).items():
+            emit(f"table2_{kind}_{name}", seconds * 1e6, "")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

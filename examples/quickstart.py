@@ -1,0 +1,61 @@
+"""Quickstart: the paper's §4 worked example + the quality guarantee.
+
+Reproduces the exact numbers from the paper:
+  P1 = {2,4,5,6,7,10,13,16,18,20,21,25}   → H1 = {(2,4),(7,4),(18,4),(25,0)}
+  P2 = {3,9,...,30}                        → H2 = {(3,5),(15,5),(24,5),(30,0)}
+  merge(H1, H2, β=3)                       → H* = {(2,9),(7,9),(18,9),(30,0)}
+
+then demonstrates the ε_max < 2β/T·(N/β) guarantee on a million-value
+Gumbel stream and the paper's T ≥ 40β rule for ≤5 % bucket error.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    build_exact,
+    merge_list,
+    merge_histograms_sequential,
+    quantile,
+    theoretical_eps_max,
+)
+
+
+def main() -> None:
+    # --- the worked example -------------------------------------------------
+    P1 = jnp.asarray([2, 4, 5, 6, 7, 10, 13, 16, 18, 20, 21, 25], jnp.float32)
+    P2 = jnp.asarray(
+        [3, 9, 11, 12, 14, 15, 17, 19, 22, 23, 24, 26, 27, 29, 30], jnp.float32
+    )
+    H1, H2 = build_exact(P1, 3), build_exact(P2, 3)
+    print("H1:", list(zip(np.asarray(H1.boundaries), np.r_[np.asarray(H1.sizes), 0])))
+    print("H2:", list(zip(np.asarray(H2.boundaries), np.r_[np.asarray(H2.sizes), 0])))
+    Hs = merge_list([H1, H2], 3)
+    print("H* (vectorized):", np.asarray(Hs.boundaries), np.asarray(Hs.sizes))
+    Hq = merge_histograms_sequential([H1, H2], 3)
+    print("H* (Algorithm 1):", np.asarray(Hq.boundaries), np.asarray(Hq.sizes))
+    assert np.allclose(np.asarray(Hs.boundaries), [2, 7, 18, 30])
+    assert np.allclose(np.asarray(Hs.sizes), [9, 9, 9])
+
+    # --- the guarantee at scale ----------------------------------------------
+    rng = np.random.default_rng(0)
+    k, n_per = 16, 65_536
+    beta = 254                     # Oracle's default bucket count (paper §7)
+    T = 40 * beta                  # paper's rule for ≤5 % bucket-size error
+    parts = [rng.gumbel(size=n_per).astype(np.float32) for _ in range(k)]
+    summaries = [build_exact(jnp.asarray(p), T) for p in parts]
+    merged = merge_list(summaries, beta)
+    N = k * n_per
+    err = np.abs(np.asarray(merged.sizes) - N / beta).max()
+    bound = theoretical_eps_max(N, T, k, exact_inputs=False)
+    print(f"\nN={N:,}  T={T}  beta={beta}")
+    print(f"max bucket-size error: {err:.1f}  (bound {bound:.1f}, "
+          f"= {err/(N/beta)*100:.2f}% of ideal bucket; guarantee ≤5%)")
+    assert err <= bound and err / (N / beta) <= 0.05
+    print("p95 of the merged histogram:", float(quantile(merged, 0.95)))
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving + histogram-calibrated int8 activation scales.
+
+Loads a (reduced) qwen3-8b, serves a batch of prompts through the
+prefill/decode engine, then calibrates int8 activation clip ranges from
+merged equi-depth summaries of calibration batches — the quantization-
+calibration integration of the paper (bounded-rank-error p99.9 instead of
+an outlier-hostage max).
+
+Run: PYTHONPATH=src python examples/serve_calibrated.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import init_model
+from repro.serve import Engine, ServeConfig
+
+
+def main() -> None:
+    cfg = smoke(get_config("qwen3-8b"))
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg, params,
+        ServeConfig(max_seq=64, max_new_tokens=12, temperature=0.0),
+    )
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (6, 11, 17, 9)
+    ]
+    outs = eng.generate(prompts)
+    for i, o in enumerate(outs):
+        print(f"req{i}: {len(prompts[i])} prompt → {len(o)} total tokens")
+
+    print("\n== int8 calibration from merged histograms ==")
+    key = jax.random.PRNGKey(7)
+    batches = []
+    for i in range(4):
+        k = jax.random.fold_in(key, i)
+        batches.append(
+            {"tokens": jax.random.randint(k, (2, 32), 0, cfg.vocab_size)}
+        )
+    calib = eng.calibrate(batches, q=0.999, T=512)
+    print(f"clip={calib['clip']:.4f}  int8_scale={calib['int8_scale']:.6f}")
+    print(f"rank error bound: ±{calib['rank_error_bound']:.0f} of "
+          f"{calib['n_calibration_values']:,} calibration values "
+          f"({100*calib['rank_error_bound']/calib['n_calibration_values']:.2f}%)")
+    print("serve_calibrated OK")
+
+
+if __name__ == "__main__":
+    main()

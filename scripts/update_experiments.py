@@ -1,0 +1,10 @@
+"""Inject the current roofline tables into EXPERIMENTS.md (idempotent)."""
+import sys, re
+sys.path.insert(0, "src")
+from benchmarks.roofline_report import render
+
+marker = "<!-- ROOFLINE_TABLES -->"
+txt = open("EXPERIMENTS.md").read()
+head = txt.split(marker)[0]
+open("EXPERIMENTS.md", "w").write(head + marker + "\n" + render() + "\n")
+print("EXPERIMENTS.md roofline tables updated")

@@ -1,0 +1,150 @@
+"""Sharded checkpointing with atomic manifests and elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   — step, tree structure, dtypes/shapes, config name
+            arrays.npz      — one entry per flattened tree path
+         <dir>/LATEST       — atomic pointer file (written via rename)
+
+Restore re-sharding is *elastic*: arrays are loaded on host and
+``device_put`` with whatever sharding the *current* mesh's Rules produce,
+so a job can restart on a different mesh shape (scale up/down) — the
+fault-tolerance contract of DESIGN.md §7.  On a real multi-host deployment
+each host would write its address-chunks (à la Orbax/TensorStore); the
+format here keeps the same manifest/atomicity semantics single-process.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes;
+            arr = arr.astype(np.float32)  # f32 is a lossless container and
+        out[jax.tree_util.keystr(path)] = arr  # restore re-casts via template
+    return out
+
+
+def save_checkpoint(
+    ckpt_dir: str, step: int, params: Any, opt_state: Any | None = None,
+    extra: dict | None = None,
+) -> str:
+    """Atomic save: write to tmp dir, fsync, rename, repoint LATEST."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        payload = {f"p{SEP}{k}": v for k, v in _flatten(params).items()}
+        if opt_state is not None:
+            payload.update(
+                {f"o{SEP}{k}": v for k, v in _flatten(opt_state).items()}
+            )
+        np.savez(os.path.join(tmp, "arrays.npz"), **payload)
+        manifest = {
+            "step": int(step),
+            "keys": sorted(payload),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    fd, ptr_tmp = tempfile.mkstemp(dir=ckpt_dir)
+    with os.fdopen(fd, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    step: int | None,
+    params_template: Any,
+    opt_template: Any | None = None,
+    shardings: Any | None = None,
+    opt_shardings: Any | None = None,
+) -> tuple[Any, Any | None, int]:
+    """Restore onto the *current* mesh (templates give tree structure).
+
+    ``shardings`` trees (same structure) trigger sharded device_put —
+    restoring onto a different mesh than the one that saved is supported
+    (elastic restart).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    def rebuild(template, prefix, shard_tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_flat = (
+            jax.tree_util.tree_flatten(shard_tree)[0]
+            if shard_tree is not None
+            else [None] * len(flat)
+        )
+        leaves = []
+        for (keypath, leaf), sh in zip(flat, shard_flat):
+            arr = data[f"{prefix}{SEP}{jax.tree_util.keystr(keypath)}"]
+            arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+            leaves.append(
+                jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+            )
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = rebuild(params_template, "p", shardings)
+    opt = (
+        rebuild(opt_template, "o", opt_shardings)
+        if opt_template is not None
+        else None
+    )
+    return params, opt, step
+
+
+def gc_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
+    """Remove all but the newest ``keep`` checkpoints (never LATEST's)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(d.split("_")[-1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_")
+    )
+    keep_set = set(steps[-keep:])
+    latest = latest_step(ckpt_dir)
+    if latest is not None:
+        keep_set.add(latest)
+    for s in steps:
+        if s not in keep_set:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,48 @@
+"""Architecture registry: --arch <id> resolves here."""
+from repro.configs.base import (
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+    shape_applicable,
+    smoke,
+)
+from repro.configs import (
+    jamba_v0_1_52b,
+    smollm_135m,
+    deepseek_7b,
+    gemma2_9b,
+    qwen3_8b,
+    dbrx_132b,
+    llama4_maverick_400b,
+    rwkv6_7b,
+    whisper_medium,
+    pixtral_12b,
+)
+
+REGISTRY = {
+    "jamba-v0.1-52b": jamba_v0_1_52b.config,
+    "smollm-135m": smollm_135m.config,
+    "deepseek-7b": deepseek_7b.config,
+    "gemma2-9b": gemma2_9b.config,
+    "qwen3-8b": qwen3_8b.config,
+    "dbrx-132b": dbrx_132b.config,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b.config,
+    "rwkv6-7b": rwkv6_7b.config,
+    "whisper-medium": whisper_medium.config,
+    "pixtral-12b": pixtral_12b.config,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeConfig", "shape_applicable", "smoke",
+    "REGISTRY", "get_config", "list_archs",
+]

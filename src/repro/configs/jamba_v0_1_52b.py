@@ -1,0 +1,37 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+[arXiv:2403.19887; hf]  32L, d_model=4096, 32H (GQA kv=8, hd=128),
+d_ff=14336, vocab=65536.  Super-block of 8 layers: one attention layer per
+block (ratio 1:7), MoE replacing the MLP on odd layer slots (16 MoE layers
+total), per the Jamba paper's layout.
+"""
+from repro.configs.base import ModelConfig
+
+BLOCK = (
+    "mamba+mlp", "mamba+moe", "mamba+mlp", "mamba+moe",
+    "attn+mlp", "mamba+moe", "mamba+mlp", "mamba+moe",
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        pattern=BLOCK,
+        repeats=4,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=65536,
+        num_experts=16,
+        num_experts_per_token=2,
+        moe_group_size=128,  # §Perf P5: C 80→20, dispatch flops 4× down
+        mamba_d_state=16,
+        mamba_d_conv=4,
+        mamba_expand=2,
+        # §Perf P6: bf16-stored scan tensors (fp32 carries) — halves the
+        # dominant memory-traffic term; <0.1% output deviation measured.
+        mamba_scan_dtype="bfloat16",
+    )

@@ -1,0 +1,160 @@
+"""HistogramStore — the paper's Summarizer/Merger processing framework.
+
+The paper's deployment (§5, Fig. 13): every new partition (a day of logs) is
+summarized *once, offline* into a T-bucket exact histogram stored next to the
+data; any time-interval query is answered *on demand* by merging the stored
+summaries, never re-touching raw data.
+
+This module is the host-side control plane of that framework:
+
+  * ``HistogramStore.ingest(partition_id, values)``  — the Summarizer job
+  * ``HistogramStore.query(lo, hi, beta)``           — the Merger job
+  * npz persistence                                   — the HDFS summary files
+
+It is deliberately NumPy/host-resident (like the NameNode metadata path);
+the heavy lifting — per-partition sort — runs through the jitted JAX
+``build_exact`` (or the distributed/hierarchical variants for sharded
+partitions).  In the training framework the same store tracks per-step
+summaries of step times and gradient statistics (core/telemetry.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import jax
+import numpy as np
+
+from repro.core.histogram import (
+    Histogram,
+    build_exact,
+    merge_list,
+    quantile,
+    theoretical_eps_max,
+)
+
+__all__ = ["StoredSummary", "HistogramStore"]
+
+
+@dataclass(frozen=True)
+class StoredSummary:
+    """One partition's summary — a row of the paper's summary file."""
+
+    partition_id: int
+    n: int
+    boundaries: np.ndarray
+    sizes: np.ndarray
+
+    def to_histogram(self) -> Histogram:
+        return Histogram(
+            boundaries=jax.numpy.asarray(self.boundaries),
+            sizes=jax.numpy.asarray(self.sizes),
+        )
+
+
+@dataclass
+class HistogramStore:
+    """Append-only store of per-partition exact equi-depth summaries."""
+
+    num_buckets: int  # T — summary resolution; pick T ≥ 40·β for ≤5 % error
+    summaries: dict[int, StoredSummary] = field(default_factory=dict)
+
+    # ----------------------------------------------------------- Summarizer
+    def ingest(self, partition_id: int, values) -> StoredSummary:
+        """Summarize one new partition (the scheduled Summarizer job)."""
+        values = np.asarray(values).reshape(-1)
+        T = min(self.num_buckets, values.shape[0])
+        h = build_exact(jax.numpy.asarray(values), T)
+        summ = StoredSummary(
+            partition_id=int(partition_id),
+            n=int(values.shape[0]),
+            boundaries=np.asarray(h.boundaries),
+            sizes=np.asarray(h.sizes),
+        )
+        self.summaries[int(partition_id)] = summ
+        return summ
+
+    def ingest_summary(self, partition_id: int, hist: Histogram) -> None:
+        """Store an externally-built summary (e.g. from the distributed or
+        Pallas tile path) — the framework does not care who summarized."""
+        self.summaries[int(partition_id)] = StoredSummary(
+            partition_id=int(partition_id),
+            n=int(np.asarray(hist.sizes).sum()),
+            boundaries=np.asarray(hist.boundaries),
+            sizes=np.asarray(hist.sizes),
+        )
+
+    # --------------------------------------------------------------- Merger
+    def query(
+        self, lo: int, hi: int, beta: int, *, strict: bool = True
+    ) -> tuple[Histogram, float]:
+        """β-bucket histogram over partitions ``lo..hi`` (inclusive).
+
+        Returns ``(histogram, eps_max)`` where ``eps_max`` is the paper's
+        guaranteed maximum bucket/range-size error for this answer.  With
+        ``strict=False`` missing partitions are skipped (summary-loss
+        tolerance: a lost shard degrades the answer instead of failing it).
+        """
+        ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+        if strict and len(ids) != hi - lo + 1:
+            missing = sorted(set(range(lo, hi + 1)) - set(ids))
+            raise KeyError(f"missing partition summaries: {missing}")
+        if not ids:
+            raise KeyError("no partition summaries in requested interval")
+        hs = [self.summaries[i].to_histogram() for i in ids]
+        merged = merge_list(hs, beta)
+        n = sum(self.summaries[i].n for i in ids)
+        eps = theoretical_eps_max(
+            n, self.num_buckets, k=len(ids), exact_inputs=False
+        )
+        return merged, eps
+
+    def quantile_query(
+        self, lo: int, hi: int, q, beta: int | None = None
+    ) -> np.ndarray:
+        """e.g. the paper's motivating '95th-percentile latency for any
+        interval': ``store.quantile_query(day0, day1, 0.95)``."""
+        beta = beta or min(self.num_buckets, 254)
+        h, _ = self.query(lo, hi, beta, strict=False)
+        return np.asarray(quantile(h, np.asarray(q)))
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Atomic write (tmpfile + rename) — summary files survive crashes."""
+        payload = {}
+        meta = {"num_buckets": self.num_buckets, "ids": sorted(self.summaries)}
+        for pid, s in self.summaries.items():
+            payload[f"b_{pid}"] = s.boundaries
+            payload[f"s_{pid}"] = s.sizes
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+        os.close(fd)
+        np.savez(tmp, meta=json.dumps(meta), **payload)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "HistogramStore":
+        data = np.load(path, allow_pickle=False)
+        meta = json.loads(str(data["meta"]))
+        store = cls(num_buckets=int(meta["num_buckets"]))
+        for pid in meta["ids"]:
+            b = data[f"b_{pid}"]
+            s = data[f"s_{pid}"]
+            store.summaries[int(pid)] = StoredSummary(
+                partition_id=int(pid),
+                n=int(s.sum()),
+                boundaries=b,
+                sizes=s,
+            )
+        return store
+
+    # ------------------------------------------------------------- utility
+    def ids(self) -> list[int]:
+        return sorted(self.summaries)
+
+    def total_n(self, ids: Iterable[int] | None = None) -> int:
+        ids = list(ids) if ids is not None else self.ids()
+        return sum(self.summaries[i].n for i in ids)

@@ -1,0 +1,196 @@
+"""Training-plane integrations of the mergeable-histogram primitive.
+
+The paper's motivating statistic is "p95 latency over all servers for any
+time window".  A large training job needs exactly that class of query over
+four data planes, all served by the same summarize→merge machinery:
+
+  1. gradient / activation distributions   (blowup & underflow monitoring)
+  2. quantile gradient clipping             (optim/ uses ``grad_clip_value``)
+  3. histogram-threshold gradient sparsification (optim/compression.py)
+  4. per-host step-time stragglers          (``StragglerDetector``)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import Histogram, build_exact, merge, quantile
+from repro.core.distributed import tensor_histogram_in_step
+
+__all__ = [
+    "tensor_summary",
+    "tree_summaries",
+    "grad_quantile",
+    "StragglerDetector",
+    "TelemetryLog",
+]
+
+
+def tensor_summary(
+    x: jax.Array,
+    T: int = 256,
+    *,
+    magnitude: bool = True,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_names: tuple[str, ...] = (),
+) -> Histogram:
+    """T-bucket summary of one tensor, jit-compatible.
+
+    With a mesh, uses the paper's per-shard summarize + all-gather merge
+    (``O(k·T)`` comm); without one, an exact local histogram.
+    """
+    v = jnp.abs(x) if magnitude else x
+    v = v.astype(jnp.float32)
+    if mesh is not None and axis_names:
+        return tensor_histogram_in_step(v, T, T, mesh, axis_names)
+    flat = v.reshape(-1)
+    return build_exact(flat, min(T, flat.shape[0]))
+
+
+def tree_summaries(
+    tree: Any,
+    T: int = 256,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_names: tuple[str, ...] = (),
+    magnitude: bool = True,
+) -> dict[str, Histogram]:
+    """Per-leaf summaries of a pytree (e.g. the gradient tree)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out[name] = tensor_summary(
+            leaf, T, magnitude=magnitude, mesh=mesh, axis_names=axis_names
+        )
+    return out
+
+
+def grad_quantile(
+    grads: Any,
+    q: float,
+    T: int = 512,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_names: tuple[str, ...] = (),
+) -> jax.Array:
+    """Approximate q-quantile of |g| over the whole gradient tree.
+
+    Per-leaf summaries are *merged* (not averaged) — Theorem 1 bounds the
+    rank error of the returned threshold by ``2/T`` of the total count, which
+    is what makes quantile clipping and top-ρ compression principled instead
+    of heuristic.  Cost: one tiny all-gather per leaf, no global sort.
+    """
+    per_leaf = tree_summaries(
+        grads, T, mesh=mesh, axis_names=axis_names, magnitude=True
+    )
+    hs = list(per_leaf.values())
+    T_max = max(h.sizes.shape[-1] for h in hs)
+    bs, ss = [], []
+    for h in hs:
+        pad = T_max - h.sizes.shape[-1]
+        bs.append(
+            jnp.concatenate([h.boundaries, jnp.repeat(h.boundaries[-1:], pad)])
+        )
+        ss.append(jnp.concatenate([h.sizes, jnp.zeros((pad,), h.sizes.dtype)]))
+    merged = merge(Histogram(jnp.stack(bs), jnp.stack(ss)), T_max)
+    return quantile(merged, jnp.float32(q))
+
+
+@dataclass
+class StragglerDetector:
+    """Flags hosts whose step time exceeds the merged-histogram median ×
+    tolerance.
+
+    Each host ingests its own recent step times (a "partition" in paper
+    terms); ``flag()`` merges all host summaries (the paper's Merger over
+    per-host summaries) and returns hosts whose recent mean exceeds
+    ``tolerance ×`` the merged ``quantile_q`` step time.  The reference
+    quantile defaults to the *median*: a straggling host carries 1/k of the
+    merged mass, so any quantile above ``1 - 1/k`` would be set by the
+    straggler itself and mask it.  The trainer reports flags each log
+    interval (and a deployment would shrink the host's data share).
+    """
+
+    window: int = 64
+    T: int = 64
+    quantile_q: float = 0.5
+    tolerance: float = 1.5
+    _times: dict[int, list[float]] = field(default_factory=dict)
+
+    def record(self, host_id: int, step_seconds: float) -> None:
+        buf = self._times.setdefault(int(host_id), [])
+        buf.append(float(step_seconds))
+        if len(buf) > self.window:
+            del buf[: len(buf) - self.window]
+
+    def flag(self) -> tuple[list[int], float]:
+        """Returns (straggler host ids, global q-quantile step time)."""
+        hosts = [h for h, b in self._times.items() if len(b) >= 4]
+        if len(hosts) < 2:
+            return [], float("nan")
+        hs = []
+        for h in hosts:
+            v = jnp.asarray(np.asarray(self._times[h], dtype=np.float32))
+            hs.append(build_exact(v, min(self.T, v.shape[0])))
+        T_max = max(h.sizes.shape[-1] for h in hs)
+        bs, ss = [], []
+        for h in hs:
+            pad = T_max - h.sizes.shape[-1]
+            bs.append(
+                jnp.concatenate(
+                    [h.boundaries, jnp.repeat(h.boundaries[-1:], pad)]
+                )
+            )
+            ss.append(
+                jnp.concatenate([h.sizes, jnp.zeros((pad,), h.sizes.dtype)])
+            )
+        merged = merge(Histogram(jnp.stack(bs), jnp.stack(ss)), T_max)
+        cut = float(quantile(merged, jnp.float32(self.quantile_q)))
+        flagged = [
+            h
+            for h in hosts
+            if float(np.mean(self._times[h][-8:])) > self.tolerance * cut
+        ]
+        return flagged, cut
+
+
+@dataclass
+class TelemetryLog:
+    """Host-side ring of per-step scalar statistics + histogram snapshots."""
+
+    capacity: int = 1024
+    scalars: dict[str, list[tuple[int, float]]] = field(default_factory=dict)
+    snapshots: dict[str, dict[str, np.ndarray]] = field(default_factory=dict)
+
+    def log_scalar(self, name: str, step: int, value: float) -> None:
+        buf = self.scalars.setdefault(name, [])
+        buf.append((int(step), float(value)))
+        if len(buf) > self.capacity:
+            del buf[: len(buf) - self.capacity]
+
+    def log_histogram(self, name: str, step: int, hist: Histogram) -> None:
+        self.snapshots[f"{name}@{step}"] = {
+            "boundaries": np.asarray(hist.boundaries),
+            "sizes": np.asarray(hist.sizes),
+        }
+
+    def last(self, name: str) -> float:
+        return self.scalars[name][-1][1]
+
+
+def timed(fn: Callable) -> Callable:
+    """Decorator: returns (result, wall_seconds); feeds StragglerDetector."""
+
+    def wrapper(*a, **k):
+        t0 = time.perf_counter()
+        out = fn(*a, **k)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    return wrapper

@@ -1,0 +1,97 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``summarize_pallas`` is the full TPU Summarizer pipeline: bitonic-sort VMEM
+tiles → per-tile exact histograms → merge (optionally via the fused merge
+kernel).  On CPU the kernels run under ``interpret=True`` (Python-level
+execution of the kernel body); on TPU set ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.histogram import Histogram, merge
+from repro.kernels.bucket_count import cumulative_counts_pallas
+from repro.kernels.merge_cut import merge_pallas
+from repro.kernels.ref import bucket_sizes_from_cumulative
+from repro.kernels.tile_sort import sort_tiles_pallas
+
+__all__ = [
+    "bucket_sizes_pallas",
+    "summarize_pallas",
+    "merge_histograms_pallas",
+]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def bucket_sizes_pallas(
+    x: jax.Array,
+    boundaries: jax.Array,
+    *,
+    block_rows: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """True per-bucket counts of ``x`` under ``boundaries`` (validation op)."""
+    cum = cumulative_counts_pallas(
+        x, boundaries, block_rows=block_rows, interpret=interpret
+    )
+    return bucket_sizes_from_cumulative(cum)
+
+
+def _tile_histograms(sorted_tiles: jax.Array, T: int) -> Histogram:
+    """Exact T-bucket histograms of each (already sorted) tile row."""
+    tiles, tile_len = sorted_tiles.shape
+    cuts = jnp.floor(
+        jnp.arange(T + 1, dtype=jnp.float32) * tile_len / T
+    ).astype(jnp.int32)
+    boundaries = sorted_tiles[:, jnp.minimum(cuts, tile_len - 1)]
+    sizes = jnp.broadcast_to(
+        jnp.diff(cuts).astype(jnp.float32)[None, :], (tiles, T)
+    )
+    return Histogram(boundaries=boundaries, sizes=sizes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_len", "T_tile", "T_out", "interpret", "fused_merge")
+)
+def summarize_pallas(
+    x: jax.Array,
+    *,
+    tile_len: int = 4096,
+    T_tile: int = 256,
+    T_out: int = 1024,
+    interpret: bool = True,
+    fused_merge: bool = True,
+) -> Histogram:
+    """TPU Summarizer: tile-sort kernel + paper-merge of the tile summaries.
+
+    Error vs. a fully exact histogram is bounded by the hierarchy composition
+    (DESIGN.md §5): ``< 2n/T_tile`` from the tile level (the T_out-level
+    output is itself a merge product).  Input length must be a multiple of
+    ``tile_len`` (the wrapper in core/distributed handles tails).
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    assert n % tile_len == 0, "pad/trim to a whole number of tiles"
+    xt = flat.reshape(n // tile_len, tile_len)
+    sorted_tiles = sort_tiles_pallas(xt, interpret=interpret)
+    tiles_h = _tile_histograms(sorted_tiles, T_tile)
+    if fused_merge:
+        b, s = merge_pallas(
+            tiles_h.boundaries, tiles_h.sizes, T_out, interpret=interpret
+        )
+        return Histogram(boundaries=b, sizes=s)
+    return merge(tiles_h, T_out)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def merge_histograms_pallas(
+    stacked: Histogram, beta: int, *, interpret: bool = True
+) -> Histogram:
+    """Fused Merger kernel over stacked summaries (k, T+1)/(k, T)."""
+    b, s = merge_pallas(
+        stacked.boundaries, stacked.sizes, beta, interpret=interpret
+    )
+    return Histogram(boundaries=b, sizes=s)

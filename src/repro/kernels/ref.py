@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(shape/dtype sweeps + assert_allclose in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.histogram import Histogram, merge
+
+__all__ = [
+    "cumulative_counts_ref",
+    "bucket_sizes_from_cumulative",
+    "sort_tiles_ref",
+    "sort_kv_ref",
+    "merge_ref",
+]
+
+
+def cumulative_counts_ref(x: jax.Array, boundaries: jax.Array) -> jax.Array:
+    """Oracle for bucket_count: (T+2,) = [#(x < b_j) for j] + [#(x == b_T)]."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    b = boundaries.astype(jnp.float32)
+    lt = (flat[:, None] < b[None, :]).astype(jnp.float32).sum(axis=0)
+    eq = (flat == b[-1]).astype(jnp.float32).sum()
+    return jnp.concatenate([lt, eq[None]])
+
+
+def bucket_sizes_from_cumulative(cum: jax.Array) -> jax.Array:
+    """Per-bucket sizes from the kernel/oracle output.
+
+    Bucket i (i < T-1) holds ``[b_i, b_{i+1})``; the last bucket is
+    right-closed (paper convention), so it additionally gets ``#(x == b_T)``.
+    """
+    lt, eq_last = cum[:-1], cum[-1]
+    sizes = lt[1:] - lt[:-1]
+    return sizes.at[-1].add(eq_last)
+
+
+def sort_tiles_ref(xt: jax.Array) -> jax.Array:
+    """Oracle for tile_sort: row-wise jnp.sort."""
+    return jnp.sort(xt, axis=-1)
+
+
+def sort_kv_ref(keys: jax.Array, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for key-value tile sort (stable on keys)."""
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return (
+        jnp.take_along_axis(keys, order, axis=-1),
+        jnp.take_along_axis(vals, order, axis=-1),
+    )
+
+
+def merge_ref(
+    boundaries: jax.Array, sizes: jax.Array, beta: int
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for merge_cut: the core-library vectorized merge."""
+    h = merge(Histogram(boundaries, sizes), beta)
+    return h.boundaries, h.sizes

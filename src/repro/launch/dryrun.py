@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with zero real allocation:
+  * proof the sharding config is coherent (compile succeeds),
+  * ``memory_analysis()``  — fits-in-HBM evidence,
+  * ``cost_analysis()``    — per-device HLO FLOPs / bytes,
+  * collective-bytes breakdown parsed from the post-SPMD optimized HLO,
+  * the three roofline terms (197 TFLOP/s bf16, 819 GB/s HBM,
+    50 GB/s/link ICI — TPU v5e) + dominant-term classification,
+  * MODEL_FLOPS = 6·N(_active)·D and the useful-compute ratio.
+
+Results go to ``results/dryrun/<arch>__<shape>__<mesh>.json`` (incremental:
+existing cells are skipped unless --force).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    batch_logical_specs,
+    decode_input_specs,
+    prefill_input_specs,
+    train_input_specs,
+)
+from repro.models.model import decode_step, init_cache, init_model, prefill
+from repro.optim import OptimizerConfig
+from repro.sharding import Rules
+from repro.train.train_step import make_train_step
+
+# ---- hardware constants (TPU v5e) -----------------------------------------
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per-chip effective collective bw)
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1, "s1": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<out>\(?[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum output bytes of every collective in the optimized HLO (per device).
+
+    `-done` ops are skipped so async start/done pairs count once.
+    """
+    out: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        out[op] += _shape_bytes(m.group("out"))
+        counts[op] += 1
+    out_cnt = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_cnt}
+
+
+def _model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: per emitted token."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens  # forward only
+    tokens = shape.global_batch  # one token per request
+    return 2.0 * n_active * tokens
+
+
+def build_cell(cfg, shape, mesh, opt_cfg) -> tuple:
+    """Returns (lowered_fn_args..., ) ready to lower: (fn, args, in_sh, out_sh, donate)."""
+    kind = shape.kind
+    rules = Rules(cfg, mesh, kind, seq_len=shape.seq_len)
+    params_abs, pspecs = init_model(cfg, jax.random.PRNGKey(0), abstract=True)
+    p_sh = rules.tree_shardings(pspecs)
+
+    if kind == "train":
+        batch_abs = train_input_specs(cfg, shape)
+        b_sh = rules.tree_shardings(
+            {k: batch_logical_specs(cfg)[k] for k in batch_abs}
+        )
+        from repro.optim.adamw import OptimizerConfig as _OC
+
+        opt_abs = {
+            "m": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    p.shape,
+                    jnp.bfloat16
+                    if cfg.optimizer_dtype == "bfloat16"
+                    else jnp.float32,
+                ),
+                params_abs,
+            ),
+            "v": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(
+                    p.shape,
+                    jnp.bfloat16
+                    if cfg.optimizer_dtype == "bfloat16"
+                    else jnp.float32,
+                ),
+                params_abs,
+            ),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        o_sh = {
+            "m": p_sh,
+            "v": p_sh,
+            "step": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            ),
+        }
+        ocfg = dataclasses.replace(
+            opt_cfg,
+            moment_dtype=cfg.optimizer_dtype,
+            clip_mode="global_norm",
+        )
+        step = make_train_step(cfg, ocfg, rules)
+        return (
+            step,
+            (params_abs, opt_abs, batch_abs),
+            (p_sh, o_sh, b_sh),
+            (p_sh, o_sh, None),
+            (0, 1),
+        )
+
+    if kind == "prefill":
+        batch_abs = prefill_input_specs(cfg, shape)
+        b_sh = rules.tree_shardings(
+            {k: batch_logical_specs(cfg)[k] for k in batch_abs}
+        )
+        cache_abs, cspecs = init_cache(
+            cfg, shape.global_batch, shape.seq_len, abstract=True
+        )
+        c_sh = rules.tree_shardings(cspecs)
+
+        def fn(params, batch, cache):
+            return prefill(cfg, params, batch, cache, rules)
+
+        return (
+            fn,
+            (params_abs, batch_abs, cache_abs),
+            (p_sh, b_sh, c_sh),
+            (None, c_sh),
+            (2,),
+        )
+
+    # decode / decode_long
+    batch_abs = decode_input_specs(cfg, shape)
+    cache_abs, cspecs = init_cache(
+        cfg, shape.global_batch, shape.seq_len, abstract=True
+    )
+    c_sh = rules.tree_shardings(cspecs)
+    tok_sh = rules.sharding(("act_batch", None))
+    pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def fn(params, cache, token, pos):
+        return decode_step(cfg, params, cache, token, pos, rules)
+
+    return (
+        fn,
+        (params_abs, cache_abs, batch_abs["token"], batch_abs["pos"]),
+        (p_sh, c_sh, tok_sh, pos_sh),
+        (None, c_sh),
+        (1,),
+    )
+
+
+def costing_config(cfg, shape, r: int):
+    """Variant for exact HLO cost accounting.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count (verified experimentally), so the scanned production config would
+    undercount depth by ``repeats``× and every chunked seq loop by its chunk
+    count.  The costing variant (a) fully unrolls the layer scan and (b)
+    collapses chunk loops to a single chunk.  Two compiles (r=1, r=2) give
+    the exact per-superblock marginal cost — scanned layers are identical —
+    and linear extrapolation to the real depth is exact.  Residual
+    undercount: the RWKV per-step recurrence einsums inside its inner scan
+    (~2-4 % of layer FLOPs; noted in EXPERIMENTS.md §Roofline).
+    """
+    seq = shape.seq_len
+    repl = dict(
+        repeats=r,
+        scan_unroll=max(r, 1),
+        attn_q_chunk=seq,
+        loss_chunk=seq,
+        mamba_chunk=seq,
+        rwkv_chunk=seq,
+    )
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = r
+    return dataclasses.replace(cfg, **repl)
+
+
+def _compile_cell(cfg, shape, mesh, opt_cfg):
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh, opt_cfg)
+    with mesh:
+        jitted = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh,
+            donate_argnums=donate,
+        )
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled) -> dict:
+    out = {"flops": 0.0, "bytes": 0.0}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    out["flops"] = float(cost.get("flops", 0.0))
+    out["bytes"] = float(cost.get("bytes accessed", 0.0))
+    out["coll"] = parse_collective_bytes(compiled.as_text())
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        record["status"] = "skip"
+        record["reason"] = reason
+        return record
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = opt_cfg or OptimizerConfig()
+    chips = mesh.devices.size
+
+    # ---- production compile: sharding coherence + memory proof ------------
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh, opt_cfg)
+    record["status"] = "ok"
+    record["compile_s"] = round(time.time() - t0, 1)
+    record["degradations"] = Rules(
+        cfg, mesh, shape.kind, seq_len=shape.seq_len
+    ).degradations()
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        alias = int(getattr(mem, "alias_size_in_bytes", 0))
+        record["memory"]["alias_size_in_bytes"] = alias
+        record["memory"]["peak_bytes_per_device"] = int(
+            record["memory"].get("argument_size_in_bytes", 0)
+            + record["memory"].get("output_size_in_bytes", 0)
+            + record["memory"].get("temp_size_in_bytes", 0)
+            - alias
+        )
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": str(e)}
+    del compiled
+
+    # ---- costing compiles: r=1, r=2 unrolled → exact linear extrapolation -
+    R = cfg.repeats
+    t0 = time.time()
+    c1 = _cost_of(_compile_cell(costing_config(cfg, shape, 1), shape, mesh, opt_cfg))
+    c2 = _cost_of(_compile_cell(costing_config(cfg, shape, 2), shape, mesh, opt_cfg))
+    record["costing_compile_s"] = round(time.time() - t0, 1)
+
+    def extrap(v1, v2):
+        return v1 + (R - 1) * max(v2 - v1, 0.0)
+
+    record["hlo_flops_per_device"] = extrap(c1["flops"], c2["flops"])
+    record["hlo_bytes_per_device"] = extrap(c1["bytes"], c2["bytes"])
+    coll = {
+        k: extrap(c1["coll"].get(k, 0.0), c2["coll"].get(k, 0.0))
+        for k in set(c1["coll"]) | set(c2["coll"])
+    }
+    record["collectives"] = coll
+    record["costing_raw"] = {"r1": c1, "r2": c2}
+    coll_bytes = sum(coll.get(c, 0.0) for c in COLLECTIVES)
+
+    model_flops = _model_flops(cfg, shape)
+    record["model_flops_total"] = model_flops
+    record["model_flops_per_device"] = model_flops / chips
+
+    t_compute = record["hlo_flops_per_device"] / PEAK_FLOPS
+    t_memory = record["hlo_bytes_per_device"] / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    record["terms"] = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+    }
+    dominant = max(record["terms"], key=record["terms"].get)
+    record["dominant"] = dominant
+    bound = max(t_compute, t_memory, t_coll)
+    record["roofline_step_s"] = bound
+    record["useful_compute_ratio"] = (
+        record["model_flops_per_device"] / record["hlo_flops_per_device"]
+        if record["hlo_flops_per_device"]
+        else 0.0
+    )
+    # model-FLOPs utilization *if* the dominant term were the runtime
+    record["mfu_upper_bound"] = (
+        record["model_flops_per_device"] / (bound * PEAK_FLOPS)
+        if bound
+        else 0.0
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json"
+                )
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {path}")
+                    continue
+                print(f"[dryrun] {arch} × {shape_name} × {mesh_name} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "error", "error": str(e),
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                if status == "ok":
+                    t = rec["terms"]
+                    print(
+                        f"  ok compile={rec['compile_s']}s "
+                        f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                        f"terms(c/m/x)={t['compute_s']:.4f}/{t['memory_s']:.4f}/"
+                        f"{t['collective_s']:.4f}s dominant={rec['dominant']} "
+                        f"mfu_ub={rec['mfu_upper_bound']:.3f}",
+                        flush=True,
+                    )
+                else:
+                    print(f"  {status}: {rec.get('reason') or rec.get('error','')[:500]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

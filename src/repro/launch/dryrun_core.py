@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks device count at first init.
+
+"""Dry-run of the paper's technique itself on the production mesh.
+
+Three ways to answer "β-bucket equi-depth histogram of N values sharded
+over the pod" — lowered, compiled, and cost-analyzed like the LM cells:
+
+  exact_global   — jnp.sort over the whole sharded array then cut
+                   (the pre-paper baseline: a distributed sort ⇒ the
+                   MapReduce shuffle, reborn as all-to-all traffic)
+  merge          — the paper: per-device exact T-bucket summary,
+                   all-gather of k·(2T+1) scalars, replicated merge
+  hierarchical   — tile → device → pod with composed bounds (DESIGN.md §5)
+
+Writes results/dryrun/core__<variant>__<mesh>.json in the same record
+format so the roofline report picks them up.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import (
+    distributed_histogram,
+    distributed_histogram_hierarchical,
+)
+from repro.core.histogram import build_exact
+from repro.launch.dryrun import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    COLLECTIVES,
+    parse_collective_bytes,
+)
+from repro.launch.mesh import make_production_mesh
+
+
+def make_fn(variant: str, mesh, N: int, T: int, beta: int):
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "pod")
+
+    if variant == "exact_global":
+        def fn(x):
+            return build_exact(x, beta)
+    elif variant == "merge":
+        def fn(x):
+            return distributed_histogram(x, T, beta, mesh, axis_names=axes)
+    elif variant == "hierarchical":
+        def fn(x):
+            return distributed_histogram_hierarchical(
+                x, mesh,
+                tile_size=8192, T_tile=2048, T_device=T, T_pod=T, beta=beta,
+                data_axes=data_axes,
+                pod_axis="pod" if "pod" in axes else None,
+            )
+    else:
+        raise ValueError(variant)
+    return fn, NamedSharding(mesh, P(axes))
+
+
+def run(variant: str, multi_pod: bool, N: int, T: int, beta: int) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    fn, in_sh = make_fn(variant, mesh, N, T, beta)
+    x = jax.ShapeDtypeStruct((N,), jnp.float32)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=(in_sh,)).lower(x).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = parse_collective_bytes(compiled.as_text())
+    coll_bytes = sum(coll.get(c, 0.0) for c in COLLECTIVES)
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": f"core-{variant}", "shape": f"N{N>>20}M_T{T}_b{beta}",
+        "mesh": mesh_name, "kind": "core", "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "collectives": coll,
+        "terms": terms,
+        "dominant": max(terms, key=terms.get),
+        "roofline_step_s": max(terms.values()),
+        "memory": {
+            "peak_bytes_per_device": int(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+            )
+        },
+        "useful_compute_ratio": float("nan"),
+        "model_flops_per_device": 0.0,
+        "mfu_upper_bound": 0.0,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 30)  # 1 Gi values
+    ap.add_argument("--t", type=int, default=40 * 254)  # paper's T ≥ 40β
+    ap.add_argument("--beta", type=int, default=254)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for variant in ("exact_global", "merge", "hierarchical"):
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            try:
+                rec = run(variant, mp, args.n, args.t, args.beta)
+            except Exception as e:
+                rec = {"arch": f"core-{variant}", "shape": "core",
+                       "mesh": mesh_name, "kind": "core",
+                       "status": "error", "error": str(e)[:2000]}
+            path = os.path.join(args.out, f"core__{variant}__{mesh_name}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                t = rec["terms"]
+                print(f"{variant:14s} {mesh_name}: compile={rec['compile_s']}s "
+                      f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                      f"c/m/x={t['compute_s']:.4f}/{t['memory_s']:.4f}/"
+                      f"{t['collective_s']:.4f}s dominant={rec['dominant']}",
+                      flush=True)
+            else:
+                print(f"{variant:14s} {mesh_name}: ERROR {rec['error'][:300]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving launcher: batched generation with a reduced config on CPU."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke as smoke_cfg
+from repro.models.model import init_model
+from repro.serve import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_cfg(cfg)
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg, params,
+        ServeConfig(
+            max_seq=args.prompt_len + args.max_new_tokens + 1,
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(2, cfg.vocab_size, size=rng.integers(4, args.prompt_len + 1)).astype(np.int32)
+        for _ in range(args.batch)
+    ]
+    outs = eng.generate(prompts)
+    for i, o in enumerate(outs):
+        print(f"req{i}: prompt_len={len(prompts[i])} output={o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run contract.
+Modality frontends are stubs per the assignment: whisper receives
+precomputed frame embeddings, pixtral precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    specs = {
+        "tokens": SDS((B, s_text), jnp.int32),
+        "targets": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = SDS(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_logical_specs(cfg: ModelConfig) -> dict:
+    """Logical sharding for each batch entry (train/prefill)."""
+    specs = {
+        "tokens": ("act_batch", None),
+        "targets": ("act_batch", None),
+        "mask": ("act_batch", None),
+    }
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = ("act_batch", None, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = ("act_batch", None, None)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Prompt batch for the prefill step (no targets)."""
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    specs = {"tokens": SDS((B, s_text), jnp.int32)}
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = SDS(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "token": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }

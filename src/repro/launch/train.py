@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m ...``
+
+On this CPU container it runs reduced configs end-to-end (the full configs
+are exercised by dryrun.py); on a real TPU slice the same entry point runs
+the production mesh — the only difference is --mesh/--smoke flags.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke as smoke_cfg
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import CompressionConfig, OptimizerConfig
+from repro.sharding import Rules
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--clip-mode", default="global_norm",
+                    choices=["none", "global_norm", "quantile"])
+    ap.add_argument("--compress-rho", type=float, default=0.0,
+                    help=">0 enables histogram-threshold grad compression")
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_cfg(cfg)
+    mesh = {
+        "host": make_host_mesh,
+        "single": lambda: make_production_mesh(multi_pod=False),
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+    rules = Rules(cfg, mesh, "train", seq_len=args.seq_len)
+    opt_cfg = OptimizerConfig(
+        peak_lr=args.lr, clip_mode=args.clip_mode,
+        decay_steps=max(args.steps, 10),
+        warmup_steps=min(20, args.steps // 5 + 1),
+    )
+    comp = (
+        CompressionConfig(enabled=True, rho=args.compress_rho)
+        if args.compress_rho > 0
+        else None
+    )
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        log_every=args.log_every,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        seed=args.seed,
+        resume=not args.no_resume,
+    )
+    with mesh:
+        trainer = Trainer(
+            cfg, opt_cfg, tcfg,
+            seq_len=args.seq_len, global_batch=args.global_batch,
+            mesh=mesh, rules=rules, comp_cfg=comp,
+        )
+        trainer.install_signal_handler()
+        trainer.run()
+
+
+if __name__ == "__main__":
+    main()

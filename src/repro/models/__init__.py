@@ -1,0 +1,14 @@
+"""Model zoo: pattern-assembled transformers/SSMs for the assigned archs."""
+from repro.models.model import (
+    init_model,
+    loss_fn,
+    forward_hidden,
+    init_cache,
+    prefill,
+    decode_step,
+)
+
+__all__ = [
+    "init_model", "loss_fn", "forward_hidden",
+    "init_cache", "prefill", "decode_step",
+]

@@ -1,0 +1,189 @@
+"""Grouped-query attention with the assigned archs' variants.
+
+Covers: GQA/MQA/MHA (kv groups), RoPE, qk-norm (qwen3), tanh logit
+softcapping (gemma-2), sliding-window local layers (gemma-2 local/global
+alternation), cross-attention (whisper decoder), and single-token decode
+against a sharded KV cache.
+
+Weights are stored head-major — ``(d, H, hd)`` — so the logical "heads"
+axis shards over the TP mesh axis whenever divisible and falls back to
+replication otherwise (smollm's 9 heads; every kv=8 arch on a 16-way TP
+axis keeps KV replicated and relies on sequence-sharding of the KV *cache*
+for memory — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Init,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    rms_norm,
+)
+
+
+def init_attention(cfg, rng: Init) -> tuple[Any, Any]:
+    d, Hq, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    params = {
+        "wq": rng.dense((d, Hq, hd)),
+        "wk": rng.dense((d, Hkv, hd)),
+        "wv": rng.dense((d, Hkv, hd)),
+        "wo": rng.dense((Hq, hd, d), fan_in=Hq * hd),
+    }
+    specs = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = rng.zeros((hd,))
+        params["k_norm"] = rng.zeros((hd,))
+        specs["q_norm"] = (None,)
+        specs["k_norm"] = (None,)
+    return params, specs
+
+
+def _project_qkv(cfg, p, x, positions, *, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(
+    cfg,
+    p,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (S,)
+    *,
+    kind: str = "global",  # "global" | "local"
+    causal: bool = True,
+    rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    B, S, d = x.shape
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _project_qkv(cfg, p, x, positions, rope=rope)
+    q = q.reshape(B, S, Hkv, G, cfg.head_dim)
+    window = cfg.sliding_window if kind == "local" else None
+    out = chunked_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        logit_cap=cfg.attn_softcap,
+        q_chunk=cfg.attn_q_chunk,
+    )
+    out = out.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def apply_cross_attention(
+    cfg,
+    p,
+    x: jax.Array,  # (B, S, d) decoder stream
+    enc_kv: tuple[jax.Array, jax.Array] | None,
+    enc_states: jax.Array | None = None,
+) -> jax.Array:
+    """Whisper-style cross-attention: KV from encoder states (no RoPE)."""
+    B, S, d = x.shape
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if enc_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", enc_states, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_states, p["wv"].astype(dt))
+    else:
+        k, v = enc_kv
+    q = q.reshape(B, S, Hkv, G, cfg.head_dim)
+    out = chunked_attention(
+        q, k, v, causal=False, q_chunk=cfg.attn_q_chunk
+    )
+    out = out.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def encode_cross_kv(cfg, p, enc_states: jax.Array):
+    """Precompute cross-attention KV once per request (prefill-time)."""
+    dt = enc_states.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_states, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_states, p["wv"].astype(dt))
+    return k, v
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    specs = {
+        "k": ("batch_kv", "kv_seq", "kv_heads_cache", None),
+        "v": ("batch_kv", "kv_seq", "kv_heads_cache", None),
+    }
+    return cache, specs
+
+
+def prefill_attention(
+    cfg, p, x, positions, cache, *, kind: str = "global"
+):
+    """Full-sequence attention that also fills the KV cache [0, S)."""
+    B, S, d = x.shape
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _project_qkv(cfg, p, x, positions, rope=cfg.use_rope)
+    qg = q.reshape(B, S, Hkv, G, cfg.head_dim)
+    window = cfg.sliding_window if kind == "local" else None
+    out = chunked_attention(
+        qg, k, v, causal=True, window=window,
+        logit_cap=cfg.attn_softcap, q_chunk=cfg.attn_q_chunk,
+    ).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+        ),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+        ),
+    }
+    return y, new_cache
+
+
+def decode_attention_step(
+    cfg,
+    p,
+    x: jax.Array,  # (B, 1, d)
+    position: jax.Array,  # scalar: index of the query token
+    cache: dict,
+    *,
+    kind: str = "global",
+):
+    """One-token decode: project, write cache at `position`, attend."""
+    B = x.shape[0]
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _project_qkv(cfg, p, x, position[None], rope=cfg.use_rope)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, position, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, position, 0, 0)
+    )
+    qg = q.reshape(B, 1, Hkv, G, cfg.head_dim)
+    window = cfg.sliding_window if kind == "local" else None
+    out = decode_attention(
+        qg, k_cache, v_cache, position,
+        window=window, logit_cap=cfg.attn_softcap,
+    ).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}

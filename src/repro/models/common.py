@@ -1,0 +1,257 @@
+"""Shared model primitives: params-with-specs, norms, RoPE, chunked ops.
+
+Parameters are plain nested dicts of ``jnp`` arrays.  Every init function
+returns a mirrored tree of *logical sharding specs* — tuples of logical axis
+names (``"embed"``, ``"heads"``, ``"mlp"``, ``"experts"``, ``"vocab"``,
+``"layers"``, ``None``) that ``repro.sharding`` later maps to mesh
+``PartitionSpec`` per (mesh, shape-kind, arch divisibility).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of arrays
+Specs = Any  # mirrored nested dict of logical-axis tuples
+
+
+@dataclasses.dataclass
+class Init:
+    """Sequential PRNG splitter for parameter initialization.
+
+    ``abstract=True`` yields ShapeDtypeStructs instead of arrays — the
+    dry-run path builds 400B-parameter trees without allocating a byte.
+    """
+
+    key: jax.Array
+    abstract: bool = False
+
+    def take(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, scale, dtype=jnp.float32):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return (
+            jax.random.normal(self.take(), shape, dtype=jnp.float32) * scale
+        ).astype(dtype)
+
+    def dense(self, shape, *, fan_in=None, dtype=jnp.float32):
+        fan_in = fan_in if fan_in is not None else shape[0]
+        return self.normal(shape, 1.0 / np.sqrt(fan_in), dtype)
+
+    def zeros(self, shape, dtype=jnp.float32):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape, dtype=jnp.float32):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.ones(shape, dtype)
+
+    def const(self, fn, shape, dtype=jnp.float32):
+        """Materialize ``fn()`` normally; a struct when abstract."""
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return fn().astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax attention core (pure-JAX flash-style; bounds the memory
+# roofline term: logits only ever materialize one (q_chunk × S) block)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hkv, G, hd)
+    k: jax.Array,  # (B, Skv, Hkv, hd)
+    v: jax.Array,  # (B, Skv, Hkv, hd)
+    *,
+    causal: bool,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_chunk: int = 512,
+    kv_positions: jax.Array | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Grouped-query attention, scanned over query chunks.
+
+    Returns ``(B, Sq, Hkv, G, hd)``.  ``window`` masks keys more than
+    ``window`` positions behind the query (sliding-window local attention);
+    ``logit_cap`` is gemma-2 tanh softcapping.
+    """
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd**-0.5
+    q_chunk = min(q_chunk, Sq)
+    Sq_orig = Sq
+    pad = (-Sq) % q_chunk
+    if pad:  # non-divisible query lengths (whisper's 1500 frames): pad+slice
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        Sq = Sq + pad
+    n_chunks = Sq // q_chunk
+    kv_pos = (
+        kv_positions
+        if kv_positions is not None
+        else jnp.arange(Skv, dtype=jnp.int32)
+    )
+
+    qc = q.reshape(B, n_chunks, q_chunk, Hkv, G, hd)
+    qc = jnp.moveaxis(qc, 1, 0)  # (n_chunks, B, C, Hkv, G, hd)
+
+    def one_chunk(args):
+        qi, chunk_idx = args
+        logits = jnp.einsum(
+            "bckgh,bskh->bkgcs", qi.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        logits = softcap(logits, logit_cap)
+        q_pos = q_offset + chunk_idx * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, Skv), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgcs,bskh->bckgh", probs, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(
+        one_chunk, (qc, jnp.arange(n_chunks, dtype=jnp.int32))
+    )  # (n_chunks, B, C, Hkv, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, G, hd)
+    return out[:, :Sq_orig]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hkv, G, hd)
+    k_cache: jax.Array,  # (B, Smax, Hkv, hd)
+    v_cache: jax.Array,
+    position: jax.Array,  # scalar int — index of the token being produced
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache."""
+    Smax = k_cache.shape[1]
+    hd = q.shape[-1]
+    scale = hd**-0.5
+    logits = jnp.einsum(
+        "bokgh,bskh->bkgos", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    logits = softcap(logits, logit_cap)
+    kv_pos = jnp.arange(Smax, dtype=jnp.int32)
+    mask = kv_pos <= position
+    if window is not None:
+        mask &= kv_pos > position - window
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgos,bskh->bokgh", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (avoids materializing (B, S, V) logits at once)
+# ---------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,  # (B, S, d) final hidden states
+    unemb: jax.Array,  # (V, d) unembedding
+    targets: jax.Array,  # (B, S) int32
+    mask: jax.Array,  # (B, S) {0,1}
+    *,
+    s_chunk: int = 512,
+    final_cap: float | None = None,
+) -> jax.Array:
+    """Mean CE loss, scanned over sequence chunks of the logit computation."""
+    B, S, d = hidden.shape
+    s_chunk = min(s_chunk, S)
+    n = S // s_chunk
+    assert S % s_chunk == 0
+    hc = jnp.moveaxis(hidden.reshape(B, n, s_chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, n, s_chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, n, s_chunk), 1, 0)
+
+    def one(args):
+        h, t, m = args
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h.astype(jnp.float32), unemb.astype(jnp.float32)
+        )
+        logits = softcap(logits, final_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return jnp.sum(nll), jnp.sum(m)
+
+    losses, counts = jax.lax.map(one, (hc, tc, mc))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, dtype=jnp.float32)

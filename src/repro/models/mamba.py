@@ -1,0 +1,209 @@
+"""Mamba (S6) mixer for the Jamba hybrid — chunked parallel scan.
+
+TPU adaptation: the CUDA selective-scan kernel's job is to avoid
+materializing the ``(B, S, d_inner, d_state)`` decay tensor in HBM.  We get
+the same effect structurally: an outer ``lax.scan`` over sequence chunks
+(carrying the ``(B, d_inner, d_state)`` state) with an *associative* scan
+inside each chunk, so only ``(B, chunk, d_inner, d_state)`` exists
+transiently — sized to stay VMEM/HBM-friendly via ``cfg.mamba_chunk`` —
+while keeping ``O(log chunk)`` depth within a chunk.
+
+Recurrence: ``h_t = a_t ⊙ h_{t-1} + b_t`` with ``a_t = exp(Δ_t A)``,
+``b_t = Δ_t B_t x_t``; combine((a₁,b₁),(a₂,b₂)) = (a₁a₂, a₂b₁ + b₂).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init
+
+
+def init_mamba(cfg, rng: Init):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    K = cfg.mamba_d_conv
+    dt_rank = max(d // 16, 1)
+    params = {
+        "wx": rng.dense((d, d_in)),
+        "wz": rng.dense((d, d_in)),
+        "conv_w": rng.dense((d_in, K), fan_in=K),
+        "conv_b": rng.zeros((d_in,)),
+        "w_dbc": rng.dense((d_in, dt_rank + 2 * n)),
+        "w_dt": rng.dense((dt_rank, d_in)),
+        "dt_bias": rng.normal((d_in,), 0.1),
+        "A_log": rng.const(
+            lambda: jnp.log(
+                jnp.broadcast_to(
+                    jnp.arange(1, n + 1, dtype=jnp.float32)[None, :],
+                    (d_in, n),
+                )
+            ),
+            (d_in, n),
+        ),
+        "D": rng.ones((d_in,)),
+        "w_out": rng.dense((d_in, d), fan_in=d_in),
+    }
+    specs = {
+        "wx": ("embed", "mamba_inner"),
+        "wz": ("embed", "mamba_inner"),
+        "conv_w": ("mamba_inner", None),
+        "conv_b": ("mamba_inner",),
+        "w_dbc": ("mamba_inner", None),
+        "w_dt": (None, "mamba_inner"),
+        "dt_bias": ("mamba_inner",),
+        "A_log": ("mamba_inner", None),
+        "D": ("mamba_inner",),
+        "w_out": ("mamba_inner", "embed"),
+    }
+    return params, specs
+
+
+def _split_dbc(cfg, dbc):
+    d = cfg.d_model
+    dt_rank = max(d // 16, 1)
+    n = cfg.mamba_d_state
+    return (
+        dbc[..., :dt_rank],
+        dbc[..., dt_rank : dt_rank + n],
+        dbc[..., dt_rank + n :],
+    )
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, d_in); w: (d_in, K) — causal depthwise conv."""
+    B, S, d_in = x.shape
+    K = w.shape[-1]
+    xt = jnp.moveaxis(x, 1, 2)  # (B, d_in, S)
+    out = jax.lax.conv_general_dilated(
+        xt,
+        w[:, None, :],  # (d_in, 1, K)
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        feature_group_count=d_in,
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    return jnp.moveaxis(out, 1, 2) + b
+
+
+def _ssm_inputs(cfg, p, x1, dt_chunkable=True):
+    """Common Δ/B/C/A computation. x1: (..., d_in) post-conv activations."""
+    dt_x, Bc, Cc = _split_dbc(cfg, jnp.einsum(
+        "...i,ij->...j", x1, p["w_dbc"].astype(x1.dtype)
+    ))
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_x, p["w_dt"].astype(x1.dtype)).astype(
+            jnp.float32
+        )
+        + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])  # (d_in, n) fp32
+    return dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32), A
+
+
+def apply_mamba(
+    cfg, p, x: jax.Array, h0: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, final_state).  S must divide by mamba_chunk."""
+    B, S, d = x.shape
+    d_in = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dt_ = x.dtype
+    c = min(cfg.mamba_chunk, S)
+    n_full = S // c
+    rem = S - n_full * c
+
+    x1 = jnp.einsum("bsd,di->bsi", x, p["wx"].astype(dt_))
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"].astype(dt_))
+    x1 = jax.nn.silu(_causal_depthwise_conv(x1, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_in, n), jnp.float32)
+
+    # §Perf P6: the (B,c,d_in,n) decay/scan tensors dominate jamba's memory
+    # traffic; exponentials/products stay fp32-computed but can be *stored*
+    # and scanned in bf16 (carry h and the final state remain fp32).
+    scan_dt = (
+        jnp.bfloat16 if cfg.mamba_scan_dtype == "bfloat16" else jnp.float32
+    )
+
+    def chunk(h, x1_c):
+        dt, Bc, Cc, A = _ssm_inputs(cfg, p, x1_c)  # dt (B,c,d_in)
+        da = jnp.exp(dt[..., None] * A).astype(scan_dt)  # (B,c,d_in,n)
+        db = (
+            dt[..., None] * Bc[:, :, None, :]
+            * x1_c.astype(jnp.float32)[..., None]
+        ).astype(scan_dt)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        cum_a, cum_b = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h_all = (
+            cum_a.astype(jnp.float32) * h[:, None]
+            + cum_b.astype(jnp.float32)
+        )  # (B,c,d_in,n) fp32
+        y = jnp.einsum("bcin,bcn->bci", h_all, Cc) + p["D"] * x1_c.astype(
+            jnp.float32
+        )
+        return h_all[:, -1], y.astype(dt_)
+
+    if cfg.remat_policy != "none":
+        # Inner remat: without it, a rematerialized *layer* backward holds
+        # every chunk's (B, c, d_in, n) fp32 decay/scan intermediates alive
+        # at once (jamba train_4k: 253 GB/dev temp).  Recomputing per chunk
+        # bounds the live set to one chunk — §Perf iteration 3.
+        chunk = jax.checkpoint(chunk)
+
+    ys = []
+    h_final = h0
+    if n_full:
+        x1c = jnp.moveaxis(
+            x1[:, : n_full * c].reshape(B, n_full, c, d_in), 1, 0
+        )
+        h_final, yc = jax.lax.scan(chunk, h0, x1c)
+        ys.append(jnp.moveaxis(yc, 0, 1).reshape(B, n_full * c, d_in))
+    if rem:  # non-divisible tail (e.g. prefill of S+1 tokens)
+        h_final, y_tail = chunk(h_final, x1[:, -rem:])
+        ys.append(y_tail)
+    y = jnp.concatenate(ys, axis=1)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(dt_)), h_final
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_in = cfg.mamba_expand * cfg.d_model
+    cache = {
+        "h": jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+    }
+    specs = {
+        "h": ("batch_kv", "mamba_inner", None),
+        "conv": ("batch_kv", None, "mamba_inner"),
+    }
+    return cache, specs
+
+
+def decode_mamba_step(cfg, p, x: jax.Array, cache: dict):
+    """x: (B, 1, d) → (y, new_cache). O(1) state update — no KV growth."""
+    B = x.shape[0]
+    dt_ = x.dtype
+    x1 = jnp.einsum("bsd,di->bsi", x, p["wx"].astype(dt_))[:, 0]
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"].astype(dt_))[:, 0]
+    window = jnp.concatenate([cache["conv"], x1[:, None].astype(cache["conv"].dtype)], axis=1)
+    conv_out = (
+        jnp.einsum("bki,ik->bi", window.astype(dt_), p["conv_w"].astype(dt_))
+        + p["conv_b"].astype(dt_)
+    )
+    x1 = jax.nn.silu(conv_out)
+    dt, Bc, Cc, A = _ssm_inputs(cfg, p, x1)
+    da = jnp.exp(dt[..., None] * A)  # (B, d_in, n)
+    db = dt[..., None] * Bc[:, None, :] * x1.astype(jnp.float32)[..., None]
+    h = da * cache["h"] + db
+    y = jnp.einsum("bin,bn->bi", h, Cc) + p["D"] * x1.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"].astype(dt_))[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,51 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init
+
+
+def init_mlp(cfg, rng: Init, *, gated: bool = True):
+    d, f = cfg.d_model, cfg.d_ff
+    if gated:
+        params = {
+            "w_gate": rng.dense((d, f)),
+            "w_up": rng.dense((d, f)),
+            "w_down": rng.dense((f, d), fan_in=f),
+        }
+        specs = {
+            "w_gate": ("embed", "mlp"),
+            "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed"),
+        }
+    else:
+        params = {
+            "w_up": rng.dense((d, f)),
+            "b_up": rng.zeros((f,)),
+            "w_down": rng.dense((f, d), fan_in=f),
+            "b_down": rng.zeros((d,)),
+        }
+        specs = {
+            "w_up": ("embed", "mlp"),
+            "b_up": ("mlp",),
+            "w_down": ("mlp", "embed"),
+            "b_down": (None,),
+        }
+    return params, specs
+
+
+def apply_mlp(cfg, p, x: jax.Array, *, gated: bool = True) -> jax.Array:
+    dt = x.dtype
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt)) + p["b_up"].astype(dt)
+    h = jax.nn.gelu(h)
+    return (
+        jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+        + p["b_down"].astype(dt)
+    )

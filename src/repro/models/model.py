@@ -1,0 +1,570 @@
+"""Model assembly: pattern-based layer stacks, scanned over repeats.
+
+A model is a repeating ``pattern`` of layer kinds (configs/base.py) whose
+parameters are stacked over ``repeats`` and executed with ``jax.lax.scan``
+— HLO size is depth-independent, which keeps 80 dry-run compiles tractable
+and is how production JAX frameworks (MaxText et al.) structure deep stacks.
+
+Three entry points:
+  * ``loss_fn``      — training forward + chunked CE (+ MoE aux losses)
+  * ``prefill``      — forward that fills the decode caches, returns last logits
+  * ``decode_step``  — one-token step against the caches (KV / SSM state)
+
+``rules`` is a callable mapping logical-axis tuples to ``PartitionSpec``
+(or ``None`` off-mesh); activation sharding constraints are applied at the
+residual-stream boundaries only — XLA SPMD propagates the rest.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.common import (
+    Init,
+    chunked_softmax_xent,
+    layer_norm,
+    rms_norm,
+    sinusoidal_positions,
+    softcap,
+)
+
+Rules = Callable[[tuple], Any] | None
+
+
+def _wsc(x, rules: Rules, logical: tuple):
+    if rules is None:
+        return x
+    spec = rules(logical)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers (rms vs layer-norm per config)
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg, rng: Init):
+    if cfg.norm_type == "layernorm":
+        return {"g": rng.ones((cfg.d_model,)), "b": rng.zeros((cfg.d_model,))}, {
+            "g": (None,), "b": (None,)
+        }
+    return {"g": rng.zeros((cfg.d_model,))}, {"g": (None,)}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["g"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _parse(kind: str) -> list[str]:
+    return kind.split("+")
+
+
+def init_layer(
+    cfg: ModelConfig, kind: str, key, abstract: bool = False
+) -> tuple[Any, Any]:
+    rng = Init(key, abstract=abstract)
+    parts = _parse(kind)
+    params: dict = {}
+    specs: dict = {}
+    if kind == "rwkv":
+        params["ln1"], specs["ln1"] = _init_norm(cfg, rng)
+        params["tm"], specs["tm"] = rwkv_mod.init_rwkv_time_mix(cfg, rng)
+        params["ln2"], specs["ln2"] = _init_norm(cfg, rng)
+        params["cm"], specs["cm"] = rwkv_mod.init_rwkv_channel_mix(cfg, rng)
+        return params, specs
+    mixer = parts[0]
+    params["ln1"], specs["ln1"] = _init_norm(cfg, rng)
+    if mixer in ("attn", "local", "global"):
+        params["mixer"], specs["mixer"] = attn_mod.init_attention(cfg, rng)
+    elif mixer == "mamba":
+        params["mixer"], specs["mixer"] = mamba_mod.init_mamba(cfg, rng)
+    else:
+        raise ValueError(mixer)
+    if "cross" in parts:
+        params["ln_x"], specs["ln_x"] = _init_norm(cfg, rng)
+        params["cross"], specs["cross"] = attn_mod.init_attention(cfg, rng)
+    params["ln2"], specs["ln2"] = _init_norm(cfg, rng)
+    ffn = parts[-1]
+    if ffn == "moe":
+        params["ffn"], specs["ffn"] = moe_mod.init_moe(cfg, rng)
+    else:
+        params["ffn"], specs["ffn"] = mlp_mod.init_mlp(
+            cfg, rng, gated=cfg.norm_type != "layernorm"
+        )
+    return params, specs
+
+
+def apply_layer_train(
+    cfg, kind, p, x, positions, enc_states=None, *, causal=True, rules=None
+):
+    """Pre-norm residual block. Returns (x, aux_losses)."""
+    aux = {"moe_load_balance": 0.0, "moe_router_z": 0.0}
+    if kind == "rwkv":
+        h, _ = rwkv_mod.apply_rwkv_time_mix(cfg, p["tm"], _apply_norm(cfg, p["ln1"], x))
+        x = x + h
+        h, _ = rwkv_mod.apply_rwkv_channel_mix(cfg, p["cm"], _apply_norm(cfg, p["ln2"], x))
+        return x + h, aux
+    parts = _parse(kind)
+    mixer = parts[0]
+    h = _apply_norm(cfg, p["ln1"], x)
+    if mixer == "mamba":
+        h, _ = mamba_mod.apply_mamba(cfg, p["mixer"], h)
+    else:
+        h = attn_mod.apply_attention(
+            cfg, p["mixer"], h, positions,
+            kind="local" if mixer == "local" else "global",
+            causal=causal, rope=cfg.use_rope,
+        )
+    x = x + h
+    if "cross" in parts:
+        h = attn_mod.apply_cross_attention(
+            cfg, p["cross"], _apply_norm(cfg, p["ln_x"], x),
+            enc_kv=None, enc_states=enc_states,
+        )
+        x = x + h
+    h = _apply_norm(cfg, p["ln2"], x)
+    if parts[-1] == "moe":
+        h, moe_aux = moe_mod.apply_moe(cfg, p["ffn"], h, rules)
+        aux["moe_load_balance"] = moe_aux["moe_load_balance"]
+        aux["moe_router_z"] = moe_aux["moe_router_z"]
+    else:
+        h = mlp_mod.apply_mlp(cfg, p["ffn"], h, gated=cfg.norm_type != "layernorm")
+    return x + h, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def _stacked_blocks(cfg, key, pattern, repeats, abstract=False):
+    blocks_p, blocks_s = [], []
+    for i, kind in enumerate(pattern):
+        pos_key = jax.random.fold_in(key, i)
+        if abstract:
+            single, spec = init_layer(cfg, kind, pos_key, abstract=True)
+            stacked = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeats,) + s.shape, s.dtype),
+                single,
+            )
+        else:
+            keys = jax.random.split(pos_key, repeats)
+            stacked = jax.vmap(
+                lambda k, kind=kind: init_layer(cfg, kind, k)[0]
+            )(keys)
+            _, spec = init_layer(cfg, kind, pos_key, abstract=True)
+        spec = jax.tree.map(
+            lambda s: ("layers",) + tuple(s),
+            spec,
+            is_leaf=lambda s: isinstance(s, tuple),
+        )
+        blocks_p.append(stacked)
+        blocks_s.append(spec)
+    return blocks_p, blocks_s
+
+
+def init_model(cfg: ModelConfig, key, abstract: bool = False) -> tuple[Any, Any]:
+    rng = Init(key, abstract=abstract)
+    params: dict = {}
+    specs: dict = {}
+    params["embed"] = rng.normal((cfg.vocab_size, cfg.d_model), 0.02)
+    specs["embed"] = ("vocab", "embed")
+    params["blocks"], specs["blocks"] = _stacked_blocks(
+        cfg, rng.take(), cfg.pattern, cfg.repeats, abstract=abstract
+    )
+    params["final_norm"], specs["final_norm"] = _init_norm(cfg, rng)
+    if not cfg.tie_embeddings:
+        params["unembed"] = rng.normal((cfg.vocab_size, cfg.d_model), 0.02)
+        specs["unembed"] = ("vocab", "embed")
+    if cfg.is_encoder_decoder:
+        enc_p, enc_s = _stacked_blocks(
+            cfg, rng.take(), ("attn+mlp",), cfg.encoder_layers,
+            abstract=abstract,
+        )
+        norm_p, norm_s = _init_norm(cfg, rng)
+        params["encoder"] = {"blocks": enc_p, "final_norm": norm_p}
+        specs["encoder"] = {"blocks": enc_s, "final_norm": norm_s}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train)
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _embed_tokens(cfg, params, tokens):
+    dt = _compute_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dt)
+    return x
+
+
+def _run_encoder(cfg, params, frames, rules: Rules):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    dt = _compute_dtype(cfg)
+    S = frames.shape[1]
+    x = frames.astype(dt) + sinusoidal_positions(S, cfg.d_model).astype(dt)
+    x = _wsc(x, rules, ("act_batch", "enc_seq", None))
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, blk):
+        h = carry
+        step = _remat(cfg, functools.partial(
+            apply_layer_train, cfg, "attn+mlp",
+            positions=positions, causal=False,
+        ))
+        h, _ = step(blk[0], h)
+        h = _wsc(h, rules, ("act_batch", "enc_seq", None))
+        return h, None
+
+    x, _ = jax.lax.scan(
+        body, x, tuple(params["encoder"]["blocks"]),
+        unroll=cfg.scan_unroll,
+    )
+    return _apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def forward_hidden(cfg, params, batch, rules: Rules = None):
+    """Shared train/eval forward → (final hidden (B,S,d), aux dict)."""
+    dt = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), x], axis=1)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_states = None
+    if cfg.is_encoder_decoder:
+        enc_states = _run_encoder(cfg, params, batch["frames"], rules)
+    x = _wsc(x, rules, ("act_batch", "act_seq", None))
+
+    aux0 = {"moe_load_balance": jnp.float32(0), "moe_router_z": jnp.float32(0)}
+
+    def body(carry, blk):
+        h, aux = carry
+        for i, kind in enumerate(cfg.pattern):
+            step = _remat(cfg, functools.partial(
+                apply_layer_train, cfg, kind,
+                positions=positions, enc_states=enc_states, rules=rules,
+            ))
+            h, a = step(blk[i], h)
+            aux = jax.tree.map(lambda t, u: t + u, aux, a)
+        h = _wsc(h, rules, ("act_batch", "act_seq", None))
+        return (h, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, aux0), tuple(params["blocks"]), unroll=cfg.scan_unroll
+    )
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def loss_fn(cfg, params, batch, rules: Rules = None):
+    """Mean CE + MoE aux losses. batch: tokens/targets/mask [+frontend]."""
+    hidden, aux = forward_hidden(cfg, params, batch, rules)
+    unemb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    ce = chunked_softmax_xent(
+        hidden, unemb, batch["targets"], batch["mask"],
+        s_chunk=cfg.loss_chunk, final_cap=cfg.final_softcap,
+    )
+    n_layers = cfg.repeats * max(sum(1 for k in cfg.pattern if "moe" in k), 1)
+    lb = aux["moe_load_balance"] / n_layers
+    zl = aux["moe_router_z"] / n_layers
+    loss = ce + cfg.moe_aux_weight * lb + cfg.moe_z_weight * zl
+    metrics = {"ce": ce, "moe_load_balance": lb, "moe_router_z": zl}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg, kind, batch, max_seq, dtype=jnp.bfloat16):
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+    parts = _parse(kind)
+    cache, specs = {}, {}
+    if parts[0] == "mamba":
+        cache["ssm"], specs["ssm"] = mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    else:
+        cache["kv"], specs["kv"] = attn_mod.init_kv_cache(cfg, batch, max_seq, dtype)
+    if "cross" in parts:
+        shape = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+        cache["cross"] = {
+            "k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)
+        }
+        specs["cross"] = {
+            "k": ("batch_kv", None, "kv_heads_cache", None),
+            "v": ("batch_kv", None, "kv_heads_cache", None),
+        }
+    return cache, specs
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+    abstract: bool = False,
+):
+    """Stacked (repeats, ...) caches per pattern position (+ carries)."""
+    caches, specs = [], []
+    for kind in cfg.pattern:
+        if abstract:
+            c, s = jax.eval_shape(
+                lambda: init_layer_cache(cfg, kind, batch, max_seq, dtype)[0]
+            ), init_layer_cache_specs(cfg, kind)
+            c = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    (cfg.repeats,) + a.shape, a.dtype
+                ),
+                c,
+            )
+        else:
+            c, s = init_layer_cache(cfg, kind, batch, max_seq, dtype)
+            c = jax.tree.map(
+                lambda a: jnp.zeros((cfg.repeats,) + a.shape, a.dtype), c
+            )
+        s = jax.tree.map(
+            lambda t: ("layers",) + tuple(t),
+            s,
+            is_leaf=lambda t: isinstance(t, tuple),
+        )
+        caches.append(c)
+        specs.append(s)
+    return tuple(caches), tuple(specs)
+
+
+def init_layer_cache_specs(cfg, kind):
+    """Cache spec tree without allocating (mirrors init_layer_cache)."""
+    if kind == "rwkv":
+        return {
+            "S": ("batch_kv", "rwkv_heads", None, None),
+            "x_tm": ("batch_kv", None, None),
+            "x_cm": ("batch_kv", None, None),
+        }
+    parts = _parse(kind)
+    specs = {}
+    if parts[0] == "mamba":
+        specs["ssm"] = {
+            "h": ("batch_kv", "mamba_inner", None),
+            "conv": ("batch_kv", None, "mamba_inner"),
+        }
+    else:
+        specs["kv"] = {
+            "k": ("batch_kv", "kv_seq", "kv_heads_cache", None),
+            "v": ("batch_kv", "kv_seq", "kv_heads_cache", None),
+        }
+    if "cross" in parts:
+        specs["cross"] = {
+            "k": ("batch_kv", None, "kv_heads_cache", None),
+            "v": ("batch_kv", None, "kv_heads_cache", None),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache fill, returns last-position logits
+# ---------------------------------------------------------------------------
+
+
+def _layer_prefill(cfg, kind, p, cache, x, positions, enc_states, rules=None):
+    if kind == "rwkv":
+        h, (S_f, x_tm) = rwkv_mod.apply_rwkv_time_mix(
+            cfg, p["tm"], _apply_norm(cfg, p["ln1"], x)
+        )
+        x = x + h
+        h_in = _apply_norm(cfg, p["ln2"], x)
+        h, x_cm = rwkv_mod.apply_rwkv_channel_mix(cfg, p["cm"], h_in)
+        x = x + h
+        new = {"S": S_f, "x_tm": x_tm.astype(cache["x_tm"].dtype),
+               "x_cm": x_cm.astype(cache["x_cm"].dtype)}
+        return x, new
+    parts = _parse(kind)
+    new = dict(cache)
+    h = _apply_norm(cfg, p["ln1"], x)
+    if parts[0] == "mamba":
+        d_in = cfg.mamba_expand * cfg.d_model
+        xp = jnp.einsum("bsd,di->bsi", h, p["mixer"]["wx"].astype(h.dtype))
+        conv_tail = xp[:, -(cfg.mamba_d_conv - 1):]
+        h, h_final = mamba_mod.apply_mamba(cfg, p["mixer"], h)
+        new["ssm"] = {
+            "h": h_final,
+            "conv": conv_tail.astype(cache["ssm"]["conv"].dtype),
+        }
+    else:
+        h, kv = attn_mod.prefill_attention(
+            cfg, p["mixer"], h, positions, cache["kv"],
+            kind="local" if parts[0] == "local" else "global",
+        )
+        new["kv"] = kv
+    x = x + h
+    if "cross" in parts:
+        ck, cv = attn_mod.encode_cross_kv(cfg, p["cross"], enc_states)
+        new["cross"] = {
+            "k": ck.astype(cache["cross"]["k"].dtype),
+            "v": cv.astype(cache["cross"]["v"].dtype),
+        }
+        h = attn_mod.apply_cross_attention(
+            cfg, p["cross"], _apply_norm(cfg, p["ln_x"], x),
+            enc_kv=(ck, cv),
+        )
+        x = x + h
+    h = _apply_norm(cfg, p["ln2"], x)
+    if parts[-1] == "moe":
+        h, _ = moe_mod.apply_moe(cfg, p["ffn"], h, rules)
+    else:
+        h = mlp_mod.apply_mlp(cfg, p["ffn"], h, gated=cfg.norm_type != "layernorm")
+    return x + h, new
+
+
+def prefill(cfg, params, batch, cache, rules: Rules = None):
+    """Process the full prompt, fill caches, return last-token logits."""
+    dt = _compute_dtype(cfg)
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), x], axis=1)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_states = None
+    if cfg.is_encoder_decoder:
+        enc_states = _run_encoder(cfg, params, batch["frames"], rules)
+    x = _wsc(x, rules, ("act_batch", "act_seq", None))
+
+    def body(carry, xs):
+        h = carry
+        blk, cache_blk = xs
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            h, nc = _layer_prefill(
+                cfg, kind, blk[i], cache_blk[i], h, positions, enc_states,
+                rules,
+            )
+            new_caches.append(nc)
+        h = _wsc(h, rules, ("act_batch", "act_seq", None))
+        return h, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (tuple(params["blocks"]), tuple(cache)),
+        unroll=cfg.scan_unroll,
+    )
+    x = _apply_norm(cfg, params["final_norm"], x[:, -1:])
+    unemb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), unemb.astype(jnp.float32)
+    )
+    return softcap(logits, cfg.final_softcap), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token
+# ---------------------------------------------------------------------------
+
+
+def _layer_decode(cfg, kind, p, cache, x, pos, rules=None):
+    if kind == "rwkv":
+        h_in = _apply_norm(cfg, p["ln1"], x)
+        h, (S_f, x_tm) = rwkv_mod.apply_rwkv_time_mix(
+            cfg, p["tm"], h_in, state=cache["S"],
+            x_carry=cache["x_tm"].astype(h_in.dtype),
+        )
+        x = x + h
+        h_in = _apply_norm(cfg, p["ln2"], x)
+        h, x_cm = rwkv_mod.apply_rwkv_channel_mix(
+            cfg, p["cm"], h_in, x_carry=cache["x_cm"].astype(h_in.dtype)
+        )
+        x = x + h
+        new = {"S": S_f, "x_tm": x_tm.astype(cache["x_tm"].dtype),
+               "x_cm": x_cm.astype(cache["x_cm"].dtype)}
+        return x, new
+    parts = _parse(kind)
+    new = dict(cache)
+    h = _apply_norm(cfg, p["ln1"], x)
+    if parts[0] == "mamba":
+        h, new["ssm"] = mamba_mod.decode_mamba_step(cfg, p["mixer"], h, cache["ssm"])
+    else:
+        h, new["kv"] = attn_mod.decode_attention_step(
+            cfg, p["mixer"], h, pos, cache["kv"],
+            kind="local" if parts[0] == "local" else "global",
+        )
+    x = x + h
+    if "cross" in parts:
+        h = attn_mod.apply_cross_attention(
+            cfg, p["cross"], _apply_norm(cfg, p["ln_x"], x),
+            enc_kv=(cache["cross"]["k"].astype(h.dtype),
+                    cache["cross"]["v"].astype(h.dtype)),
+        )
+        x = x + h
+    h = _apply_norm(cfg, p["ln2"], x)
+    if parts[-1] == "moe":
+        h, _ = moe_mod.apply_moe(cfg, p["ffn"], h, rules)
+    else:
+        h = mlp_mod.apply_mlp(cfg, p["ffn"], h, gated=cfg.norm_type != "layernorm")
+    return x + h, new
+
+
+def decode_step(cfg, params, cache, token, pos, rules: Rules = None):
+    """token: (B, 1) int32; pos: scalar int32 → (logits (B,1,V), cache)."""
+    dt = _compute_dtype(cfg)
+    x = _embed_tokens(cfg, params, token)
+    if not cfg.use_rope:
+        half = cfg.d_model // 2
+        i = jnp.arange(half, dtype=jnp.float32)
+        angle = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / cfg.d_model)
+        pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)])
+        x = x + pe.astype(dt)
+
+    def body(carry, xs):
+        h = carry
+        blk, cache_blk = xs
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            h, nc = _layer_decode(cfg, kind, blk[i], cache_blk[i], h, pos, rules)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (tuple(params["blocks"]), tuple(cache)),
+        unroll=cfg.scan_unroll,
+    )
+    x = _apply_norm(cfg, params["final_norm"], x)
+    unemb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), unemb.astype(jnp.float32)
+    )
+    return softcap(logits, cfg.final_softcap), new_cache

@@ -1,0 +1,202 @@
+"""RWKV-6 "Finch" block: data-dependent decay linear recurrence.
+
+Faithful pieces: per-channel data-dependent decay ``w_t = exp(-exp(ŵ_t))``
+with a LoRA on the shifted input, the bonus-``u`` current-token term, the
+matrix-valued per-head state ``S ∈ (K × V)``, token-shift mixing on every
+projection, squared-ReLU channel-mix.  Simplification (noted in DESIGN.md):
+token-shift uses static learned mix coefficients instead of RWKV-6's
+data-dependent ddlerp — the recurrence (the part that matters for systems
+behaviour: O(1) state, attention-free) is exact.
+
+Train path scans sequence chunks; within a chunk the recurrence runs
+step-by-step (the chunked-GLA matmul formulation is the documented perf
+upgrade — see EXPERIMENTS.md §Perf).  Decode is a single O(1) state update,
+which is why rwkv6 runs the ``long_500k`` shape that full-attention archs
+skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Init, layer_norm
+
+
+def init_rwkv_time_mix(cfg, rng: Init):
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.d_model // cfg.rwkv_heads
+    lora = cfg.rwkv_decay_lora
+    params = {
+        "mix_r": rng.normal((d,), 0.2),
+        "mix_k": rng.normal((d,), 0.2),
+        "mix_v": rng.normal((d,), 0.2),
+        "mix_g": rng.normal((d,), 0.2),
+        "mix_w": rng.normal((d,), 0.2),
+        "w0": rng.normal((d,), 0.5),
+        "wA": rng.dense((d, lora)),
+        "wB": rng.dense((lora, d), fan_in=lora),
+        "u": rng.normal((H, hd), 0.5),
+        "wr": rng.dense((d, d)),
+        "wk": rng.dense((d, d)),
+        "wv": rng.dense((d, d)),
+        "wg": rng.dense((d, d)),
+        "wo": rng.dense((d, d)),
+        "ln_g": rng.ones((d,)),
+        "ln_b": rng.zeros((d,)),
+    }
+    specs = {
+        "mix_r": (None,), "mix_k": (None,), "mix_v": (None,),
+        "mix_g": (None,), "mix_w": (None,),
+        "w0": (None,), "wA": ("embed", None), "wB": (None, "embed"),
+        "u": ("rwkv_heads", None),
+        "wr": ("embed", "rwkv_proj"),
+        "wk": ("embed", "rwkv_proj"),
+        "wv": ("embed", "rwkv_proj"),
+        "wg": ("embed", "rwkv_proj"),
+        "wo": ("rwkv_proj", "embed"),
+        "ln_g": (None,), "ln_b": (None,),
+    }
+    return params, specs
+
+
+def init_rwkv_channel_mix(cfg, rng: Init):
+    d, f = cfg.d_model, cfg.d_ff
+    params = {
+        "mix_k": rng.normal((d,), 0.2),
+        "mix_r": rng.normal((d,), 0.2),
+        "wk": rng.dense((d, f)),
+        "wr": rng.dense((d, d)),
+        "wv": rng.dense((f, d), fan_in=f),
+    }
+    specs = {
+        "mix_k": (None,), "mix_r": (None,),
+        "wk": ("embed", "mlp"),
+        "wr": ("embed", None),
+        "wv": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * jax.nn.sigmoid(mu).astype(x.dtype)
+
+
+def _time_mix_projections(cfg, p, x, x_prev):
+    dt = x.dtype
+    H, hd = cfg.rwkv_heads, cfg.d_model // cfg.rwkv_heads
+    r = jnp.einsum("bsd,de->bse", _mix(x, x_prev, p["mix_r"]), p["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", _mix(x, x_prev, p["mix_k"]), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", _mix(x, x_prev, p["mix_v"]), p["wv"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", _mix(x, x_prev, p["mix_g"]), p["wg"].astype(dt))
+    xw = _mix(x, x_prev, p["mix_w"])
+    w_hat = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dl,le->bse",
+        jnp.tanh(xw.astype(jnp.float32)),
+        p["wA"].astype(jnp.float32),
+        p["wB"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(w_hat))  # (B,S,d) data-dependent per-channel decay
+    B, S, d = x.shape
+    shp = (B, S, H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), g, w.reshape(shp))
+
+
+def apply_rwkv_time_mix(
+    cfg, p, x: jax.Array, state: jax.Array | None = None,
+    x_carry: jax.Array | None = None,
+):
+    """x: (B, S, d) → (y, (final_state, last_x))."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, d // cfg.rwkv_heads
+    dt = x.dtype
+    x_prev = _shift(x, x_carry)
+    r, k, v, g, w = _time_mix_projections(cfg, p, x, x_prev)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    u = p["u"].astype(jnp.float32)
+
+    c = min(cfg.rwkv_chunk, S)
+    n_full = S // c
+    rem = S - n_full * c
+
+    def chunk(S0, inp):
+        rc_, kc_, vc_, wc_ = inp
+
+        def step(S_, t):
+            r_t, k_t, v_t, w_t = (
+                rc_[:, t].astype(jnp.float32),
+                kc_[:, t].astype(jnp.float32),
+                vc_[:, t].astype(jnp.float32),
+                wc_[:, t].astype(jnp.float32),
+            )
+            kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,V)
+            y_t = jnp.einsum(
+                "bhk,bhkv->bhv", r_t, S_ + u[None, :, :, None] * kv
+            )
+            S_next = w_t[..., :, None] * S_ + kv
+            return S_next, y_t
+
+        S1, ys = jax.lax.scan(step, S0, jnp.arange(inp[0].shape[1]))
+        return S1, jnp.moveaxis(ys, 0, 1)  # (B,c,H,V)
+
+    if cfg.remat_policy != "none":
+        chunk = jax.checkpoint(chunk)  # bound live set to one chunk (§Perf)
+
+    def to_chunks(a):  # head of the sequence as (nC, B, c, H, hd)
+        return jnp.moveaxis(
+            a[:, : n_full * c].reshape(B, n_full, c, H, hd), 1, 0
+        )
+
+    ys = []
+    S_final = state
+    if n_full:
+        S_final, yc = jax.lax.scan(
+            chunk, state, (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(w))
+        )
+        ys.append(jnp.moveaxis(yc, 0, 1).reshape(B, n_full * c, H, hd))
+    if rem:  # non-divisible tail (e.g. prefill of S+1 tokens)
+        S_final, y_tail = chunk(
+            S_final,
+            (r[:, -rem:], k[:, -rem:], v[:, -rem:], w[:, -rem:]),
+        )
+        ys.append(y_tail.reshape(B, rem, H, hd))
+    y = jnp.concatenate(ys, axis=1).reshape(B, S, d).astype(dt)
+    y = layer_norm(y, p["ln_g"], p["ln_b"])  # per-token group norm (H groups folded)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(dt))
+    return out, (S_final, x[:, -1:])
+
+
+def apply_rwkv_channel_mix(
+    cfg, p, x: jax.Array, x_carry: jax.Array | None = None
+):
+    dt = x.dtype
+    x_prev = _shift(x, x_carry)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, x_prev, p["mix_k"]), p["wk"].astype(dt))
+    r = jnp.einsum("bsd,de->bse", _mix(x, x_prev, p["mix_r"]), p["wr"].astype(dt))
+    h = jnp.square(jax.nn.relu(k))
+    out = jax.nn.sigmoid(r) * jnp.einsum("bsf,fd->bsd", h, p["wv"].astype(dt))
+    return out, x[:, -1:]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, d // cfg.rwkv_heads
+    cache = {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, 1, d), dtype),
+        "x_cm": jnp.zeros((batch, 1, d), dtype),
+    }
+    specs = {
+        "S": ("batch_kv", "rwkv_heads", None, None),
+        "x_tm": ("batch_kv", None, None),
+        "x_cm": ("batch_kv", None, None),
+    }
+    return cache, specs

@@ -1,0 +1,19 @@
+from repro.optim.adamw import (
+    OptimizerConfig,
+    adamw_update,
+    clip_grads,
+    init_opt_state,
+    lr_schedule,
+    opt_state_specs,
+)
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_grads,
+    init_residual,
+)
+
+__all__ = [
+    "OptimizerConfig", "adamw_update", "clip_grads", "init_opt_state",
+    "lr_schedule", "opt_state_specs",
+    "CompressionConfig", "compress_grads", "init_residual",
+]

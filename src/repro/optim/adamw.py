@@ -1,0 +1,137 @@
+"""AdamW with histogram-quantile clipping — functional, shard-friendly.
+
+Moments mirror parameter sharding (their logical specs are the parameter
+specs), so optimizer state is ZeRO-sharded for free.  ``clip_mode``:
+
+  * ``none``         — raw gradients
+  * ``global_norm``  — classic clip-by-global-norm
+  * ``quantile``     — **the paper integration**: clip each |g| at the
+    approximate ``clip_q`` quantile of the *whole gradient tree's*
+    magnitude distribution, computed by merging per-leaf equi-depth
+    summaries (Theorem 1 bounds the rank error of the threshold by
+    ``2/T`` of the element count — a principled, scale-free clip that
+    costs one tiny merge instead of a global sort).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.telemetry import grad_quantile
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_mode: str = "global_norm"  # none | global_norm | quantile
+    clip_value: float = 1.0  # max norm for global_norm
+    clip_q: float = 0.999  # quantile for quantile mode
+    clip_hist_T: int = 512
+    moment_dtype: str = "float32"
+    grad_accum: int = 1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.peak_lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    decayed = cfg.peak_lr * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    return jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def init_opt_state(params: Any, cfg: OptimizerConfig) -> dict:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs: Any) -> dict:
+    """Moment sharding == parameter sharding (ZeRO-sharded for free)."""
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": (),
+    }
+
+
+def clip_grads(
+    grads: Any,
+    cfg: OptimizerConfig,
+    *,
+    mesh=None,
+    axis_names: tuple[str, ...] = (),
+) -> tuple[Any, dict]:
+    if cfg.clip_mode == "none":
+        return grads, {"grad_norm": _global_norm(grads)}
+    if cfg.clip_mode == "global_norm":
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_value / (gnorm + 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), {"grad_norm": gnorm}
+    if cfg.clip_mode == "quantile":
+        thr = grad_quantile(
+            grads, cfg.clip_q, cfg.clip_hist_T, mesh=mesh, axis_names=axis_names
+        )
+        clipped = jax.tree.map(lambda g: jnp.clip(g, -thr, thr), grads)
+        return clipped, {
+            "grad_norm": _global_norm(grads),
+            "clip_threshold": thr,
+        }
+    raise ValueError(cfg.clip_mode)
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: dict, params: Any, cfg: OptimizerConfig
+) -> tuple[Any, dict, dict]:
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step.astype(jnp.float32))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_n = b1 * m32 + (1 - b1) * g
+        v_n = b2 * v32 + (1 - b2) * g * g
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m_n.astype(m.dtype),
+            v_n.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    # out is a tree of 3-tuples; unzip
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr}

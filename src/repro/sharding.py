@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP / KV-seq CP.
+
+Every parameter/cache/activation leaf carries a tuple of *logical* axis
+names; ``Rules`` maps them to mesh ``PartitionSpec`` per (mesh, shape-kind,
+arch divisibility).  This is the single place the parallelism layout lives
+(MaxText-style), so a layout experiment is a ~5-line diff here.
+
+Layout summary (DESIGN.md §7):
+
+  weights    TP over "model" on heads/mlp/experts/vocab/mamba/rwkv dims,
+             ZeRO-3/FSDP over "data" on the embed dim (XLA all-gathers at
+             use); replicated over "pod" (pure DP between pods — ICI-cheap
+             gradient all-reduce crosses pods once per step).
+  activations batch over ("pod","data"); residual stream sequence-sharded
+             over "model" between blocks (Megatron sequence parallelism —
+             XLA inserts the all-gather/reduce-scatter pair around each
+             block).
+  KV caches  decode: batch over ("pod","data"), *sequence* over "model"
+             (flash-decoding style split-KV; XLA adds the softmax combine
+             collectives).  long_500k (batch=1): sequence over
+             ("data","model") — 500k KV splits 256-way; batch replicated.
+
+Divisibility fallbacks are computed per arch: a logical axis whose size
+does not divide its mesh axes degrades to replication (smollm's 9 heads) —
+recorded in the dry-run output so the roofline table shows the cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclasses.dataclass
+class Rules:
+    """Callable: logical-axis tuple → PartitionSpec."""
+
+    cfg: ModelConfig
+    mesh: Mesh
+    shape_kind: str  # train | prefill | decode | decode_long
+    seq_len: int = 0
+    fsdp: bool = True
+    sequence_parallel: bool = True
+    table: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        cfg, mesh = self.cfg, self.mesh
+        has_pod = "pod" in mesh.axis_names
+        model = "model" if "model" in mesh.axis_names else None
+        data = "data" if "data" in mesh.axis_names else None
+        dp = (("pod", "data") if has_pod else ("data",)) if data else None
+        msize = _mesh_size(mesh, model)
+
+        def tp_if(n: int):
+            return model if model and n % max(msize, 1) == 0 else None
+
+        decode = self.shape_kind in ("decode", "decode_long")
+        long = self.shape_kind == "decode_long"
+
+        # split-KV: the *sequence* dim of the KV cache carries the sharding
+        # (decode AND prefill — a prefill otherwise materializes the whole
+        # cache unsharded as the layer-scan output: §Perf iteration 2).
+        kv_seq = ("data", "model") if long else (model,)
+        batch_axes = None if long else dp
+
+        t = {
+            # ---- weights -------------------------------------------------
+            "layers": None,
+            "embed": (data if self.fsdp else None),
+            "vocab": tp_if(cfg.vocab_size),
+            "heads": tp_if(cfg.num_heads),
+            "kv_heads": tp_if(cfg.num_kv_heads),
+            "mlp": tp_if(cfg.d_ff),
+            "experts": tp_if(max(cfg.num_experts, 1)),
+            # Activation expert-dim pin (moe.py::_pin_experts): ONLY when
+            # ≥2 experts land per device.  Measured (§Perf P4/P5): at
+            # E_loc=8 (llama4) the pin removes catastrophic EP-axis weight
+            # gathers (collective 91→16.5 s); at E_loc=1 (dbrx, jamba) the
+            # partitioner's weight replication is the cheaper plan and the
+            # pin inflates every term (dbrx compute 14→41 s) — refuted
+            # there, so it is conditional.
+            "experts_act": (
+                model
+                if model
+                and cfg.num_experts >= 2 * max(msize, 1)
+                and cfg.num_experts % max(msize, 1) == 0
+                else None
+            ),
+            "expert_mlp": None,
+            "mamba_inner": tp_if(cfg.mamba_expand * cfg.d_model),
+            "rwkv_proj": tp_if(cfg.d_model),
+            "rwkv_heads": tp_if(max(cfg.rwkv_heads, 1)),
+            # ---- activations ----------------------------------------------
+            "act_batch": batch_axes,
+            "act_seq": (
+                model
+                if (
+                    self.sequence_parallel
+                    and not decode
+                    and model
+                    and self.seq_len % max(msize, 1) == 0
+                )
+                else None
+            ),
+            "enc_seq": None,  # whisper's 1500 frames: not 16-divisible
+            # ---- decode caches ---------------------------------------------
+            "batch_kv": batch_axes,
+            "kv_seq": kv_seq,
+            "kv_heads_cache": None,  # seq-sharding carries the memory
+        }
+        self.table = t
+
+    def __call__(self, logical: tuple) -> P:
+        entries = []
+        for name in logical:
+            if name is None:
+                entries.append(None)
+            else:
+                entries.append(self.table.get(name))
+        return P(*entries)
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self(logical))
+
+    def tree_pspecs(self, spec_tree: Any) -> Any:
+        """Map a tree of logical tuples to PartitionSpecs."""
+        return jax.tree.map(
+            lambda s: self(s),
+            spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple)
+            and all(isinstance(e, (str, type(None))) for e in s),
+        )
+
+    def tree_shardings(self, spec_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, self(s)),
+            spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple)
+            and all(isinstance(e, (str, type(None))) for e in s),
+        )
+
+    def degradations(self) -> list[str]:
+        """Human-readable list of divisibility fallbacks (for the report)."""
+        cfg = self.cfg
+        msize = _mesh_size(self.mesh, "model" if "model" in self.mesh.axis_names else None)
+        out = []
+        for name, n in [
+            ("heads", cfg.num_heads),
+            ("kv_heads", cfg.num_kv_heads),
+            ("vocab", cfg.vocab_size),
+            ("mlp", cfg.d_ff),
+        ]:
+            if msize > 1 and n % msize != 0:
+                out.append(f"{name}={n} !% model={msize} -> replicated")
+        return out

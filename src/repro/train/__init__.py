@@ -1,0 +1,1 @@
+from repro.train.train_step import make_train_step, make_opt_state

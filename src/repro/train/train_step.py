@@ -1,0 +1,113 @@
+"""Train step: value_and_grad + clip (+compress) + AdamW, microbatched.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches with the
+reduction deferred to the end (grads stay in their sharded layout; XLA
+schedules the FSDP all-gathers of the next microbatch against the current
+one's backward — the standard overlap).  Buffers are donated by the jit
+wrapper in ``launch/train.py``.
+
+``opt_state`` = {"m", "v", "step"} (+ "residual" when compression is on);
+moments mirror parameter sharding (ZeRO).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.optim import (
+    CompressionConfig,
+    OptimizerConfig,
+    adamw_update,
+    clip_grads,
+    compress_grads,
+    init_opt_state,
+    init_residual,
+)
+
+
+def make_opt_state(params, opt_cfg, comp_cfg: CompressionConfig | None = None):
+    state = init_opt_state(params, opt_cfg)
+    if comp_cfg is not None and comp_cfg.enabled:
+        state["residual"] = init_residual(params)
+    return state
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    rules=None,
+    comp_cfg: CompressionConfig | None = None,
+    mesh=None,
+    telemetry_axes: tuple[str, ...] = (),
+) -> Callable:
+    """Returns step(params, opt_state, batch) → (params', opt_state', metrics).
+
+    ``batch`` leaves carry a leading (accum,) dim when grad_accum > 1.
+    """
+
+    compute_dt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+    def forward(params, microbatch):
+        # Cast matrices to the compute dtype while still FSDP-sharded, so
+        # the partitioner's weight all-gathers move bf16 (not fp32) and the
+        # backward's gradient reduction happens on bf16 cotangents before
+        # the (local) cast-back to fp32.  Halves the dominant collective
+        # term of the FSDP cells — §Perf iteration 1.  Norms/scalars (<2-D)
+        # stay fp32.
+        params_c = jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if (p.dtype == jnp.float32 and p.ndim > 1)
+            else p,
+            params,
+        )
+        return loss_fn(cfg, params_c, microbatch, rules)
+
+    grad_fn = jax.value_and_grad(forward, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if opt_cfg.grad_accum > 1:
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0)), batch
+            )
+            grads = jax.tree.map(lambda g: g / opt_cfg.grad_accum, grads)
+            metrics = {"loss": loss_sum / opt_cfg.grad_accum}
+        else:
+            (loss, m), grads = grad_fn(params, batch)
+            metrics = {"loss": loss, **m}
+
+        grads, clip_m = clip_grads(
+            grads, opt_cfg, mesh=mesh, axis_names=telemetry_axes
+        )
+        metrics.update(clip_m)
+
+        new_state = {}
+        if comp_cfg is not None and comp_cfg.enabled:
+            grads, new_state["residual"], cm = compress_grads(
+                grads, opt_state["residual"], comp_cfg,
+                mesh=mesh, axis_names=telemetry_axes,
+            )
+            metrics.update(cm)
+
+        inner = {k: opt_state[k] for k in ("m", "v", "step")}
+        new_params, new_inner, opt_m = adamw_update(grads, inner, params, opt_cfg)
+        new_state.update(new_inner)
+        metrics.update(opt_m)
+        return new_params, new_state, metrics
+
+    return step

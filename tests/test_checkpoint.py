@@ -1,0 +1,83 @@
+"""Checkpoint/restart: atomicity, LATEST pointer, elastic restore, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = tree()
+    save_checkpoint(d, 7, t, {"m": t, "step": jnp.int32(7)})
+    assert latest_step(d) == 7
+    p, o, step = restore_checkpoint(d, None, t, {"m": t, "step": jnp.int32(0)})
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(p["a"]), np.asarray(t["a"]))
+    assert p["nested"]["b"].dtype == jnp.bfloat16
+    assert int(o["step"]) == 7
+
+
+def test_latest_pointer_advances(tmp_path):
+    d = str(tmp_path)
+    t = tree()
+    save_checkpoint(d, 1, t)
+    save_checkpoint(d, 5, t)
+    assert latest_step(d) == 5
+
+
+def test_gc_keeps_newest(tmp_path):
+    d = str(tmp_path)
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, t)
+    gc_checkpoints(d, keep=2)
+    remaining = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert remaining == ["step_00000004", "step_00000005"]
+    assert latest_step(d) == 5
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Save unsharded, restore onto an explicit (n,1) mesh — elastic."""
+    d = str(tmp_path)
+    t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(d, 3, t)
+    mesh = jax.make_mesh(
+        (len(jax.devices()), 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    sh = {"w": jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None)
+    )} if len(jax.devices()) in (1, 2, 4) else None
+    p, _, step = restore_checkpoint(d, None, t, shardings=sh)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(t["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), None, tree())
+
+
+def test_overwrite_same_step(tmp_path):
+    d = str(tmp_path)
+    t = tree()
+    save_checkpoint(d, 2, t)
+    t2 = {"a": t["a"] * 2, "nested": t["nested"]}
+    save_checkpoint(d, 2, t2)
+    p, _, _ = restore_checkpoint(d, 2, t)
+    np.testing.assert_allclose(np.asarray(p["a"]), np.asarray(t["a"]) * 2)

@@ -1,0 +1,65 @@
+"""Units for the dry-run costing machinery (no 512-device init needed)."""
+import dataclasses
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun
+
+
+def test_parse_collective_bytes_synthetic_hlo():
+    hlo = """
+  %ag = bf16[128,256]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = bf16[32]{0} collective-permute(%z), source_target_pairs=...
+  %ag2 = bf16[8]{0} all-gather-start(%w)
+  %agd = bf16[8]{0} all-gather-done(%ag2)
+  %notacoll = f32[4]{0} add(%p, %q)
+"""
+    out = dryrun.parse_collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 256 * 2 + 8 * 2  # start counted, done not
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert out["collective-permute"] == 32 * 2
+    assert out["n_all-gather"] == 2 and out["n_all-reduce"] == 1
+
+
+def test_costing_config_collapses_loops():
+    cfg = get_config("gemma2-9b")
+    shape = SHAPES["train_4k"]
+    c1 = dryrun.costing_config(cfg, shape, 1)
+    assert c1.repeats == 1 and c1.scan_unroll == 1
+    assert c1.attn_q_chunk == shape.seq_len
+    assert c1.loss_chunk == shape.seq_len
+    c2 = dryrun.costing_config(cfg, shape, 2)
+    assert c2.repeats == 2 and c2.scan_unroll == 2
+
+
+def test_costing_config_encoder_scaling():
+    cfg = get_config("whisper-medium")
+    c2 = dryrun.costing_config(cfg, SHAPES["train_4k"], 2)
+    assert c2.encoder_layers == 2  # enc scales with r so the marginal is exact
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("deepseek-7b")
+    train = dryrun._model_flops(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    dec = dryrun._model_flops(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_model_flops_moe_uses_active():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    f = dryrun._model_flops(cfg, SHAPES["train_4k"])
+    assert f == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096, rel=1e-6
+    )
+    assert cfg.active_param_count() < 0.05 * cfg.param_count()
+
+
+def test_shape_bytes_tuple_shapes():
+    assert dryrun._shape_bytes("(bf16[2,2], f32[3])") == 2 * 2 * 2 + 3 * 4
+    assert dryrun._shape_bytes("pred[7]") == 7
+    assert dryrun._shape_bytes("u32[]") == 4  # a scalar still moves 4 bytes

@@ -1,0 +1,62 @@
+"""Composed error bound of the hierarchical merge (DESIGN.md §5)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_exact, hierarchical_device_summary, merge_list
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([(512, 64, 128), (1024, 128, 256), (256, 32, 64)]),
+)
+def test_two_level_bound(seed, dims):
+    tile, T_tile, T_dev = dims
+    rng = np.random.default_rng(seed)
+    n = tile * int(rng.integers(4, 12)) + int(rng.integers(0, tile))
+    x = (rng.gumbel(size=n) * rng.uniform(0.5, 5)).astype(np.float32)
+    h = hierarchical_device_summary(jnp.asarray(x), tile, T_tile, T_dev)
+    k_tiles = -(-n // tile)
+    bound = 2 * n * (1 / T_tile + 1 / T_dev) + 2 * (k_tiles + 1)
+    err = np.abs(np.asarray(h.sizes) - n / T_dev).max()
+    assert err <= bound + 1e-3, (err, bound)
+
+
+def test_three_level_composition():
+    """tile → device → global, each level a paper merge; composed bound."""
+    rng = np.random.default_rng(7)
+    tile, T_tile, T_dev, T_glob = 512, 128, 256, 64
+    n_dev, n_per = 8, 4096
+    device_summaries = []
+    allv = []
+    for _ in range(n_dev):
+        x = rng.normal(size=n_per).astype(np.float32)
+        allv.append(x)
+        device_summaries.append(
+            hierarchical_device_summary(jnp.asarray(x), tile, T_tile, T_dev)
+        )
+    final = merge_list(device_summaries, T_glob)
+    n = n_dev * n_per
+    k_tiles = n_per // tile
+    bound = (
+        2 * n * (1 / T_tile + 1 / T_dev + 1 / T_glob)
+        + 2 * (n_dev * k_tiles + n_dev)
+    )
+    err = np.abs(np.asarray(final.sizes) - n / T_glob).max()
+    assert err <= bound, (err, bound)
+    # and it should be far tighter than the trivial bound n/T_glob
+    assert err < n / T_glob
+
+
+def test_hierarchy_accuracy_improves_with_T():
+    rng = np.random.default_rng(11)
+    x = rng.gumbel(size=65536).astype(np.float32)
+    errs = []
+    for T_tile in (32, 128, 512):
+        h = hierarchical_device_summary(jnp.asarray(x), 2048, T_tile, 64)
+        errs.append(np.abs(np.asarray(h.sizes) - x.size / 64).max())
+    assert errs[0] >= errs[1] >= errs[2] - 1e-6

@@ -1,0 +1,103 @@
+"""Core histogram unit tests — including the paper's §4 worked example."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Histogram,
+    build_exact,
+    build_exact_batched,
+    boundary_error,
+    cdf_interp,
+    cdf_left_collapse,
+    merge,
+    merge_list,
+    quantile,
+    range_count,
+    sample_histogram,
+    size_error,
+)
+
+P1 = jnp.asarray([2, 4, 5, 6, 7, 10, 13, 16, 18, 20, 21, 25], jnp.float32)
+P2 = jnp.asarray(
+    [3, 9, 11, 12, 14, 15, 17, 19, 22, 23, 24, 26, 27, 29, 30], jnp.float32
+)
+
+
+def test_build_exact_paper_example():
+    h1 = build_exact(P1, 3)
+    np.testing.assert_allclose(np.asarray(h1.boundaries), [2, 7, 18, 25])
+    np.testing.assert_allclose(np.asarray(h1.sizes), [4, 4, 4])
+    h2 = build_exact(P2, 3)
+    np.testing.assert_allclose(np.asarray(h2.boundaries), [3, 15, 24, 30])
+    np.testing.assert_allclose(np.asarray(h2.sizes), [5, 5, 5])
+
+
+def test_merge_paper_example():
+    """Section 4: H* = {(2,9), (7,9), (18,9), (30,0)}."""
+    h = merge_list([build_exact(P1, 3), build_exact(P2, 3)], 3)
+    np.testing.assert_allclose(np.asarray(h.boundaries), [2, 7, 18, 30])
+    np.testing.assert_allclose(np.asarray(h.sizes), [9, 9, 9])
+
+
+def test_build_exact_nondivisible():
+    v = jnp.arange(10, dtype=jnp.float32)
+    h = build_exact(v, 3)
+    assert float(h.n) == 10
+    sizes = np.asarray(h.sizes)
+    assert sizes.min() >= 3 and sizes.max() <= 4
+
+
+def test_build_exact_batched():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(5, 64)), jnp.float32)
+    h = build_exact_batched(x, 8)
+    assert h.boundaries.shape == (5, 9)
+    assert h.sizes.shape == (5, 8)
+    np.testing.assert_allclose(np.asarray(h.sizes).sum(-1), 64)
+
+
+def test_quantile_and_cdf():
+    v = jnp.arange(1000, dtype=jnp.float32)
+    h = build_exact(v, 100)
+    med = float(quantile(h, 0.5))
+    assert abs(med - 499.5) < 20
+    c = float(cdf_interp(h, jnp.float32(500.0)))
+    assert abs(c - 500) < 20
+    clc = float(cdf_left_collapse(h, jnp.float32(500.0)))
+    assert abs(clc - 500) <= 2 * 1000 / 100 + 1
+
+
+def test_range_count():
+    v = jnp.asarray(np.random.default_rng(1).uniform(0, 1, 10000), jnp.float32)
+    h = build_exact(v, 256)
+    cnt = float(range_count(h, jnp.float32(0.25), jnp.float32(0.5)))
+    assert abs(cnt - 2500) < 2 * 10000 / 256 + 50
+
+
+def test_error_metrics_zero_for_exact():
+    v = jnp.asarray(np.random.default_rng(2).normal(size=4096), jnp.float32)
+    h = build_exact(v, 64)
+    assert float(boundary_error(h, h)) == 0.0
+    assert float(size_error(h, h)) == 0.0
+
+
+def test_sample_histogram_includes_edges():
+    import jax
+
+    v = jnp.asarray(np.random.default_rng(3).normal(size=5000), jnp.float32)
+    h = sample_histogram(v, 16, 256, jax.random.PRNGKey(0))
+    assert float(h.boundaries[0]) == float(v.min())
+    assert float(h.boundaries[-1]) == float(v.max())
+    np.testing.assert_allclose(float(h.n), 5000, rtol=0.02)
+
+
+def test_merge_list_mixed_T():
+    hs = [build_exact(P1, 3), build_exact(P2, 5)]
+    h = merge_list(hs, 3)
+    assert float(h.n) == 27
+    assert np.all(np.diff(np.asarray(h.boundaries)) >= 0)
+
+
+def test_merge_beta_one():
+    h = merge_list([build_exact(P1, 3), build_exact(P2, 3)], 1)
+    np.testing.assert_allclose(float(h.sizes[0]), 27)

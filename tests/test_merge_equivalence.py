@@ -1,0 +1,65 @@
+"""The vectorized rank-select merge is bit-identical to paper Algorithm 1."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Histogram,
+    build_exact,
+    merge,
+    merge_histograms_sequential,
+)
+from repro.kernels import merge_pallas
+
+settings.register_profile("ci", deadline=None, max_examples=60)
+settings.load_profile("ci")
+
+
+@st.composite
+def stacked_histograms(draw):
+    k = draw(st.integers(1, 5))
+    T = draw(st.integers(2, 16))
+    beta = draw(st.integers(1, T))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    hs = []
+    for _ in range(k):
+        n = int(rng.integers(T, 300))
+        dup = rng.integers(0, 2)
+        v = (
+            rng.integers(0, 20, size=n).astype(np.float32)
+            if dup
+            else rng.normal(size=n).astype(np.float32) * 5
+        )
+        hs.append(build_exact(jnp.asarray(v), T))
+    return hs, beta
+
+
+@given(stacked_histograms())
+def test_vectorized_equals_sequential(args):
+    hs, beta = args
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in hs]),
+        jnp.stack([h.sizes for h in hs]),
+    )
+    hv = merge(stacked, beta)
+    hq = merge_histograms_sequential(hs, beta)
+    np.testing.assert_allclose(
+        np.asarray(hv.boundaries), np.asarray(hq.boundaries)
+    )
+    np.testing.assert_allclose(
+        np.asarray(hv.sizes), np.asarray(hq.sizes), atol=1e-2
+    )
+
+
+@given(stacked_histograms())
+def test_pallas_kernel_equals_sequential(args):
+    hs, beta = args
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in hs]),
+        jnp.stack([h.sizes for h in hs]),
+    )
+    bo, so = merge_pallas(stacked.boundaries, stacked.sizes, beta)
+    hq = merge_histograms_sequential(hs, beta)
+    np.testing.assert_allclose(np.asarray(bo), np.asarray(hq.boundaries))
+    np.testing.assert_allclose(np.asarray(so), np.asarray(hq.sizes), atol=1e-2)

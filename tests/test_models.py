@@ -1,0 +1,131 @@
+"""Per-arch smoke tests + decode-vs-prefill consistency (cache correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable, smoke
+from repro.models import decode_step, init_cache, init_model, loss_fn, prefill
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B, S, key):
+    s_text = S - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    batch = {
+        "tokens": jax.random.randint(key, (B, s_text), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params, specs = init_model(cfg, key)
+    batch = make_batch(cfg, 2, 32, key)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    # output shape checks: hidden through unembed happens in loss; do grads
+    grads = jax.jit(jax.grad(lambda p, b: loss_fn(cfg, p, b)[0]))(params, batch)
+    for g in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch):
+    """prefill(x[:S]) + decode(x[S]) == prefill(x[:S+1]) — cache correctness.
+
+    Validates KV caches, SSM states, RWKV shift/state carries and local
+    window masks across the prefill/decode boundary.
+    """
+    import dataclasses
+
+    cfg = smoke(get_config(arch))
+    if cfg.num_experts:
+        # capacity-based MoE legitimately drops different tokens when the
+        # routing group changes (prefill groups over seq, decode over batch);
+        # the *cache* consistency contract is tested dropless.
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    key = jax.random.PRNGKey(1)
+    params, _ = init_model(cfg, key)
+    B, S = 2, 16
+    batch_full = make_batch(cfg, B, S + 1, key)
+    # path A: prefill on S+1 tokens
+    cache_a, _ = init_cache(cfg, B, S + 8, dtype=jnp.float32)
+    logits_a, _ = jax.jit(lambda p, b, c: prefill(cfg, p, b, c))(
+        params, batch_full, cache_a
+    )
+    # path B: prefill on S tokens, then one decode step with token S
+    batch_prefix = dict(batch_full)
+    batch_prefix["tokens"] = batch_full["tokens"][:, :-1]
+    cache_b, _ = init_cache(cfg, B, S + 8, dtype=jnp.float32)
+    _, cache_b = jax.jit(lambda p, b, c: prefill(cfg, p, b, c))(
+        params, batch_prefix, cache_b
+    )
+    pos = S  # make_batch folds frontend tokens into S: stream length == S
+    logits_b, _ = jax.jit(
+        lambda p, c, t, q: decode_step(cfg, p, c, t, q)
+    )(params, cache_b, batch_full["tokens"][:, -1:], jnp.int32(pos))
+    np.testing.assert_allclose(
+        np.asarray(logits_a), np.asarray(logits_b), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_shape_applicability_rules():
+    long = SHAPES["long_500k"]
+    runs = {a for a in ARCHS if shape_applicable(get_config(a), long)[0]}
+    assert runs == {"jamba-v0.1-52b", "rwkv6-7b", "gemma2-9b"}
+    for a in ARCHS:  # every other shape applies everywhere
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_local_window_masks_differ_from_global():
+    cfg = smoke(get_config("gemma2-9b"))
+    key = jax.random.PRNGKey(2)
+    params, _ = init_model(cfg, key)
+    B, S = 1, 64  # longer than smoke sliding window (32)
+    batch = make_batch(cfg, B, S, key)
+    from repro.models.model import forward_hidden
+
+    h, _ = jax.jit(lambda p, b: forward_hidden(cfg, p, b))(params, batch)
+    assert np.all(np.isfinite(np.asarray(h, dtype=np.float32)))
+
+
+def test_moe_dropless_at_high_capacity():
+    import dataclasses
+    from repro.models.moe import apply_moe, init_moe
+    from repro.models.common import Init
+
+    cfg = dataclasses.replace(
+        smoke(get_config("dbrx-132b")), moe_capacity_factor=8.0
+    )
+    p, _ = init_moe(cfg, Init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y, aux = apply_moe(cfg, p, x)
+    assert float(aux["moe_drop_fraction"]) == 0.0
+    assert y.shape == x.shape
+
+
+def test_moe_decode_fold_matches_train_routing():
+    """Decode (S=1, B>1) folds batch→groups; outputs stay finite & shaped."""
+    from repro.models.moe import apply_moe, init_moe
+    from repro.models.common import Init
+
+    cfg = smoke(get_config("llama4-maverick-400b-a17b"))
+    p, _ = init_moe(cfg, Init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model))
+    y, aux = apply_moe(cfg, p, x)
+    assert y.shape == (8, 1, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(y)))

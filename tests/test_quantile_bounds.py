@@ -1,0 +1,60 @@
+"""Rank-error guarantees of quantile / CDF queries over merged summaries.
+
+Theorem-2 corollary used by every framework integration (quantile clip,
+straggler p95, calibration): the value returned for quantile q has true
+rank within ``q·N ± (2N/T + slack)``.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_exact, cdf_interp, merge_list, quantile
+
+settings.register_profile("ci", deadline=None, max_examples=40)
+settings.load_profile("ci")
+
+
+@st.composite
+def merged_case(draw):
+    k = draw(st.integers(1, 6))
+    T = draw(st.integers(8, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    q = draw(st.floats(0.05, 0.95))
+    rng = np.random.default_rng(seed)
+    parts = [
+        (rng.gumbel(size=int(rng.integers(T, 800))) * rng.uniform(0.5, 3)).astype(
+            np.float32
+        )
+        for _ in range(k)
+    ]
+    return parts, T, q
+
+
+@given(merged_case())
+def test_quantile_rank_error(args):
+    parts, T, q = args
+    hs = [build_exact(jnp.asarray(p), T) for p in parts]
+    merged = merge_list(hs, min(T, 32))
+    pooled = np.sort(np.concatenate(parts))
+    n = len(pooled)
+    v = float(quantile(merged, jnp.float32(q)))
+    rank = np.searchsorted(pooled, v)
+    bound = 2 * n / T + 2 * len(parts) + 1
+    assert abs(rank - q * n) <= bound, (rank, q * n, bound)
+
+
+@given(merged_case())
+def test_cdf_interp_rank_error(args):
+    parts, T, q = args
+    hs = [build_exact(jnp.asarray(p), T) for p in parts]
+    merged = merge_list(hs, min(T, 32))
+    pooled = np.sort(np.concatenate(parts))
+    n = len(pooled)
+    # probe the CDF at an actual data value
+    x = pooled[int(q * (n - 1))]
+    est = float(cdf_interp(merged, jnp.float32(x)))
+    true = np.searchsorted(pooled, x, side="left")
+    bound = 2 * n / T + 2 * len(parts) + 1
+    # interpolation can only help vs the left-collapse bound at boundaries;
+    # allow the same slack
+    assert abs(est - true) <= bound + np.sum(pooled == x), (est, true, bound)

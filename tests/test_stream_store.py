@@ -1,0 +1,92 @@
+"""HistogramStore — the paper's Summarizer/Merger framework behaviours."""
+import numpy as np
+import pytest
+
+from repro.core import HistogramStore, build_exact, quantile
+
+
+def make_store(tmp_path=None, days=10, n=2000, T=256, seed=0):
+    rng = np.random.default_rng(seed)
+    store = HistogramStore(num_buckets=T)
+    all_vals = []
+    for d in range(days):
+        v = rng.gumbel(loc=d * 0.1, size=n).astype(np.float32)
+        store.ingest(d, v)
+        all_vals.append(v)
+    return store, all_vals
+
+
+def test_ingest_and_query_interval():
+    store, vals = make_store()
+    h, eps = store.query(2, 6, beta=64)
+    n = 5 * 2000
+    assert float(np.asarray(h.sizes).sum()) == n
+    assert np.abs(np.asarray(h.sizes) - n / 64).max() <= eps
+
+
+def test_eps_guarantee_reported():
+    store, _ = make_store(T=512)
+    _, eps = store.query(0, 9, beta=64)
+    assert eps == pytest.approx(2 * 20000 / 512 + 2 * 10)
+
+
+def test_p95_latency_query():
+    """The paper's motivating question: p95 over any time interval."""
+    store, vals = make_store(days=30, T=512, seed=3)
+    got = store.quantile_query(0, 29, 0.95)
+    true = np.quantile(np.concatenate(vals), 0.95)
+    pooled = np.sort(np.concatenate(vals))
+    # rank error bound: 2N/T (+slack) → translate to value tolerance
+    r = np.searchsorted(pooled, got)
+    assert abs(r - 0.95 * len(pooled)) <= 2 * len(pooled) / 512 + 2 * 30 + 2
+
+
+def test_missing_partition_strict_raises():
+    store, _ = make_store(days=5)
+    del store.summaries[2]
+    with pytest.raises(KeyError):
+        store.query(0, 4, beta=16)
+
+
+def test_missing_partition_graceful_degradation():
+    store, _ = make_store(days=5)
+    del store.summaries[2]
+    h, eps = store.query(0, 4, beta=16, strict=False)
+    assert float(np.asarray(h.sizes).sum()) == 4 * 2000  # 4 of 5 summaries
+
+
+def test_persistence_roundtrip(tmp_path):
+    store, _ = make_store(days=4)
+    path = str(tmp_path / "summaries.npz")
+    store.save(path)
+    loaded = HistogramStore.load(path)
+    assert loaded.ids() == store.ids()
+    h1, _ = store.query(0, 3, beta=32)
+    h2, _ = loaded.query(0, 3, beta=32)
+    np.testing.assert_allclose(np.asarray(h1.boundaries), np.asarray(h2.boundaries))
+    np.testing.assert_allclose(np.asarray(h1.sizes), np.asarray(h2.sizes))
+
+
+def test_incremental_ingest_matches_batch():
+    """Summaries are per-partition: ingest order must not matter."""
+    rng = np.random.default_rng(5)
+    vs = [rng.normal(size=500).astype(np.float32) for _ in range(6)]
+    s1 = HistogramStore(num_buckets=128)
+    for i, v in enumerate(vs):
+        s1.ingest(i, v)
+    s2 = HistogramStore(num_buckets=128)
+    for i in reversed(range(6)):
+        s2.ingest(i, vs[i])
+    h1, _ = s1.query(0, 5, beta=32)
+    h2, _ = s2.query(0, 5, beta=32)
+    np.testing.assert_allclose(np.asarray(h1.boundaries), np.asarray(h2.boundaries))
+
+
+def test_ingest_external_summary():
+    store = HistogramStore(num_buckets=64)
+    v = np.random.default_rng(6).normal(size=1000).astype(np.float32)
+    import jax.numpy as jnp
+
+    store.ingest_summary(0, build_exact(jnp.asarray(v), 64))
+    h, _ = store.query(0, 0, beta=16)
+    assert float(np.asarray(h.sizes).sum()) == 1000

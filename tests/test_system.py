@@ -1,0 +1,61 @@
+"""End-to-end behaviour of the full system (paper framework + LM trainer)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HistogramStore, build_exact, merge_list, quantile,
+    boundary_error, empirical_size_error, sample_histogram,
+)
+
+
+def test_paper_end_to_end_log_analytics():
+    """The paper's deployment: daily summaries → on-demand interval query,
+    merge beats corrected tuple sampling at equal summary size."""
+    rng = np.random.default_rng(0)
+    days, per_day, T, beta = 14, 20_000, 2032, 254
+    store = HistogramStore(num_buckets=T)
+    all_vals = []
+    for d in range(days):
+        v = rng.gumbel(loc=0.05 * d, scale=1 + 0.02 * d, size=per_day)
+        v = v.astype(np.float32)
+        store.ingest(d, v)
+        all_vals.append(v)
+    pooled = jnp.asarray(np.concatenate(all_vals))
+    exact = build_exact(pooled, beta)
+
+    merged, eps = store.query(0, days - 1, beta)
+    mu_s_merge = float(empirical_size_error(merged, pooled))
+    mu_b_merge = float(boundary_error(merged, exact))
+
+    tup = sample_histogram(pooled, beta, days * T, jax.random.PRNGKey(0))
+    mu_s_tuple = float(empirical_size_error(tup, pooled))
+    mu_b_tuple = float(boundary_error(tup, exact))
+
+    # paper Fig. 14-17: merge beats tuple on both errors
+    assert mu_s_merge < mu_s_tuple, (mu_s_merge, mu_s_tuple)
+    assert mu_b_merge < mu_b_tuple, (mu_b_merge, mu_b_tuple)
+    # and the guarantee holds
+    n = days * per_day
+    assert np.abs(np.asarray(merged.sizes) - n / beta).max() <= eps
+
+
+def test_p95_monitoring_scenario():
+    """95th-percentile latency across servers for any window (paper §1)."""
+    rng = np.random.default_rng(1)
+    store = HistogramStore(num_buckets=512)
+    true = []
+    for day in range(30):
+        lat = rng.lognormal(-1.5, 0.6, size=5000).astype(np.float32)
+        store.ingest(day, lat)
+        true.append(lat)
+    # christmas-week query
+    got = float(store.quantile_query(21, 27, 0.95))
+    ref = float(np.quantile(np.concatenate(true[21:28]), 0.95))
+    assert got == pytest.approx(ref, rel=0.05)
+
+
+def test_quickstart_module_runs():
+    import examples.quickstart as q
+    q.main()
