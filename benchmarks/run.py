@@ -6,13 +6,14 @@
   * error_vs_days     — paper Figures 16 & 17 (error vs merged interval)
   * table2_runtimes   — paper Table 2 (summarize/merge/sample timings)
   * core_micro        — core-primitive microbenchmarks
+  * interval_query    — flat vs segment-tree Merger (latency, qps, ε bound)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
 import sys
 
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
-from benchmarks import roofline_report
+from benchmarks import interval_query, roofline_report
 
 
 def main() -> None:
@@ -30,6 +31,7 @@ def main() -> None:
         "error_vs_days": error_vs_days.main,
         "table2": table2_runtimes.main,
         "core_micro": core_micro.main,
+        "interval_query": interval_query.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -38,9 +38,25 @@ __all__ = [
     "gather_and_merge",
     "distributed_histogram",
     "hierarchical_device_summary",
+    "hierarchical_eps_bound",
     "distributed_histogram_hierarchical",
     "tensor_histogram_in_step",
 ]
+
+
+def hierarchical_eps_bound(
+    n: int,
+    T_levels: Sequence[int],
+    merges_k: Sequence[int] = (),
+) -> float:
+    """Composed Theorem-1 bound for a multi-level merge hierarchy.
+
+    ``ε_total < 2N · Σ_level 1/T_level`` plus ``2k`` integer slack per merge
+    of ``k`` inputs — the recursion used tile → device → pod here and across
+    time by the segment-tree interval engine (``core/interval_tree.py``).
+    """
+    eps = 2.0 * n * sum(1.0 / T for T in T_levels)
+    return eps + 2.0 * sum(merges_k)
 
 
 def local_summarize(x_local: jax.Array, T: int) -> Histogram:
@@ -102,10 +118,20 @@ def hierarchical_device_summary(
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
-    # jax.shard_map is the public API from 0.4.35 on; check_vma=False because
-    # the merged output is replicated by construction (post-all_gather).
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    # Replication checking is off (check_vma / legacy check_rep) because the
+    # merged output is replicated by construction (post-all_gather).
+    if hasattr(jax, "shard_map"):  # public API from jax 0.5 on
+        return jax.shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )
 
 

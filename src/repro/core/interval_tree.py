@@ -1,0 +1,510 @@
+"""Segment-tree interval engine over stored partition summaries.
+
+Why a tree
+----------
+The paper's Merger answers "equi-depth histogram over partitions lo..hi" by
+merging the stored per-partition ``T``-bucket summaries.  Done flat, every
+query re-merges the whole window: ``O(W)`` summaries sorted per query, and a
+fresh XLA compile for every distinct window length ``k`` (the ``(k, T+1)``
+merge shape is static).  This module maintains a power-of-two **segment
+tree** over the partition axis instead:
+
+    level 0   the stored leaf summaries (exact, ``T`` buckets)
+    level l   one pre-merged ``T_node``-bucket summary per aligned pair of
+              level-(l-1) nodes, i.e. node ``(l, i)`` summarizes partition
+              slots ``[i·2^l, (i+1)·2^l)``
+
+so any interval ``[lo, hi]`` decomposes into at most ``2·log2(W)`` canonical
+nodes (the classic bottom-up cover), and a query merges only those:
+``O(log W)`` summaries per query instead of ``O(W)``.  Node maintenance on
+ingest is ``O(log W)`` pairwise merges; bulk (re)builds batch each level into
+a single vmapped jitted merge.
+
+Composed error bound (paper Theorem 1, applied per level)
+---------------------------------------------------------
+Theorem 1: merging ``k`` *exact* ``T``-bucket histograms of ``N`` total
+values yields every bucket (and, Theorem 2, every contiguous bucket range)
+within ``ε < 2N/T`` of ideal; integer-rounded inputs (``T ∤ |P_i|``) add a
+``+2k`` slack.  The theorem composes recursively — the same fact the tile →
+device → pod hierarchy exploits in ``core/distributed.py``: if the ``k``
+inputs are themselves approximate with summary errors ``ε_i``, the output
+error is bounded by
+
+    ε_out  ≤  Σ_i ε_i  +  2N/T_in  +  2k                       (composition)
+
+because the merge is exact w.r.t. the *claimed* input masses (±2N/T_in + 2k)
+and the claims are off by at most Σ ε_i.  Each tree node therefore carries
+its own accumulated bound: leaves have ``ε = 0``; an internal node built
+from children with resolutions ``≥ T_in`` has
+
+    ε_node = ε_left + ε_right + 2·n_node/T_in + 4 .
+
+A query that merges canonical nodes {v} into β buckets reports
+
+    ε_total = Σ_v ε_v + 2N/min_v T_v + 2·|{v}|
+            < 2N · Σ_level 1/T_level  (+ integer slack),
+
+the ``ε_total < 2N·Σ_level 1/T_level`` form of the module header, with
+``T_level = T`` uniform giving ``ε_total < 2N·(1 + ⌈log2 W⌉)/T``.  Choosing
+``T_node = 2·T_leaf·…`` geometrically per level would make the sum converge
+to ``2·(2N/T_leaf)`` independent of depth at ``O(log W)`` extra memory per
+leaf — exposed via the ``T_node`` knob, see ROADMAP.
+
+What is (and is not) bit-exact
+------------------------------
+The paper's merge is *lossy* (left-collapse repositions mass), so a
+pre-merged internal node cannot reproduce the flat merge of its leaves
+bit-for-bit — that is exactly why ε composes per level instead of being flat
+``2N/T``.  What *is* bit-exact, proven below and asserted by
+``tests/test_interval_tree.py``:
+
+  * ``query`` ≡ ``merge_list`` over the selected canonical node summaries;
+  * ``query_many`` (which pads every query's node set to one static
+    ``(k_pad, T_pad)`` shape so a single jitted merge serves the whole
+    batch) ≡ per-query ``query``;
+  * intervals whose canonical cover is all leaves (single partition, or any
+    two-partition span crossing a pair boundary) ≡ the flat
+    ``merge_list`` over the raw leaf summaries.
+
+Padding invariance: inserting a zero-mass boundary at any value ``v`` inside
+``[min, max]`` of the pre-histogram leaves every output bit unchanged.  With
+the inserted element at sorted position ``p``, the cumulative array ``A``
+gains a duplicate of ``A[p-1]``; for each cut target ``t_j``, either
+``A[p-1] ≤ t_j`` (then ``cut_j`` shifts by exactly the one inserted slot and
+``pos[cut_j]`` is unchanged) or ``A[p-1] > t_j`` (then ``cut_j`` indexes the
+untouched prefix).  First/last output boundaries are the global min/max,
+which zero-mass interior padding cannot displace.  Hence both the per-node
+``T`` padding and the per-query ``k`` padding (rows of zero-mass duplicates
+of a real boundary) are bit-exact, and the engine can pad node sets to the
+next power of two for a bounded jit-cache footprint.
+
+Caching
+-------
+Answers are memoized in an LRU keyed ``(lo, hi, beta, version)`` where
+``version`` bumps on every mutation — the hot dashboards-asking-the-same-
+window path (millions of users, few distinct windows) is served from host
+memory without touching XLA at all.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.histogram import Histogram, merge
+
+__all__ = ["TreeNode", "IntervalTree", "canonical_decomposition"]
+
+
+@dataclass(frozen=True)
+class TreeNode:
+    """One tree node: a T-bucket summary plus its error-bound bookkeeping."""
+
+    boundaries: np.ndarray  # (T+1,) increasing
+    sizes: np.ndarray  # (T,)
+    n: float  # total summarized mass
+    eps: float  # accumulated Theorem-1 bound of this summary
+    leaves: int  # number of present leaf partitions beneath
+
+    @property
+    def num_buckets(self) -> int:
+        return self.sizes.shape[-1]
+
+    def to_histogram(self) -> Histogram:
+        import jax.numpy as jnp
+
+        return Histogram(
+            boundaries=jnp.asarray(self.boundaries),
+            sizes=jnp.asarray(self.sizes),
+        )
+
+
+def canonical_decomposition(lo: int, hi: int) -> list[tuple[int, int]]:
+    """Canonical segment-tree cover of leaf slots ``[lo, hi]`` (inclusive).
+
+    Returns ``(level, index)`` keys, left-to-right, where node ``(l, i)``
+    covers slots ``[i·2^l, (i+1)·2^l)``.  At most two nodes per level →
+    ``≤ 2·⌈log2(hi-lo+1)⌉ + 1`` nodes total.
+    """
+    left: list[tuple[int, int]] = []
+    right: list[tuple[int, int]] = []
+    l, r = lo, hi + 1  # half-open
+    level = 0
+    while l < r:
+        if l & 1:
+            left.append((level, l))
+            l += 1
+        if r & 1:
+            r -= 1
+            right.append((level, r))
+        l >>= 1
+        r >>= 1
+        level += 1
+    return left + right[::-1]
+
+
+@functools.partial(jax.jit, static_argnames=("beta",))
+def _merge_stacks(bounds: jax.Array, sizes: jax.Array, beta: int):
+    """Batched merge: ``(Q, k, T+1)``/``(Q, k, T)`` → ``(Q, β+1)``/``(Q, β)``.
+
+    One compile per static ``(Q, k, T, β)``; ``query`` pads ``k`` to a power
+    of two and ``query_many`` pads a whole batch to one shape, so the cache
+    stays small under production traffic.
+    """
+    return jax.vmap(lambda b, s: merge(Histogram(b, s), beta))(bounds, sizes)
+
+
+def _pad_summary(
+    b: np.ndarray, s: np.ndarray, T: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a summary to ``T`` buckets with zero-mass copies of its last
+    boundary — the (bit-exact, see module docstring) merge_list padding."""
+    pad = T - s.shape[-1]
+    if pad == 0:
+        return b, s
+    return (
+        np.concatenate([b, np.repeat(b[-1:], pad)]),
+        np.concatenate([s, np.zeros((pad,), s.dtype)]),
+    )
+
+
+class IntervalTree:
+    """Power-of-two segment tree of pre-merged partition summaries."""
+
+    def __init__(self, T_node: int, cache_size: int = 128):
+        if T_node < 1:
+            raise ValueError("T_node must be >= 1")
+        self.T_node = int(T_node)
+        self.levels = 0  # capacity = 2**levels leaf slots
+        self.base: int | None = None  # partition id of slot 0
+        self.nodes: dict[tuple[int, int], TreeNode] = {}
+        self.version = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._cache: OrderedDict[tuple, tuple[Histogram, float]] = (
+            OrderedDict()
+        )
+        self._cache_size = int(cache_size)
+
+    # ------------------------------------------------------------ structure
+    @property
+    def capacity(self) -> int:
+        return 1 << self.levels
+
+    def num_leaves(self) -> int:
+        return sum(1 for (lvl, _) in self.nodes if lvl == 0)
+
+    def _invalidate(self) -> None:
+        self.version += 1
+        self._cache.clear()
+
+    # ---------------------------------------------------------- maintenance
+    def set_leaf(self, partition_id: int, boundaries, sizes) -> None:
+        """Insert/replace one leaf and refresh its ``O(log W)`` ancestors."""
+        pid = int(partition_id)
+        if self.base is None:
+            self.base = pid
+        if pid < self.base:
+            self._rebase(pid)
+        slot = pid - self.base
+        grew = False
+        while slot >= self.capacity:
+            self.levels += 1
+            grew = True
+        b = np.asarray(boundaries, np.float32)
+        s = np.asarray(sizes, np.float32)
+        self.nodes[(0, slot)] = TreeNode(b, s, float(s.sum()), 0.0, 1)
+        self._pull_up(slot)
+        if grew:
+            # growth re-roots: the old root gains new ancestors on slot 0's
+            # path (which _pull_up(slot) only shares from some level up).
+            self._pull_up(0)
+        self._invalidate()
+
+    def adopt_leaf_arrays(self, partition_id: int, boundaries, sizes) -> bool:
+        """Re-point a leaf at equal-valued external arrays without recompute.
+
+        Used after :meth:`from_state` so tree leaves share storage with the
+        caller's summary rows — pointer-identity staleness checks then pass
+        without re-merging anything.  Returns False (no-op) when the leaf is
+        absent or the arrays don't match the stored values.
+        """
+        if self.base is None:
+            return False
+        key = (0, int(partition_id) - self.base)
+        nd = self.nodes.get(key)
+        if (
+            nd is None
+            or not isinstance(boundaries, np.ndarray)
+            or not isinstance(sizes, np.ndarray)
+            or boundaries.dtype != nd.boundaries.dtype
+            or not np.array_equal(boundaries, nd.boundaries)
+            or not np.array_equal(sizes, nd.sizes)
+        ):
+            return False
+        self.nodes[key] = TreeNode(
+            boundaries, sizes, nd.n, nd.eps, nd.leaves
+        )
+        return True
+
+    def _pull_up(self, slot: int) -> None:
+        idx = slot
+        for level in range(1, self.levels + 1):
+            idx >>= 1
+            self._update(level, idx)
+
+    def _update(self, level: int, idx: int) -> None:
+        c0 = self.nodes.get((level - 1, 2 * idx))
+        c1 = self.nodes.get((level - 1, 2 * idx + 1))
+        key = (level, idx)
+        if c0 is None and c1 is None:
+            self.nodes.pop(key, None)
+        elif c0 is None or c1 is None:
+            # single child: share its summary — no merge, no added error
+            self.nodes[key] = c0 if c1 is None else c1
+        else:
+            self.nodes[key] = self._merge_pair(c0, c1)
+
+    def _merge_pair(self, c0: TreeNode, c1: TreeNode) -> TreeNode:
+        T_max = max(c0.num_buckets, c1.num_buckets)
+        bs, ss = zip(
+            _pad_summary(c0.boundaries, c0.sizes, T_max),
+            _pad_summary(c1.boundaries, c1.sizes, T_max),
+        )
+        bo, so = _merge_stacks(
+            np.stack(bs)[None], np.stack(ss)[None], self.T_node
+        )
+        n = c0.n + c1.n
+        T_in = min(c0.num_buckets, c1.num_buckets)
+        eps = c0.eps + c1.eps + 2.0 * n / T_in + 4.0
+        return TreeNode(
+            boundaries=np.asarray(bo[0]),
+            sizes=np.asarray(so[0]),
+            n=n,
+            eps=eps,
+            leaves=c0.leaves + c1.leaves,
+        )
+
+    def _rebase(self, new_base: int) -> None:
+        """A partition id below ``base`` arrived: shift every slot (rare)."""
+        leaves = {
+            self.base + slot: nd
+            for (lvl, slot), nd in self.nodes.items()
+            if lvl == 0
+        }
+        self.base = new_base
+        self.rebuild(
+            {pid: (nd.boundaries, nd.sizes) for pid, nd in leaves.items()}
+        )
+
+    def rebuild(self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]) -> None:
+        """Bulk (re)build from ``{partition_id: (boundaries, sizes)}``.
+
+        Level-by-level: all sibling pairs of a level go through *one*
+        vmapped jitted merge, so a ``W``-partition build costs ``log2 W``
+        XLA dispatches instead of ``W·log2 W`` (the incremental path's
+        cost when used for bulk loads).
+        """
+        self.nodes = {}
+        self._invalidate()
+        if not leaves:
+            self.base = None
+            self.levels = 0
+            return
+        pids = sorted(leaves)
+        if self.base is None or pids[0] < self.base:
+            self.base = pids[0]
+        span = pids[-1] - self.base + 1
+        self.levels = (span - 1).bit_length() if span > 1 else 0
+        for pid in pids:
+            b = np.asarray(leaves[pid][0], np.float32)
+            s = np.asarray(leaves[pid][1], np.float32)
+            self.nodes[(0, pid - self.base)] = TreeNode(
+                b, s, float(s.sum()), 0.0, 1
+            )
+        for level in range(1, self.levels + 1):
+            parents = sorted(
+                {idx >> 1 for (lvl, idx) in self.nodes if lvl == level - 1}
+            )
+            pairs = [
+                i
+                for i in parents
+                if (level - 1, 2 * i) in self.nodes
+                and (level - 1, 2 * i + 1) in self.nodes
+            ]
+            singles = [i for i in parents if i not in set(pairs)]
+            for i in singles:
+                self._update(level, i)
+            if not pairs:
+                continue
+            kids = [
+                (self.nodes[(level - 1, 2 * i)], self.nodes[(level - 1, 2 * i + 1)])
+                for i in pairs
+            ]
+            T_max = max(max(a.num_buckets, b.num_buckets) for a, b in kids)
+            bs = np.stack(
+                [
+                    np.stack(
+                        [
+                            _pad_summary(c.boundaries, c.sizes, T_max)[0]
+                            for c in pair
+                        ]
+                    )
+                    for pair in kids
+                ]
+            )
+            ss = np.stack(
+                [
+                    np.stack(
+                        [
+                            _pad_summary(c.boundaries, c.sizes, T_max)[1]
+                            for c in pair
+                        ]
+                    )
+                    for pair in kids
+                ]
+            )
+            bo, so = _merge_stacks(bs, ss, self.T_node)
+            bo, so = np.asarray(bo), np.asarray(so)
+            for row, i in enumerate(pairs):
+                c0, c1 = kids[row]
+                n = c0.n + c1.n
+                T_in = min(c0.num_buckets, c1.num_buckets)
+                self.nodes[(level, i)] = TreeNode(
+                    boundaries=bo[row],
+                    sizes=so[row],
+                    n=n,
+                    eps=c0.eps + c1.eps + 2.0 * n / T_in + 4.0,
+                    leaves=c0.leaves + c1.leaves,
+                )
+
+    # -------------------------------------------------------------- queries
+    def decompose(self, lo: int, hi: int) -> list[tuple[int, int]]:
+        """Present canonical node keys covering partition ids ``lo..hi``."""
+        if self.base is None:
+            return []
+        s_lo = max(int(lo) - self.base, 0)
+        s_hi = min(int(hi) - self.base, self.capacity - 1)
+        if s_hi < s_lo:
+            return []
+        return [
+            k for k in canonical_decomposition(s_lo, s_hi) if k in self.nodes
+        ]
+
+    def _selected(self, lo: int, hi: int) -> list[TreeNode]:
+        sel = [self.nodes[k] for k in self.decompose(lo, hi)]
+        if not sel:
+            raise KeyError("no partition summaries in requested interval")
+        return sel
+
+    @staticmethod
+    def _eps_of(sel: Sequence[TreeNode]) -> float:
+        n = sum(nd.n for nd in sel)
+        T_in = min(nd.num_buckets for nd in sel)
+        return float(
+            sum(nd.eps for nd in sel) + 2.0 * n / T_in + 2.0 * len(sel)
+        )
+
+    @staticmethod
+    def _pack(
+        rows: Sequence[Sequence[TreeNode]],
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Stack per-query node sets into one ``(Q, k_pad, T_pad)`` block.
+
+        ``k`` pads to the next power of two with rows of zero-mass copies of
+        a real boundary; ``T`` pads merge_list-style.  Both are bit-exact
+        (module docstring).
+        """
+        k_max = max(len(r) for r in rows)
+        k_pad = 1 << (k_max - 1).bit_length() if k_max > 1 else 1
+        T_pad = max(nd.num_buckets for r in rows for nd in r)
+        Q = len(rows)
+        bounds = np.empty((Q, k_pad, T_pad + 1), np.float32)
+        sizes = np.zeros((Q, k_pad, T_pad), np.float32)
+        for qi, r in enumerate(rows):
+            for ki, nd in enumerate(r):
+                b, s = _pad_summary(nd.boundaries, nd.sizes, T_pad)
+                bounds[qi, ki] = b
+                sizes[qi, ki] = s
+            # zero-mass pad rows at a real boundary value of this query
+            bounds[qi, len(r) :] = r[-1].boundaries[-1]
+        return bounds, sizes
+
+    def query(self, lo: int, hi: int, beta: int) -> tuple[Histogram, float]:
+        """β-bucket histogram over ``lo..hi`` plus its composed ``ε_total``.
+
+        Merges only the ``≤ 2·log2 W`` canonical node summaries; answers are
+        LRU-cached until the next mutation.
+        """
+        key = (int(lo), int(hi), int(beta), self.version)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        sel = self._selected(lo, hi)
+        bounds, sizes = self._pack([sel])
+        bo, so = _merge_stacks(bounds, sizes, int(beta))
+        out = (Histogram(bo[0], so[0]), self._eps_of(sel))
+        self._cache[key] = out
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return out
+
+    def query_many(
+        self, intervals: Sequence[tuple[int, int]], beta: int
+    ) -> list[tuple[Histogram, float]]:
+        """Answer many interval queries with one jitted merge dispatch.
+
+        All node sets are padded to a single static ``(k_pad, T_pad)`` shape
+        so the whole batch — the concurrent-dashboard path — is served by a
+        single XLA program regardless of the mix of window lengths.
+        """
+        if not intervals:
+            return []
+        sels = [self._selected(lo, hi) for lo, hi in intervals]
+        bounds, sizes = self._pack(sels)
+        bo, so = _merge_stacks(bounds, sizes, int(beta))
+        return [
+            (Histogram(bo[i], so[i]), self._eps_of(sel))
+            for i, sel in enumerate(sels)
+        ]
+
+    # ---------------------------------------------------------- persistence
+    def state(self) -> tuple[dict, dict[str, np.ndarray]]:
+        """(json-able meta, arrays) for npz persistence of the tree nodes."""
+        meta = {
+            "T_node": self.T_node,
+            "base": self.base,
+            "levels": self.levels,
+            "nodes": [
+                [lvl, idx, nd.n, nd.eps, nd.leaves]
+                for (lvl, idx), nd in sorted(self.nodes.items())
+            ],
+        }
+        arrays = {}
+        for (lvl, idx), nd in self.nodes.items():
+            arrays[f"tb_{lvl}_{idx}"] = nd.boundaries
+            arrays[f"ts_{lvl}_{idx}"] = nd.sizes
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays, cache_size: int = 128):
+        tree = cls(int(meta["T_node"]), cache_size=cache_size)
+        tree.base = None if meta["base"] is None else int(meta["base"])
+        tree.levels = int(meta["levels"])
+        for lvl, idx, n, eps, leaves in meta["nodes"]:
+            lvl, idx = int(lvl), int(idx)
+            tree.nodes[(lvl, idx)] = TreeNode(
+                boundaries=np.asarray(arrays[f"tb_{lvl}_{idx}"], np.float32),
+                sizes=np.asarray(arrays[f"ts_{lvl}_{idx}"], np.float32),
+                n=float(n),
+                eps=float(eps),
+                leaves=int(leaves),
+            )
+        return tree

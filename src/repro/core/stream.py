@@ -11,6 +11,14 @@ This module is the host-side control plane of that framework:
   * ``HistogramStore.query(lo, hi, beta)``           — the Merger job
   * npz persistence                                   — the HDFS summary files
 
+The Merger runs on a **segment-tree interval engine** by default
+(``core/interval_tree.py``): internal tree nodes hold pre-merged summaries,
+so a query merges ``O(log W)`` node summaries instead of re-merging the whole
+``O(W)`` window flat, answers are LRU-cached per store version, and
+``query_many`` serves a whole batch of concurrent interval queries with one
+static-shape jitted merge.  ``engine="flat"`` keeps the paper-literal path
+(and its tighter single-level bound) for comparison and benchmarks.
+
 It is deliberately NumPy/host-resident (like the NameNode metadata path);
 the heavy lifting — per-partition sort — runs through the jitted JAX
 ``build_exact`` (or the distributed/hierarchical variants for sharded
@@ -23,7 +31,7 @@ import json
 import os
 import tempfile
 from dataclasses import dataclass, field
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import jax
 import numpy as np
@@ -35,6 +43,7 @@ from repro.core.histogram import (
     quantile,
     theoretical_eps_max,
 )
+from repro.core.interval_tree import IntervalTree
 
 __all__ = ["StoredSummary", "HistogramStore"]
 
@@ -61,42 +70,117 @@ class HistogramStore:
 
     num_buckets: int  # T — summary resolution; pick T ≥ 40·β for ≤5 % error
     summaries: dict[int, StoredSummary] = field(default_factory=dict)
+    engine: str = "tree"  # default Merger path: "tree" | "flat"
+    T_node: int | None = None  # internal-node resolution (default: T)
+    cache_size: int = 128  # LRU capacity of the tree's answer cache
+    _tree: IntervalTree = field(init=False, repr=False, default=None)
+
+    def __post_init__(self) -> None:
+        self._tree = IntervalTree(
+            self.T_node or self.num_buckets, cache_size=self.cache_size
+        )
+        for pid, s in self.summaries.items():
+            self._tree.set_leaf(pid, s.boundaries, s.sizes)
+
+    @property
+    def version(self) -> int:
+        """Bumps on every mutation — keys the interval engine's LRU cache."""
+        return self._tree.version
 
     # ----------------------------------------------------------- Summarizer
-    def ingest(self, partition_id: int, values) -> StoredSummary:
-        """Summarize one new partition (the scheduled Summarizer job)."""
+    def _summarize(self, partition_id: int, values) -> StoredSummary:
         values = np.asarray(values).reshape(-1)
         T = min(self.num_buckets, values.shape[0])
         h = build_exact(jax.numpy.asarray(values), T)
-        summ = StoredSummary(
+        return StoredSummary(
             partition_id=int(partition_id),
             n=int(values.shape[0]),
             boundaries=np.asarray(h.boundaries),
             sizes=np.asarray(h.sizes),
         )
-        self.summaries[int(partition_id)] = summ
+
+    def ingest(self, partition_id: int, values) -> StoredSummary:
+        """Summarize one new partition (the scheduled Summarizer job)."""
+        summ = self._summarize(partition_id, values)
+        self._put(summ)
         return summ
 
     def ingest_summary(self, partition_id: int, hist: Histogram) -> None:
         """Store an externally-built summary (e.g. from the distributed or
         Pallas tile path) — the framework does not care who summarized."""
-        self.summaries[int(partition_id)] = StoredSummary(
-            partition_id=int(partition_id),
-            n=int(np.asarray(hist.sizes).sum()),
-            boundaries=np.asarray(hist.boundaries),
-            sizes=np.asarray(hist.sizes),
+        self._put(
+            StoredSummary(
+                partition_id=int(partition_id),
+                n=int(np.asarray(hist.sizes).sum()),
+                boundaries=np.asarray(hist.boundaries),
+                sizes=np.asarray(hist.sizes),
+            )
         )
+
+    def ingest_many(self, partitions: dict[int, "np.ndarray"]) -> None:
+        """Bulk-summarize many partitions, then build the tree level-batched
+        (``log W`` XLA dispatches) instead of per-ingest incremental."""
+        for pid, values in partitions.items():
+            summ = self._summarize(pid, values)
+            self.summaries[summ.partition_id] = summ
+        self.rebuild_tree()
+
+    def _put(self, summ: StoredSummary) -> None:
+        self.summaries[summ.partition_id] = summ
+        self._tree.set_leaf(summ.partition_id, summ.boundaries, summ.sizes)
+
+    def rebuild_tree(self) -> None:
+        self._tree.rebuild(
+            {p: (s.boundaries, s.sizes) for p, s in self.summaries.items()}
+        )
+
+    def _sync_tree(self, ids: list[int], lo: int, hi: int) -> None:
+        """Re-sync after direct ``summaries`` dict mutation (the documented
+        summary-loss idiom ``del store.summaries[pid]``, or outright row
+        replacement).  Every tree leaf shares its arrays with the stored
+        summary, so staleness detection is an O(interval) pointer-identity
+        scan — the price of supporting raw dict mutation on the hot path;
+        callers that only mutate through ingest* never trigger a rebuild.
+        Replaced leaves are re-pointed incrementally (O(log W) merges each);
+        deletions rebuild level-batched."""
+        tree = self._tree
+        stale = []
+        for pid in ids:
+            node = None
+            if tree.base is not None and 0 <= pid - tree.base < tree.capacity:
+                node = tree.nodes.get((0, pid - tree.base))
+            s = self.summaries[pid]
+            if (
+                node is None
+                or node.boundaries is not s.boundaries
+                or node.sizes is not s.sizes
+            ):
+                stale.append(pid)
+        for pid in stale:
+            s = self.summaries[pid]
+            tree.set_leaf(pid, s.boundaries, s.sizes)
+        sel = tree.decompose(lo, hi)
+        if sum(tree.nodes[k].leaves for k in sel) != len(ids):
+            self.rebuild_tree()  # leaves were deleted from the dict
 
     # --------------------------------------------------------------- Merger
     def query(
-        self, lo: int, hi: int, beta: int, *, strict: bool = True
+        self,
+        lo: int,
+        hi: int,
+        beta: int,
+        *,
+        strict: bool = True,
+        engine: str | None = None,
     ) -> tuple[Histogram, float]:
         """β-bucket histogram over partitions ``lo..hi`` (inclusive).
 
-        Returns ``(histogram, eps_max)`` where ``eps_max`` is the paper's
-        guaranteed maximum bucket/range-size error for this answer.  With
-        ``strict=False`` missing partitions are skipped (summary-loss
-        tolerance: a lost shard degrades the answer instead of failing it).
+        Returns ``(histogram, eps_max)`` where ``eps_max`` is the guaranteed
+        maximum bucket/range-size error of *this* answer: the segment-tree
+        engine reports its composed per-level bound, the flat engine the
+        paper's single-level ``2N/T + 2k``.  With ``strict=False`` missing
+        partitions are skipped (summary-loss tolerance: a lost shard degrades
+        the answer instead of failing it).
         """
         ids = [i for i in range(lo, hi + 1) if i in self.summaries]
         if strict and len(ids) != hi - lo + 1:
@@ -104,6 +188,9 @@ class HistogramStore:
             raise KeyError(f"missing partition summaries: {missing}")
         if not ids:
             raise KeyError("no partition summaries in requested interval")
+        if (engine or self.engine) == "tree":
+            self._sync_tree(ids, lo, hi)
+            return self._tree.query(lo, hi, beta)
         hs = [self.summaries[i].to_histogram() for i in ids]
         merged = merge_list(hs, beta)
         n = sum(self.summaries[i].n for i in ids)
@@ -111,6 +198,29 @@ class HistogramStore:
             n, self.num_buckets, k=len(ids), exact_inputs=False
         )
         return merged, eps
+
+    def query_many(
+        self,
+        intervals: Sequence[tuple[int, int]],
+        beta: int,
+        *,
+        strict: bool = True,
+    ) -> list[tuple[Histogram, float]]:
+        """Answer a batch of interval queries with one jitted merge.
+
+        The serving path for many concurrent users: every query's canonical
+        node set is padded to one static shape, so the whole batch costs a
+        single XLA dispatch regardless of the mix of window lengths.
+        ``strict`` behaves exactly as in :meth:`query` (and defaults the
+        same way): missing partitions raise unless ``strict=False``.
+        """
+        for lo, hi in intervals:
+            ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+            if strict and len(ids) != hi - lo + 1:
+                missing = sorted(set(range(lo, hi + 1)) - set(ids))
+                raise KeyError(f"missing partition summaries: {missing}")
+            self._sync_tree(ids, lo, hi)
+        return self._tree.query_many(intervals, beta)
 
     def quantile_query(
         self, lo: int, hi: int, q, beta: int | None = None
@@ -123,12 +233,23 @@ class HistogramStore:
 
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
-        """Atomic write (tmpfile + rename) — summary files survive crashes."""
+        """Atomic write (tmpfile + rename) — summary files survive crashes.
+
+        Persists the pre-merged tree nodes next to the leaf summaries so a
+        reloaded store serves interval queries without re-merging anything.
+        """
         payload = {}
-        meta = {"num_buckets": self.num_buckets, "ids": sorted(self.summaries)}
+        tree_meta, tree_arrays = self._tree.state()
+        meta = {
+            "num_buckets": self.num_buckets,
+            "ids": sorted(self.summaries),
+            "n": {str(p): s.n for p, s in self.summaries.items()},
+            "tree": tree_meta,
+        }
         for pid, s in self.summaries.items():
             payload[f"b_{pid}"] = s.boundaries
             payload[f"s_{pid}"] = s.sizes
+        payload.update(tree_arrays)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
         os.close(fd)
@@ -145,10 +266,20 @@ class HistogramStore:
             s = data[f"s_{pid}"]
             store.summaries[int(pid)] = StoredSummary(
                 partition_id=int(pid),
-                n=int(s.sum()),
+                n=int(meta.get("n", {}).get(str(pid), s.sum())),
                 boundaries=b,
                 sizes=s,
             )
+        if "tree" in meta:  # restore pre-merged nodes — no re-merge on load
+            store._tree = IntervalTree.from_state(
+                meta["tree"], data, cache_size=store.cache_size
+            )
+            # share leaf storage with the summary rows so _sync_tree's
+            # pointer-identity staleness scan passes without re-merging
+            for pid, s in store.summaries.items():
+                store._tree.adopt_leaf_arrays(pid, s.boundaries, s.sizes)
+        else:  # summary file from an older layout: rebuild level-batched
+            store.rebuild_tree()
         return store
 
     # ------------------------------------------------------------- utility
@@ -158,3 +289,10 @@ class HistogramStore:
     def total_n(self, ids: Iterable[int] | None = None) -> int:
         ids = list(ids) if ids is not None else self.ids()
         return sum(self.summaries[i].n for i in ids)
+
+    def cache_stats(self) -> dict[str, int]:
+        return {
+            "hits": self._tree.cache_hits,
+            "misses": self._tree.cache_misses,
+            "version": self._tree.version,
+        }

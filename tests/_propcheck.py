@@ -1,0 +1,190 @@
+"""Seeded, deterministic, dependency-free stand-in for `hypothesis`.
+
+The seed property suites (test_bounds, test_hierarchy, test_merge_equivalence,
+test_quantile_bounds, test_interval_tree) use a small slice of the hypothesis
+API: ``@given``, ``settings`` profiles, and the ``integers`` / ``floats`` /
+``sampled_from`` / ``composite`` strategies.  This module implements exactly
+that slice on top of ``numpy.random.default_rng`` so the quality-guarantee
+tests run on machines without hypothesis installed.
+
+``tests/conftest.py`` registers this module as ``hypothesis`` in
+``sys.modules`` *only when the real package is absent* — real hypothesis is
+always preferred when installed.
+
+Determinism: every test draws its cases from a PRNG seeded by the test's
+qualified name and the case index, so failures reproduce across runs and
+machines and do not depend on test execution order.
+"""
+from __future__ import annotations
+
+import hashlib
+import types
+
+import numpy as np
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current case."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    """A strategy is just a sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def sample(rng):
+            for _ in range(100):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption()
+
+        return SearchStrategy(sample)
+
+
+def _integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1))
+    )
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(elements) -> SearchStrategy:
+    elems = list(elements)
+    return SearchStrategy(lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+
+def _lists(elem: SearchStrategy, min_size=0, max_size=10) -> SearchStrategy:
+    def sample(rng):
+        k = int(rng.integers(min_size, max_size + 1))
+        return [elem.example(rng) for _ in range(k)]
+
+    return SearchStrategy(sample)
+
+
+def _composite(fn):
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    def make(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+
+        return SearchStrategy(sample)
+
+    make.__name__ = getattr(fn, "__name__", "composite")
+    return make
+
+
+# the `hypothesis.strategies` namespace (registered in sys.modules by conftest)
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.composite = _composite
+strategies.SearchStrategy = SearchStrategy
+
+
+class settings:
+    """Profile registry — only ``max_examples`` is honoured; ``deadline`` and
+    other keywords are accepted and ignored (we never time tests out)."""
+
+    _profiles: dict[str, dict] = {"default": {"max_examples": 50}}
+    _current: dict = _profiles["default"]
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, test):  # used as a decorator: @settings(...)
+        test._propcheck_settings = self._kwargs
+        return test
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles[name]
+
+
+class HealthCheck:  # accepted for API compatibility, never enforced
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Deterministic ``@given``: run the test on ``max_examples`` drawn cases.
+
+    The wrapper takes no parameters (mirroring real hypothesis, whose wrapper
+    supplies all strategy-bound arguments itself) so pytest does not mistake
+    the test's argument names for fixtures.
+    """
+
+    def decorate(test):
+        def run():
+            overrides = getattr(test, "_propcheck_settings", {})
+            n = overrides.get(
+                "max_examples", settings._current.get("max_examples", 50)
+            )
+            seed = int.from_bytes(
+                hashlib.sha256(
+                    f"{test.__module__}.{test.__qualname__}".encode()
+                ).digest()[:4],
+                "big",
+            )
+            for case in range(n):
+                rng = np.random.default_rng((seed, case))
+                args, kwargs = (), {}
+                try:
+                    args = [s.example(rng) for s in arg_strategies]
+                    kwargs = {
+                        k: s.example(rng) for k, s in kw_strategies.items()
+                    }
+                    test(*args, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (case {case} of {n}, seed "
+                        f"{seed}): args={args!r} kwargs={kwargs!r}: {e}"
+                    ) from e
+
+        run.__name__ = test.__name__
+        run.__doc__ = test.__doc__
+        run.__module__ = test.__module__
+        run.__qualname__ = test.__qualname__
+        run.is_hypothesis_test = True
+        return run
+
+    return decorate
+
+
+def example(*_a, **_k):  # @example pins are simply ignored
+    return lambda test: example and test
+
+
+def note(_msg) -> None:
+    pass

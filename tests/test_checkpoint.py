@@ -57,10 +57,9 @@ def test_elastic_restore_resharded(tmp_path):
     d = str(tmp_path)
     t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     save_checkpoint(d, 3, t)
-    mesh = jax.make_mesh(
-        (len(jax.devices()), 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", None)
     )} if len(jax.devices()) in (1, 2, 4) else None

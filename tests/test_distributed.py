@@ -26,7 +26,8 @@ def test_distributed_histogram_matches_local():
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import distributed_histogram, build_exact, theoretical_eps_max
-mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,2), ("data","model"))
 rng = np.random.default_rng(0)
 N = 8*4000
 x = rng.gumbel(size=N).astype(np.float32)
@@ -40,12 +41,14 @@ print("OK")
 """)
 
 
+@pytest.mark.slow
 def test_hierarchical_pod_merge():
     run_with_devices("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import distributed_histogram_hierarchical
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 rng = np.random.default_rng(1)
 N = 8*4096
 x = rng.normal(size=N).astype(np.float32)
@@ -59,6 +62,7 @@ print("OK")
 """)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     """Same seed, same loss on a 4×2 mesh vs single device (SPMD sanity)."""
     code_tpl = """
@@ -80,7 +84,8 @@ batch = {
   "mask": jnp.ones((8, 32), jnp.float32),
 }
 if MESH:
-    mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,2), ("data","model"))
     rules = Rules(cfg, mesh, "train", seq_len=32)
     with mesh:
         step = jax.jit(make_train_step(cfg, OptimizerConfig(), rules))
@@ -97,11 +102,13 @@ print("LOSS", float(m["loss"]))
     assert abs(l1 - l2) < 5e-2, (l1, l2)
 
 
+@pytest.mark.slow
 def test_telemetry_quantile_clip_on_mesh():
     run_with_devices("""
 import jax, numpy as np, jax.numpy as jnp
 from repro.core.telemetry import grad_quantile
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(2)
 grads = {"a": jnp.asarray(rng.normal(size=(512, 16)), jnp.float32),
          "b": jnp.asarray(rng.normal(size=(1024,)), jnp.float32)}
@@ -116,6 +123,7 @@ print("OK")
 """)
 
 
+@pytest.mark.slow
 def test_production_mesh_shapes():
     run_with_devices("""
 from repro.launch.mesh import make_production_mesh

@@ -1,0 +1,259 @@
+"""Property tests for the segment-tree interval engine (core/interval_tree).
+
+Two families of guarantees (module docstring of interval_tree.py):
+
+* bit-exactness — the tree's ``query`` (and the batched, shape-padded
+  ``query_many``) answers are bit-identical to ``merge_list`` over the
+  selected canonical node summaries; when the canonical cover happens to be
+  all leaves, that *is* the flat merge over the raw per-partition summaries;
+* the composed error bound — the engine's reported ``ε_total`` dominates the
+  measured bucket error and every contiguous bucket-range error, both for
+  the *reported* sizes and the *true* pooled-value occupancy, across
+  randomized ingest orders, gap patterns, and window sizes including
+  single-partition and full-range queries.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HistogramStore, merge_list
+from repro.core.interval_tree import canonical_decomposition
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+@st.composite
+def store_case(draw):
+    W = draw(st.sampled_from([1, 2, 3, 5, 8, 13, 16, 33]))
+    # T and n are drawn from small quantized sets so jitted build/merge
+    # shapes repeat across cases (bounded compile time, same coverage)
+    T = draw(st.sampled_from([8, 32]))
+    beta = min(T, draw(st.sampled_from([1, 8, 31])))
+    seed = draw(st.integers(0, 2**31 - 1))
+    gappy = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    pids = list(range(W))
+    if gappy and W > 2:  # knock out up to W//3 partitions
+        keep = rng.choice(W, size=W - int(rng.integers(1, W // 3 + 1)),
+                          replace=False)
+        pids = sorted(int(i) for i in keep)
+    rng.shuffle(order := list(pids))
+    store = HistogramStore(num_buckets=T)
+    raw = {}
+    has_dups = False
+    for pid in order:  # randomized ingest order
+        n = 64 * int(rng.integers(1, 7))
+        kind = int(rng.integers(0, 3))
+        if kind == 0:
+            v = rng.normal(size=n)
+        elif kind == 1:
+            v = rng.gumbel(size=n) * rng.uniform(0.1, 10)
+        else:
+            v = rng.integers(0, 50, size=n).astype(float)
+            has_dups = True
+        raw[pid] = v.astype(np.float32)
+        store.ingest(pid, raw[pid])
+    lo = int(rng.integers(pids[0], pids[-1] + 1))
+    hi = int(rng.integers(lo, pids[-1] + 1))
+    while not any(lo <= p <= hi for p in pids):  # interval must be non-empty
+        lo = int(rng.integers(pids[0], pids[-1] + 1))
+        hi = int(rng.integers(lo, pids[-1] + 1))
+    return store, raw, lo, hi, beta, has_dups
+
+
+def _present(raw, lo, hi):
+    return [p for p in sorted(raw) if lo <= p <= hi]
+
+
+@given(store_case())
+def test_tree_query_bitexact_vs_flat_merge_of_canonical_nodes(args):
+    """query ≡ merge_list over the canonical node summaries, bit for bit —
+    including the power-of-two k padding of the static-shape merge path."""
+    store, raw, lo, hi, beta, _ = args
+    tree = store._tree
+    h, eps = store.query(lo, hi, beta, strict=False)
+    sel = [tree.nodes[k] for k in tree.decompose(lo, hi)]
+    want = merge_list([nd.to_histogram() for nd in sel], beta)
+    np.testing.assert_array_equal(
+        np.asarray(h.boundaries), np.asarray(want.boundaries)
+    )
+    np.testing.assert_array_equal(np.asarray(h.sizes), np.asarray(want.sizes))
+    # the tentpole claim: O(log W) summaries per query, not O(window)
+    span = hi - lo + 1
+    assert len(sel) <= 2 * max(1, (span - 1).bit_length()) + 1
+
+
+@given(store_case())
+def test_leaf_only_covers_equal_flat_merge_over_partitions(args):
+    """Single-partition and pair-boundary-crossing spans decompose into raw
+    leaves, so the tree answer IS the flat merge over partition summaries."""
+    store, raw, lo, hi, beta, _ = args
+    tree = store._tree
+    pids = _present(raw, lo, hi)
+    for a, b in [(pids[0], pids[0]), (pids[-1], pids[-1])]:
+        keys = tree.decompose(a, b)
+        if any(lvl != 0 for lvl, _ in keys):
+            continue
+        h, _ = store.query(a, b, beta, strict=False)
+        flat = merge_list(
+            [store.summaries[p].to_histogram() for p in _present(raw, a, b)],
+            beta,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h.boundaries), np.asarray(flat.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h.sizes), np.asarray(flat.sizes)
+        )
+
+
+@given(store_case())
+def test_query_many_bitexact_vs_query(args):
+    """The batched single-dispatch path pads every query's node set to one
+    static shape — padding must not change a single bit of any answer."""
+    store, raw, lo, hi, beta, _ = args
+    pids = _present(raw, sorted(raw)[0], sorted(raw)[-1])
+    intervals = [
+        (lo, hi),
+        (pids[0], pids[-1]),  # full range
+        (pids[0], pids[0]),  # single partition
+    ]
+    batched = store.query_many(intervals, beta, strict=False)
+    for (a, b), (hm, em) in zip(intervals, batched):
+        h1, e1 = store.query(a, b, beta, strict=False)
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(hm.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(hm.sizes)
+        )
+        assert e1 == em
+
+
+@given(store_case())
+def test_reported_eps_dominates_measured_error(args):
+    """Theorem 1/2, composed per level: reported sizes, true pooled-value
+    occupancy, and every contiguous bucket range stay within ε_total."""
+    store, raw, lo, hi, beta, has_dups = args
+    h, eps = store.query(lo, hi, beta, strict=False)
+    pids = _present(raw, lo, hi)
+    pooled = np.sort(np.concatenate([raw[p] for p in pids]))
+    n = pooled.size
+    sizes = np.asarray(h.sizes, np.float64)
+    assert float(sizes.sum()) == pytest.approx(n, abs=0.5)
+    # Theorem 1 on reported sizes
+    assert np.abs(sizes - n / beta).max() <= eps + 1e-3
+    # Theorem 2 on every contiguous range of reported sizes
+    cum = np.concatenate([[0.0], np.cumsum(sizes)])
+    dev = np.abs(
+        cum[:, None] - cum[None, :]
+        - (np.arange(beta + 1)[:, None] - np.arange(beta + 1)[None, :])
+        * n
+        / beta
+    )
+    assert dev.max() <= eps + 1e-3
+    if has_dups:
+        return  # tied boundaries make true counts ambiguous by the tie mass
+    # Theorem 1 on TRUE occupancy of the answer's buckets
+    b = np.asarray(h.boundaries, np.float64)
+    lo_i = np.searchsorted(pooled, b[:-1], side="left")
+    hi_i = np.searchsorted(pooled, b[1:], side="left")
+    true_sizes = (hi_i - lo_i).astype(np.float64)
+    true_sizes[-1] += np.sum(pooled == b[-1])  # last bucket right-closed
+    assert np.abs(true_sizes - n / beta).max() <= eps + 1e-3
+
+
+@given(st.integers(0, 2**16), st.integers(1, 4096))
+def test_canonical_decomposition_covers_exactly(lo_seed, span):
+    """The cover partitions [lo, hi] exactly: disjoint, complete, ≤2/level."""
+    lo = lo_seed % 512
+    hi = lo + span % 512
+    keys = canonical_decomposition(lo, hi)
+    slots = []
+    for lvl, idx in keys:
+        slots.extend(range(idx << lvl, (idx + 1) << lvl))
+    assert sorted(slots) == list(range(lo, hi + 1))
+    levels = [lvl for lvl, _ in keys]
+    assert all(levels.count(l) <= 2 for l in set(levels))
+    assert len(keys) <= 2 * max(1, (hi - lo).bit_length()) + 1
+
+
+def test_cache_serves_repeats_and_invalidates_on_ingest():
+    rng = np.random.default_rng(0)
+    store = HistogramStore(num_buckets=32)
+    for d in range(8):
+        store.ingest(d, rng.normal(size=200).astype(np.float32))
+    v0 = store.version
+    h1, _ = store.query(0, 7, beta=8)
+    h2, _ = store.query(0, 7, beta=8)
+    stats = store.cache_stats()
+    assert stats["hits"] >= 1
+    np.testing.assert_array_equal(np.asarray(h1.sizes), np.asarray(h2.sizes))
+    store.ingest(8, rng.normal(size=200).astype(np.float32))
+    assert store.version > v0  # mutation bumps version → stale keys dead
+    h3, _ = store.query(0, 8, beta=8)
+    assert float(np.asarray(h3.sizes).sum()) == 9 * 200
+
+
+def test_tree_survives_direct_summary_deletion():
+    """The documented summary-loss idiom mutates the dict directly; the
+    engine must detect the desync and re-answer from surviving leaves."""
+    rng = np.random.default_rng(1)
+    store = HistogramStore(num_buckets=32)
+    for d in range(6):
+        store.ingest(d, rng.normal(size=300).astype(np.float32))
+    del store.summaries[3]
+    h, eps = store.query(0, 5, beta=8, strict=False)
+    assert float(np.asarray(h.sizes).sum()) == 5 * 300
+    with pytest.raises(KeyError):
+        store.query(0, 5, beta=8, strict=True)
+
+
+def test_tree_detects_same_count_summary_replacement():
+    """Replacing a summary row in place (same n, different values) must not
+    serve a stale cached/pre-merged answer — the identity scan catches it."""
+    import jax.numpy as jnp
+
+    from repro.core import StoredSummary, build_exact
+
+    rng = np.random.default_rng(4)
+    store = HistogramStore(num_buckets=32)
+    for d in range(4):
+        store.ingest(d, rng.normal(size=250).astype(np.float32))
+    shifted = (rng.normal(size=250) * 50 + 1000).astype(np.float32)
+    h = build_exact(jnp.asarray(shifted), 32)
+    store.summaries[1] = StoredSummary(
+        1, 250, np.asarray(h.boundaries), np.asarray(h.sizes)
+    )
+    ht, _ = store.query(0, 3, beta=8)
+    hf, _ = store.query(0, 3, beta=8, engine="flat")
+    assert float(np.asarray(ht.boundaries).max()) == float(
+        np.asarray(hf.boundaries).max()
+    )
+    assert float(np.asarray(ht.boundaries).max()) > 100  # sees the new data
+
+
+def test_persistence_roundtrip_preserves_tree_answers():
+    import os
+    import tempfile
+
+    rng = np.random.default_rng(2)
+    store = HistogramStore(num_buckets=64)
+    for d in range(12):
+        store.ingest(d, rng.gumbel(size=400).astype(np.float32))
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "summaries.npz")
+        store.save(path)
+        loaded = HistogramStore.load(path)
+    assert loaded._tree.nodes.keys() == store._tree.nodes.keys()
+    for (a, b) in [(0, 11), (3, 9), (5, 5)]:
+        h1, e1 = store.query(a, b, beta=16)
+        h2, e2 = loaded.query(a, b, beta=16)
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2

@@ -1,0 +1,116 @@
+"""Golden parity: the fused Pallas merge kernel vs the vectorized merge vs
+the sequential paper-Algorithm-1 oracle, on fixed seeds.
+
+Complements the randomized equivalence suite (test_merge_equivalence) with a
+deterministic golden set that pins the edge cases down by construction:
+
+* flat boundary count ``k(T+1)`` not a power of two → the kernel's
+  pad-to-power-of-two with ``+inf`` boundaries / zero mass is exercised on
+  every case where ``k(T+1)`` isn't already ``2^m`` (and one case where it
+  is, so the no-pad path stays covered);
+* duplicate boundaries (heavily tied integer data), where stable-sort tie
+  handling and the left-collapse cumulative both have to agree bit-for-bit
+  with the oracle;
+* degenerate shapes: a single source (k=1), a single output bucket (β=1),
+  and β=T.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Histogram,
+    build_exact,
+    merge,
+    merge_histograms_sequential,
+)
+from repro.kernels import merge_pallas
+
+# (seed, k, T, beta, duplicate-heavy)
+GOLDEN = [
+    (0, 1, 4, 2, False),  # k(T+1)=5  → padded to 8
+    (1, 3, 16, 16, False),  # k(T+1)=51 → padded to 64; beta == T
+    (2, 7, 15, 5, False),  # k(T+1)=112 → padded to 128
+    (3, 2, 8, 1, False),  # beta == 1 (degenerate single bucket)
+    (4, 3, 41, 12, True),  # k(T+1)=126 → padded; heavy boundary ties
+    (5, 5, 12, 7, True),  # ties + uneven partition sizes
+    (6, 1, 7, 7, True),  # k(T+1)=8 is already a power of two (no pad)
+    (7, 4, 20, 19, False),  # k(T+1)=84 → padded to 128
+]
+
+
+def _make_histograms(seed: int, k: int, T: int, dup: bool):
+    rng = np.random.default_rng(seed)
+    hs = []
+    for _ in range(k):
+        n = int(rng.integers(T, 400))
+        if dup:  # few distinct values → many tied boundaries
+            v = rng.integers(0, 8, size=n).astype(np.float32)
+        else:
+            v = (rng.normal(size=n) * 5).astype(np.float32)
+        hs.append(build_exact(jnp.asarray(v), T))
+    return hs
+
+
+@pytest.mark.parametrize("seed,k,T,beta,dup", GOLDEN)
+def test_pallas_merge_matches_vectorized_and_sequential(seed, k, T, beta, dup):
+    hs = _make_histograms(seed, k, T, dup)
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in hs]),
+        jnp.stack([h.sizes for h in hs]),
+    )
+    bo, so = merge_pallas(stacked.boundaries, stacked.sizes, beta)
+    n = float(np.asarray(stacked.sizes).sum())
+
+    hv = merge(stacked, beta)  # vectorized rank-select (production path)
+    hq = merge_histograms_sequential(hs, beta)  # paper Algorithm 1 oracle
+
+    for got_b, got_s, src in [
+        (bo, so, "pallas-vs-"),
+        (np.asarray(hv.boundaries), np.asarray(hv.sizes), "vector-vs-"),
+    ]:
+        np.testing.assert_allclose(
+            np.asarray(got_b),
+            np.asarray(hq.boundaries),
+            rtol=1e-6,
+            err_msg=src + "sequential boundaries",
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_s),
+            np.asarray(hq.sizes),
+            atol=1e-2,
+            err_msg=src + "sequential sizes",
+        )
+    # mass conservation through the kernel's +inf/zero-mass padding
+    assert float(np.asarray(so).sum()) == pytest.approx(n, abs=1e-2)
+    assert np.all(np.isfinite(np.asarray(bo)))
+
+
+def test_pallas_merge_padded_tail_carries_no_mass():
+    """A case engineered so the pad region is large (k(T+1)=18 → 32): the
+    padded +inf boundaries must never leak into boundaries or sizes."""
+    hs = _make_histograms(11, 2, 8, True)
+    stacked = Histogram(
+        jnp.stack([h.boundaries for h in hs]),
+        jnp.stack([h.sizes for h in hs]),
+    )
+    bo, so = merge_pallas(stacked.boundaries, stacked.sizes, 4)
+    hq = merge_histograms_sequential(hs, 4)
+    np.testing.assert_allclose(np.asarray(bo), np.asarray(hq.boundaries))
+    np.testing.assert_allclose(np.asarray(so), np.asarray(hq.sizes), atol=1e-2)
+    assert float(np.asarray(bo)[-1]) == float(
+        np.asarray(stacked.boundaries).max()
+    )
+
+
+def test_pallas_merge_duplicate_boundary_mass_alignment():
+    """All-tied sources: every boundary equal; the merge must put all mass in
+    the final bucket span without NaNs from the masked +inf padding."""
+    b = jnp.asarray(np.full((2, 5), 3.0, np.float32))
+    s = jnp.asarray(np.full((2, 4), 10.0, np.float32))
+    bo, so = merge_pallas(b, s, 3)
+    assert np.all(np.isfinite(np.asarray(bo)))
+    assert float(np.asarray(so).sum()) == pytest.approx(80.0)
+    want = merge(Histogram(b, s), 3)
+    np.testing.assert_allclose(np.asarray(bo), np.asarray(want.boundaries))
+    np.testing.assert_allclose(np.asarray(so), np.asarray(want.sizes))

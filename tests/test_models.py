@@ -7,6 +7,8 @@ import pytest
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable, smoke
 from repro.models import decode_step, init_cache, init_model, loss_fn, prefill
 
+pytestmark = pytest.mark.slow  # multi-minute lane; fast lane: -m "not slow"
+
 ARCHS = list_archs()
 
 

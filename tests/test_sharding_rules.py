@@ -9,7 +9,10 @@ from repro.sharding import Rules
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     # Rules only reads mesh.shape / axis_names — an abstract mesh suffices.
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:  # jax ≥ 0.5: AbstractMesh(shape, axis_names)
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_train_rules_dense():

@@ -26,8 +26,14 @@ def test_ingest_and_query_interval():
 
 def test_eps_guarantee_reported():
     store, _ = make_store(T=512)
-    _, eps = store.query(0, 9, beta=64)
-    assert eps == pytest.approx(2 * 20000 / 512 + 2 * 10)
+    # the paper-literal flat Merger reports the single-level Theorem-1 bound
+    _, eps_flat = store.query(0, 9, beta=64, engine="flat")
+    assert eps_flat == pytest.approx(2 * 20000 / 512 + 2 * 10)
+    # the segment-tree Merger reports its composed per-level bound — never
+    # tighter than the flat bound, and still honoured by its own answer
+    h, eps_tree = store.query(0, 9, beta=64, engine="tree")
+    assert eps_tree >= eps_flat
+    assert np.abs(np.asarray(h.sizes) - 20000 / 64).max() <= eps_tree
 
 
 def test_p95_latency_query():

@@ -10,6 +10,7 @@ from repro.core import (
 )
 
 
+@pytest.mark.slow
 def test_paper_end_to_end_log_analytics():
     """The paper's deployment: daily summaries → on-demand interval query,
     merge beats corrected tuple sampling at equal summary size."""
@@ -56,6 +57,7 @@ def test_p95_monitoring_scenario():
     assert got == pytest.approx(ref, rel=0.05)
 
 
+@pytest.mark.slow
 def test_quickstart_module_runs():
     import examples.quickstart as q
     q.main()

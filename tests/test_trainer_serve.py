@@ -11,6 +11,8 @@ from repro.optim import OptimizerConfig
 from repro.serve import Engine, ServeConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow  # multi-minute lane; fast lane: -m "not slow"
+
 
 def make_trainer(tmp_path, steps, arch="smollm-135m", seed=0, resume=True):
     cfg = smoke(get_config(arch))
