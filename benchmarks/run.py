@@ -7,13 +7,15 @@
   * table2_runtimes   — paper Table 2 (summarize/merge/sample timings)
   * core_micro        — core-primitive microbenchmarks
   * interval_query    — flat vs segment-tree Merger (latency, qps, ε bound)
+  * ingest            — per-partition vs batched vs async Summarizer
+                        throughput + compile counts (writes BENCH_ingest.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
 import sys
 
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
-from benchmarks import interval_query, roofline_report
+from benchmarks import ingest_throughput, interval_query, roofline_report
 
 
 def main() -> None:
@@ -32,6 +34,7 @@ def main() -> None:
         "table2": table2_runtimes.main,
         "core_micro": core_micro.main,
         "interval_query": interval_query.main,
+        "ingest": ingest_throughput.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -71,6 +71,10 @@ __all__ = [
     "Histogram",
     "build_exact",
     "build_exact_batched",
+    "build_exact_padded",
+    "build_exact_padded_batched",
+    "pad_pow2",
+    "next_pow2",
     "merge",
     "merge_histograms_sequential",
     "pre_histogram",
@@ -153,6 +157,96 @@ def build_exact_batched(
         build_exact, num_buckets=num_buckets, count_dtype=count_dtype
     )
     return jax.vmap(fn)(values)
+
+
+# ---------------------------------------------------------------------------
+# Shape-stable (mask-aware) construction — the batched Summarizer pipeline
+# ---------------------------------------------------------------------------
+#
+# ``build_exact`` is jitted on the partition *shape*, so a stream of
+# variable-length partitions costs one fresh XLA compile per distinct length.
+# The padded variant below fixes the executable shape instead: partitions are
+# padded with a +inf sentinel to a power-of-two length bucket and the cut
+# indices are computed from the *true* length ``n`` (a traced scalar), so
+# every length in a 2× band shares one compiled program — O(log max_n) total
+# compiles for any mix of lengths.  Because the sentinel sorts past every
+# real value and no cut index ever reaches it (``cuts ≤ n``, reads clamped to
+# ``n-1``), the result is bit-identical to ``build_exact`` on the unpadded
+# values (property-tested in tests/test_batched_ingest.py).
+
+
+def next_pow2(k: int) -> int:
+    """Smallest power of two ≥ ``k`` (``k ≥ 1``) — THE padding rule for
+    every shape-stable batch/length axis (summarizer stacks, merge batch
+    padding, tree pull-up batches); keep it single-sourced so the bounded
+    jit-cache guarantees stay in sync."""
+    return 1 << max(0, k - 1).bit_length()
+
+
+def pad_pow2(values, min_len: int = 1) -> tuple[np.ndarray, int]:
+    """Pad a 1-D array to the next power-of-two length with a +inf sentinel.
+
+    Returns ``(padded, n)`` where ``n`` is the true length.  Integer dtypes
+    use their max value as the sentinel; either way the pad elements sort to
+    the tail and are never selected by the masked cut indices.
+    """
+    v = np.asarray(values).reshape(-1)
+    n = int(v.shape[0])
+    if n < 1:
+        raise ValueError("cannot summarize an empty partition")
+    n_pad = next_pow2(max(n, min_len))
+    if n_pad == n:
+        return v, n
+    if np.issubdtype(v.dtype, np.floating):
+        fill = np.array(np.inf, v.dtype)
+    else:
+        fill = np.array(np.iinfo(v.dtype).max, v.dtype)
+    return np.concatenate([v, np.full(n_pad - n, fill, v.dtype)]), n
+
+
+def _masked_cuts(n: jax.Array, T: int) -> jax.Array:
+    """``floor(i·n/T)`` for i = 0..T with a *traced* ``n`` — exact integer
+    arithmetic (``i·(n%T) < T² `` fits int32) so the cuts match
+    :func:`_cut_indices` bit for bit."""
+    i = jnp.arange(T + 1, dtype=jnp.int32)
+    q, r = n // T, n % T
+    return i * q + (i * r) // T
+
+
+def _build_exact_masked(values, n, num_buckets, count_dtype):
+    sv = jnp.sort(values)  # sentinel pad sorts past every real value
+    n = jnp.asarray(n, jnp.int32)
+    cuts = _masked_cuts(n, num_buckets)
+    boundaries = sv[jnp.minimum(cuts, n - 1)]
+    sizes = jnp.diff(cuts).astype(count_dtype)
+    return Histogram(boundaries=boundaries, sizes=sizes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "count_dtype"))
+def build_exact_padded(
+    values: jax.Array, n, num_buckets: int, count_dtype=jnp.float32
+) -> Histogram:
+    """Mask-aware :func:`build_exact` over a sentinel-padded partition.
+
+    ``values``: ``(n_pad,)`` — the true values followed by +inf padding
+    (see :func:`pad_pow2`); ``n``: true length, traced.  Bit-identical to
+    ``build_exact(values[:n], num_buckets)``; compiles once per ``n_pad``.
+    """
+    return _build_exact_masked(values, n, num_buckets, count_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "count_dtype"))
+def build_exact_padded_batched(
+    values: jax.Array, ns, num_buckets: int, count_dtype=jnp.float32
+) -> Histogram:
+    """One-dispatch summarizer for a ``(k, n_pad)`` stack of padded
+    partitions with true lengths ``ns`` of shape ``(k,)`` — the vmapped form
+    of :func:`build_exact_padded`.  The whole stack is summarized by a
+    single XLA program keyed only on ``(k, n_pad, T)``."""
+    fn = functools.partial(
+        _build_exact_masked, num_buckets=num_buckets, count_dtype=count_dtype
+    )
+    return jax.vmap(fn)(values, jnp.asarray(ns, jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -45,10 +45,18 @@ A query that merges canonical nodes {v} into β buckets reports
             < 2N · Σ_level 1/T_level  (+ integer slack),
 
 the ``ε_total < 2N·Σ_level 1/T_level`` form of the module header, with
-``T_level = T`` uniform giving ``ε_total < 2N·(1 + ⌈log2 W⌉)/T``.  Choosing
-``T_node = 2·T_leaf·…`` geometrically per level would make the sum converge
-to ``2·(2N/T_leaf)`` independent of depth at ``O(log W)`` extra memory per
-leaf — exposed via the ``T_node`` knob, see ROADMAP.
+``T_level = T`` uniform giving ``ε_total < 2N·(1 + ⌈log2 W⌉)/T``.
+
+**Geometric per-level resolution** (``geometric=True``): node resolution
+doubles per level — a level-``l`` node holds ``T_node·2^l`` buckets — so the
+per-level error terms form a geometric series and the composed bound
+converges to ``ε_total < 4N/T_leaf`` *independent of depth*, at ``O(log W)``
+extra memory per leaf (every level stores ``W·T`` bucket floats in total
+instead of the uniform mode's ``W·T/2^l``).  Because a level-``l`` pair
+merge emits exactly as many buckets as its two children jointly carry
+boundaries, geometric nodes lose no resolution on the way up — the only
+per-level error is the left-collapse term ``2n/T_in`` of the level below.
+Exposed as ``HistogramStore(T_node="geometric")``.
 
 What is (and is not) bit-exact
 ------------------------------
@@ -95,7 +103,7 @@ from typing import Sequence
 import jax
 import numpy as np
 
-from repro.core.histogram import Histogram, merge
+from repro.core.histogram import Histogram, merge, next_pow2
 
 __all__ = ["TreeNode", "IntervalTree", "canonical_decomposition"]
 
@@ -175,10 +183,13 @@ def _pad_summary(
 class IntervalTree:
     """Power-of-two segment tree of pre-merged partition summaries."""
 
-    def __init__(self, T_node: int, cache_size: int = 128):
+    def __init__(
+        self, T_node: int, cache_size: int = 128, *, geometric: bool = False
+    ):
         if T_node < 1:
             raise ValueError("T_node must be >= 1")
         self.T_node = int(T_node)
+        self.geometric = bool(geometric)
         self.levels = 0  # capacity = 2**levels leaf slots
         self.base: int | None = None  # partition id of slot 0
         self.nodes: dict[tuple[int, int], TreeNode] = {}
@@ -195,6 +206,11 @@ class IntervalTree:
     def capacity(self) -> int:
         return 1 << self.levels
 
+    def node_T(self, level: int) -> int:
+        """Merge-output resolution of a level-``level`` node: uniform
+        ``T_node``, or ``T_node·2^level`` in geometric mode."""
+        return self.T_node << level if self.geometric else self.T_node
+
     def num_leaves(self) -> int:
         return sum(1 for (lvl, _) in self.nodes if lvl == 0)
 
@@ -205,24 +221,51 @@ class IntervalTree:
     # ---------------------------------------------------------- maintenance
     def set_leaf(self, partition_id: int, boundaries, sizes) -> None:
         """Insert/replace one leaf and refresh its ``O(log W)`` ancestors."""
-        pid = int(partition_id)
+        self.set_leaves({int(partition_id): (boundaries, sizes)})
+
+    def set_leaves(
+        self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]
+    ) -> None:
+        """Insert/replace a batch of leaves with one level-batched pull-up.
+
+        The ancestor paths of all ``k`` leaves are deduplicated per level and
+        each level's pair merges go through a single vmapped jitted merge —
+        ``O(log W)`` XLA dispatches per batch instead of per leaf.  This is
+        the per-flush maintenance path of the async Summarizer; a single
+        mutation (``set_leaf``) is the ``k = 1`` case.  Cache invalidation
+        (and the version bump) happens once per batch.
+        """
+        if not leaves:
+            return
+        pids = sorted(int(p) for p in leaves)
         if self.base is None:
-            self.base = pid
-        if pid < self.base:
-            self._rebase(pid)
-        slot = pid - self.base
+            self.base = pids[0]
+        if pids[0] < self.base:
+            # a partition id below base arrived: shift every slot (rare)
+            merged = {
+                self.base + slot: (nd.boundaries, nd.sizes)
+                for (lvl, slot), nd in self.nodes.items()
+                if lvl == 0
+            }
+            merged.update({int(p): v for p, v in leaves.items()})
+            self.rebuild(merged)
+            return
         grew = False
-        while slot >= self.capacity:
+        while pids[-1] - self.base >= self.capacity:
             self.levels += 1
             grew = True
-        b = np.asarray(boundaries, np.float32)
-        s = np.asarray(sizes, np.float32)
-        self.nodes[(0, slot)] = TreeNode(b, s, float(s.sum()), 0.0, 1)
-        self._pull_up(slot)
+        dirty: set[int] = set()
+        for pid in pids:
+            slot = pid - self.base
+            b = np.asarray(leaves[pid][0], np.float32)
+            s = np.asarray(leaves[pid][1], np.float32)
+            self.nodes[(0, slot)] = TreeNode(b, s, float(s.sum()), 0.0, 1)
+            dirty.add(slot)
         if grew:
             # growth re-roots: the old root gains new ancestors on slot 0's
-            # path (which _pull_up(slot) only shares from some level up).
-            self._pull_up(0)
+            # path (which the dirty-slot paths only share from some level up)
+            dirty.add(0)
+        self._pull_up_many(dirty)
         self._invalidate()
 
     def adopt_leaf_arrays(self, partition_id: int, boundaries, sizes) -> bool:
@@ -251,11 +294,26 @@ class IntervalTree:
         )
         return True
 
-    def _pull_up(self, slot: int) -> None:
-        idx = slot
+    def _pull_up_many(self, dirty: set[int]) -> None:
+        """Refresh the deduplicated ancestor paths of the given leaf slots,
+        level by level, batching each level's pair merges into one vmapped
+        jitted dispatch (padded to a power-of-two batch for a bounded
+        jit-cache footprint)."""
+        parents = set(dirty)
         for level in range(1, self.levels + 1):
-            idx >>= 1
-            self._update(level, idx)
+            parents = {s >> 1 for s in parents}
+            pairs = [
+                i
+                for i in sorted(parents)
+                if (level - 1, 2 * i) in self.nodes
+                and (level - 1, 2 * i + 1) in self.nodes
+            ]
+            pair_set = set(pairs)
+            for i in sorted(parents):
+                if i not in pair_set:
+                    self._update(level, i)
+            if pairs:
+                self._merge_level(level, pairs)
 
     def _update(self, level: int, idx: int) -> None:
         c0 = self.nodes.get((level - 1, 2 * idx))
@@ -267,39 +325,49 @@ class IntervalTree:
             # single child: share its summary — no merge, no added error
             self.nodes[key] = c0 if c1 is None else c1
         else:
-            self.nodes[key] = self._merge_pair(c0, c1)
+            self._merge_level(level, [idx])
 
-    def _merge_pair(self, c0: TreeNode, c1: TreeNode) -> TreeNode:
-        T_max = max(c0.num_buckets, c1.num_buckets)
-        bs, ss = zip(
-            _pad_summary(c0.boundaries, c0.sizes, T_max),
-            _pad_summary(c1.boundaries, c1.sizes, T_max),
+    def _merge_level(self, level: int, pairs: Sequence[int]) -> None:
+        """Merge the sibling pairs under ``(level, i) for i in pairs`` with a
+        single batched dispatch, writing the parent nodes (with their
+        composed-ε bookkeeping)."""
+        kids = [
+            (self.nodes[(level - 1, 2 * i)], self.nodes[(level - 1, 2 * i + 1)])
+            for i in pairs
+        ]
+        Q = len(kids)
+        Q_pad = next_pow2(Q)
+        padded_kids = list(kids) + [kids[-1]] * (Q_pad - Q)
+        T_max = max(max(a.num_buckets, b.num_buckets) for a, b in kids)
+        bs = np.stack(
+            [
+                np.stack(
+                    [_pad_summary(c.boundaries, c.sizes, T_max)[0] for c in pair]
+                )
+                for pair in padded_kids
+            ]
         )
-        bo, so = _merge_stacks(
-            np.stack(bs)[None], np.stack(ss)[None], self.T_node
+        ss = np.stack(
+            [
+                np.stack(
+                    [_pad_summary(c.boundaries, c.sizes, T_max)[1] for c in pair]
+                )
+                for pair in padded_kids
+            ]
         )
-        n = c0.n + c1.n
-        T_in = min(c0.num_buckets, c1.num_buckets)
-        eps = c0.eps + c1.eps + 2.0 * n / T_in + 4.0
-        return TreeNode(
-            boundaries=np.asarray(bo[0]),
-            sizes=np.asarray(so[0]),
-            n=n,
-            eps=eps,
-            leaves=c0.leaves + c1.leaves,
-        )
-
-    def _rebase(self, new_base: int) -> None:
-        """A partition id below ``base`` arrived: shift every slot (rare)."""
-        leaves = {
-            self.base + slot: nd
-            for (lvl, slot), nd in self.nodes.items()
-            if lvl == 0
-        }
-        self.base = new_base
-        self.rebuild(
-            {pid: (nd.boundaries, nd.sizes) for pid, nd in leaves.items()}
-        )
+        bo, so = _merge_stacks(bs, ss, self.node_T(level))
+        bo, so = np.asarray(bo), np.asarray(so)
+        for row, i in enumerate(pairs):
+            c0, c1 = kids[row]
+            n = c0.n + c1.n
+            T_in = min(c0.num_buckets, c1.num_buckets)
+            self.nodes[(level, i)] = TreeNode(
+                boundaries=bo[row],
+                sizes=so[row],
+                n=n,
+                eps=c0.eps + c1.eps + 2.0 * n / T_in + 4.0,
+                leaves=c0.leaves + c1.leaves,
+            )
 
     def rebuild(self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]) -> None:
         """Bulk (re)build from ``{partition_id: (boundaries, sizes)}``.
@@ -326,61 +394,7 @@ class IntervalTree:
             self.nodes[(0, pid - self.base)] = TreeNode(
                 b, s, float(s.sum()), 0.0, 1
             )
-        for level in range(1, self.levels + 1):
-            parents = sorted(
-                {idx >> 1 for (lvl, idx) in self.nodes if lvl == level - 1}
-            )
-            pairs = [
-                i
-                for i in parents
-                if (level - 1, 2 * i) in self.nodes
-                and (level - 1, 2 * i + 1) in self.nodes
-            ]
-            singles = [i for i in parents if i not in set(pairs)]
-            for i in singles:
-                self._update(level, i)
-            if not pairs:
-                continue
-            kids = [
-                (self.nodes[(level - 1, 2 * i)], self.nodes[(level - 1, 2 * i + 1)])
-                for i in pairs
-            ]
-            T_max = max(max(a.num_buckets, b.num_buckets) for a, b in kids)
-            bs = np.stack(
-                [
-                    np.stack(
-                        [
-                            _pad_summary(c.boundaries, c.sizes, T_max)[0]
-                            for c in pair
-                        ]
-                    )
-                    for pair in kids
-                ]
-            )
-            ss = np.stack(
-                [
-                    np.stack(
-                        [
-                            _pad_summary(c.boundaries, c.sizes, T_max)[1]
-                            for c in pair
-                        ]
-                    )
-                    for pair in kids
-                ]
-            )
-            bo, so = _merge_stacks(bs, ss, self.T_node)
-            bo, so = np.asarray(bo), np.asarray(so)
-            for row, i in enumerate(pairs):
-                c0, c1 = kids[row]
-                n = c0.n + c1.n
-                T_in = min(c0.num_buckets, c1.num_buckets)
-                self.nodes[(level, i)] = TreeNode(
-                    boundaries=bo[row],
-                    sizes=so[row],
-                    n=n,
-                    eps=c0.eps + c1.eps + 2.0 * n / T_in + 4.0,
-                    leaves=c0.leaves + c1.leaves,
-                )
+        self._pull_up_many({pid - self.base for pid in pids})
 
     # -------------------------------------------------------------- queries
     def decompose(self, lo: int, hi: int) -> list[tuple[int, int]]:
@@ -420,7 +434,7 @@ class IntervalTree:
         (module docstring).
         """
         k_max = max(len(r) for r in rows)
-        k_pad = 1 << (k_max - 1).bit_length() if k_max > 1 else 1
+        k_pad = next_pow2(k_max)
         T_pad = max(nd.num_buckets for r in rows for nd in r)
         Q = len(rows)
         bounds = np.empty((Q, k_pad, T_pad + 1), np.float32)
@@ -480,6 +494,7 @@ class IntervalTree:
         """(json-able meta, arrays) for npz persistence of the tree nodes."""
         meta = {
             "T_node": self.T_node,
+            "geometric": self.geometric,
             "base": self.base,
             "levels": self.levels,
             "nodes": [
@@ -495,7 +510,11 @@ class IntervalTree:
 
     @classmethod
     def from_state(cls, meta: dict, arrays, cache_size: int = 128):
-        tree = cls(int(meta["T_node"]), cache_size=cache_size)
+        tree = cls(
+            int(meta["T_node"]),
+            cache_size=cache_size,
+            geometric=bool(meta.get("geometric", False)),
+        )
         tree.base = None if meta["base"] is None else int(meta["base"])
         tree.levels = int(meta["levels"])
         for lvl, idx, n, eps, leaves in meta["nodes"]:

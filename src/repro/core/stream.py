@@ -19,9 +19,37 @@ so a query merges ``O(log W)`` node summaries instead of re-merging the whole
 static-shape jitted merge.  ``engine="flat"`` keeps the paper-literal path
 (and its tighter single-level bound) for comparison and benchmarks.
 
+The Summarizer is **shape-stable and batched**: partitions are padded with a
++inf sentinel to power-of-two length buckets and summarized through the
+mask-aware ``build_exact_padded`` (bit-identical to the per-length exact
+build), so any mix of partition lengths compiles O(log max_n) XLA programs
+instead of one per distinct length, and ``ingest_many`` groups partitions by
+padded shape and summarizes each group with **one vmapped dispatch**.
+
+Async ingest consistency model
+------------------------------
+With ``async_ingest=True`` (or via ``ingest_async``) partitions are pushed
+onto a bounded queue and a background maintenance thread drains it in
+batches: each drained batch is summarized with the grouped one-dispatch
+summarizer, then applied to the store — leaves written and the tree's
+ancestor paths refreshed with *one* level-batched pull-up per flush — under
+the store lock, bumping the version once per batch.  Guarantees:
+
+  * **Snapshot consistency** — queries take the same lock as batch
+    application, so every answer reflects a complete set of applied
+    batches (never a half-applied batch), with ``eps`` computed from
+    exactly that snapshot's tree; the version key makes cached answers
+    equally consistent.
+  * **Prefix visibility** — batches are drained FIFO, so the visible
+    partition set is always a prefix of the enqueue order.
+  * **Explicit freshness** — ``flush()`` blocks until everything enqueued
+    so far is visible (and re-raises any background summarization error);
+    ``close()`` stops the worker after a final drain.  Nothing is
+    timing-dependent: synchronization is by lock/condition only.
+
 It is deliberately NumPy/host-resident (like the NameNode metadata path);
 the heavy lifting — per-partition sort — runs through the jitted JAX
-``build_exact`` (or the distributed/hierarchical variants for sharded
+``build_exact_padded`` (or the distributed/hierarchical variants for sharded
 partitions).  In the training framework the same store tracks per-step
 summaries of step times and gradient statistics (core/telemetry.py).
 """
@@ -29,7 +57,9 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import tempfile
+import threading
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
@@ -39,13 +69,24 @@ import numpy as np
 from repro.core.histogram import (
     Histogram,
     build_exact,
+    build_exact_padded_batched,
     merge_list,
+    next_pow2,
+    pad_pow2,
     quantile,
     theoretical_eps_max,
 )
 from repro.core.interval_tree import IntervalTree
 
 __all__ = ["StoredSummary", "HistogramStore"]
+
+_SENTINEL = object()  # shuts down the background ingest worker
+
+# Max rows per batched-summarizer dispatch.  Chunking the batch axis keeps
+# the power-of-two row padding waste ≤ ~12 % on large groups (padding 579
+# rows straight to 1024 would nearly double the sort work) while the set of
+# compiled shapes stays O(log k · log max_n).
+_BATCH_ROWS = 256
 
 
 @dataclass(frozen=True)
@@ -71,14 +112,35 @@ class HistogramStore:
     num_buckets: int  # T — summary resolution; pick T ≥ 40·β for ≤5 % error
     summaries: dict[int, StoredSummary] = field(default_factory=dict)
     engine: str = "tree"  # default Merger path: "tree" | "flat"
-    T_node: int | None = None  # internal-node resolution (default: T)
+    # internal-node resolution: None → T uniform; an int → that resolution
+    # uniform; "geometric" → T·2^level per level (depth-independent ε bound)
+    T_node: int | str | None = None
     cache_size: int = 128  # LRU capacity of the tree's answer cache
+    async_ingest: bool = False  # route ``ingest`` through the background queue
+    queue_size: int = 1024  # bound of the pending-partition queue
     _tree: IntervalTree = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
+        if isinstance(self.T_node, str) and self.T_node != "geometric":
+            raise ValueError(f"unknown T_node mode: {self.T_node!r}")
+        geometric = self.T_node == "geometric"
         self._tree = IntervalTree(
-            self.T_node or self.num_buckets, cache_size=self.cache_size
+            self.num_buckets
+            if (self.T_node is None or geometric)
+            else self.T_node,
+            cache_size=self.cache_size,
+            geometric=geometric,
         )
+        # distinct (k_pad, n_pad, T) summarizer dispatch shapes seen so far —
+        # observability for the compile-stability tests and benchmarks
+        self.summarize_shapes: set[tuple[int, int, int]] = set()
+        self._lock = threading.RLock()  # guards summaries + tree + queries
+        self._cv = threading.Condition()  # pending-count synchronization
+        self._pending = 0  # enqueued-but-not-yet-applied partitions
+        self._queue: queue.Queue | None = None
+        self._worker: threading.Thread | None = None
+        # every failed partition since the last flush: [(pid, exception)]
+        self._async_errors: list[tuple[int, BaseException]] = []
         for pid, s in self.summaries.items():
             self._tree.set_leaf(pid, s.boundaries, s.sizes)
 
@@ -88,19 +150,78 @@ class HistogramStore:
         return self._tree.version
 
     # ----------------------------------------------------------- Summarizer
-    def _summarize(self, partition_id: int, values) -> StoredSummary:
-        values = np.asarray(values).reshape(-1)
-        T = min(self.num_buckets, values.shape[0])
-        h = build_exact(jax.numpy.asarray(values), T)
-        return StoredSummary(
-            partition_id=int(partition_id),
-            n=int(values.shape[0]),
-            boundaries=np.asarray(h.boundaries),
-            sizes=np.asarray(h.sizes),
-        )
+    def _summarize_batch(self, parts: dict[int, np.ndarray]) -> dict[int, StoredSummary]:
+        """Summarize many partitions with O(#shape buckets) dispatches.
 
-    def ingest(self, partition_id: int, values) -> StoredSummary:
-        """Summarize one new partition (the scheduled Summarizer job)."""
+        Partitions are padded to power-of-two length buckets and each bucket
+        is summarized by ONE vmapped ``build_exact_padded_batched`` call
+        (its batch axis padded to a power of two as well, so the jit cache
+        holds O(log k_max · log max_n) executables total).  Results are
+        bit-identical to the per-partition ``build_exact`` path.
+        """
+        out: dict[int, StoredSummary] = {}
+        small: list[tuple[int, np.ndarray]] = []
+        groups: dict[int, list[tuple[int, np.ndarray, int]]] = {}
+        for pid, values in parts.items():
+            v = np.asarray(values).reshape(-1)
+            if v.shape[0] < 1:
+                raise ValueError("cannot summarize an empty partition")
+            if v.shape[0] < self.num_buckets:
+                # tiny partition: summarized exactly at T = n (legacy rule)
+                small.append((int(pid), v))
+            else:
+                padded, n = pad_pow2(v)
+                groups.setdefault(padded.shape[0], []).append(
+                    (int(pid), padded, n)
+                )
+        for pid, v in small:
+            h = build_exact(jax.numpy.asarray(v), v.shape[0])
+            out[pid] = StoredSummary(
+                partition_id=pid,
+                n=int(v.shape[0]),
+                boundaries=np.asarray(h.boundaries),
+                sizes=np.asarray(h.sizes),
+            )
+        for n_pad, all_rows in sorted(groups.items()):
+            for at in range(0, len(all_rows), _BATCH_ROWS):
+                rows = all_rows[at : at + _BATCH_ROWS]
+                k = len(rows)
+                k_pad = next_pow2(k)
+                stack = np.stack(
+                    [r[1] for r in rows] + [rows[-1][1]] * (k_pad - k)
+                )
+                ns = np.asarray(
+                    [r[2] for r in rows] + [rows[-1][2]] * (k_pad - k),
+                    np.int32,
+                )
+                self.summarize_shapes.add((k_pad, n_pad, self.num_buckets))
+                h = build_exact_padded_batched(
+                    jax.numpy.asarray(stack), ns, self.num_buckets
+                )
+                bs, ss = np.asarray(h.boundaries), np.asarray(h.sizes)
+                for row, (pid, _, n) in enumerate(rows):
+                    out[pid] = StoredSummary(
+                        partition_id=pid,
+                        n=int(n),
+                        boundaries=bs[row],
+                        sizes=ss[row],
+                    )
+        return out
+
+    def _summarize(self, partition_id: int, values) -> StoredSummary:
+        pid = int(partition_id)
+        return self._summarize_batch({pid: values})[pid]
+
+    def ingest(self, partition_id: int, values) -> StoredSummary | None:
+        """Summarize one new partition (the scheduled Summarizer job).
+
+        With ``async_ingest=True`` the partition is enqueued for the
+        background worker instead and ``None`` is returned — call
+        :meth:`flush` for visibility.
+        """
+        if self.async_ingest:
+            self.ingest_async(partition_id, values)
+            return None
         summ = self._summarize(partition_id, values)
         self._put(summ)
         return summ
@@ -118,21 +239,120 @@ class HistogramStore:
         )
 
     def ingest_many(self, partitions: dict[int, "np.ndarray"]) -> None:
-        """Bulk-summarize many partitions, then build the tree level-batched
-        (``log W`` XLA dispatches) instead of per-ingest incremental."""
-        for pid, values in partitions.items():
-            summ = self._summarize(pid, values)
-            self.summaries[summ.partition_id] = summ
-        self.rebuild_tree()
+        """Bulk-summarize many partitions — grouped one-dispatch summaries
+        plus a single level-batched tree maintenance pass (``log W`` XLA
+        dispatches total) instead of per-partition work."""
+        self._apply(self._summarize_batch(dict(partitions)))
 
     def _put(self, summ: StoredSummary) -> None:
-        self.summaries[summ.partition_id] = summ
-        self._tree.set_leaf(summ.partition_id, summ.boundaries, summ.sizes)
+        self._apply({summ.partition_id: summ})
+
+    def _apply(self, summs: dict[int, StoredSummary]) -> None:
+        """Make a batch of summaries visible atomically (one version bump)."""
+        if not summs:
+            return
+        with self._lock:
+            self.summaries.update(summs)
+            self._tree.set_leaves(
+                {pid: (s.boundaries, s.sizes) for pid, s in summs.items()}
+            )
 
     def rebuild_tree(self) -> None:
-        self._tree.rebuild(
-            {p: (s.boundaries, s.sizes) for p, s in self.summaries.items()}
-        )
+        with self._lock:
+            self._tree.rebuild(
+                {p: (s.boundaries, s.sizes) for p, s in self.summaries.items()}
+            )
+
+    # -------------------------------------------------------- async ingest
+    def ingest_async(self, partition_id: int, values) -> None:
+        """Enqueue a partition for the background Summarizer.
+
+        Non-blocking unless the bounded queue is full.  The partition
+        becomes visible when the worker's next flush applies it; call
+        :meth:`flush` to wait for (and surface errors from) everything
+        enqueued so far.  Input validation happens here, synchronously, so
+        an obviously-bad partition fails the caller instead of the queue.
+        """
+        values = np.asarray(values).reshape(-1)
+        if values.shape[0] < 1:
+            raise ValueError("cannot summarize an empty partition")
+        self._ensure_worker()
+        with self._cv:
+            self._pending += 1
+        self._queue.put((int(partition_id), values))
+
+    def flush(self) -> None:
+        """Block until every enqueued partition is summarized and visible.
+
+        Re-raises (wrapped) every per-partition error the background worker
+        hit since the last flush; the queue keeps draining either way, so a
+        poison partition never wedges it — and never takes down the valid
+        partitions drained into the same batch (they are retried and
+        applied individually).
+        """
+        with self._cv:
+            while self._pending > 0:
+                self._cv.wait()
+        if self._async_errors:
+            errs, self._async_errors = self._async_errors, []
+            detail = "; ".join(f"partition {pid}: {e!r}" for pid, e in errs)
+            raise RuntimeError(
+                f"async ingest failed for {len(errs)} partition(s): {detail}"
+            ) from errs[0][1]
+
+    def close(self) -> None:
+        """Drain the queue, stop the background worker, surface errors."""
+        if self._worker is not None and self._worker.is_alive():
+            self._queue.put(_SENTINEL)
+            self._worker.join()
+        self._worker = None
+        self.flush()
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._queue = queue.Queue(maxsize=self.queue_size)
+            self._worker = threading.Thread(
+                target=self._drain_loop, name="histstore-ingest", daemon=True
+            )
+            self._worker.start()
+
+    def _drain_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _SENTINEL:
+                return
+            batch = [item]
+            stop = False
+            while True:  # drain whatever else is already queued — one flush
+                try:
+                    nxt = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._flush_batch(batch)
+            if stop:
+                return
+
+    def _flush_batch(self, batch: list[tuple[int, np.ndarray]]) -> None:
+        try:
+            try:
+                self._apply(self._summarize_batch(dict(batch)))
+            except BaseException:
+                # isolate the poison rows: retry one partition at a time so
+                # a single bad partition cannot drop the valid partitions
+                # drained into the same batch (errors surface on flush())
+                for pid, values in batch:
+                    try:
+                        self._apply(self._summarize_batch({pid: values}))
+                    except BaseException as e:
+                        self._async_errors.append((pid, e))
+        finally:
+            with self._cv:
+                self._pending -= len(batch)
+                self._cv.notify_all()
 
     def _sync_tree(self, ids: list[int], lo: int, hi: int) -> None:
         """Re-sync after direct ``summaries`` dict mutation (the documented
@@ -180,24 +400,26 @@ class HistogramStore:
         engine reports its composed per-level bound, the flat engine the
         paper's single-level ``2N/T + 2k``.  With ``strict=False`` missing
         partitions are skipped (summary-loss tolerance: a lost shard degrades
-        the answer instead of failing it).
+        the answer instead of failing it).  Safe under concurrent async
+        ingest: the answer is a consistent whole-batch snapshot.
         """
-        ids = [i for i in range(lo, hi + 1) if i in self.summaries]
-        if strict and len(ids) != hi - lo + 1:
-            missing = sorted(set(range(lo, hi + 1)) - set(ids))
-            raise KeyError(f"missing partition summaries: {missing}")
-        if not ids:
-            raise KeyError("no partition summaries in requested interval")
-        if (engine or self.engine) == "tree":
-            self._sync_tree(ids, lo, hi)
-            return self._tree.query(lo, hi, beta)
-        hs = [self.summaries[i].to_histogram() for i in ids]
-        merged = merge_list(hs, beta)
-        n = sum(self.summaries[i].n for i in ids)
-        eps = theoretical_eps_max(
-            n, self.num_buckets, k=len(ids), exact_inputs=False
-        )
-        return merged, eps
+        with self._lock:
+            ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+            if strict and len(ids) != hi - lo + 1:
+                missing = sorted(set(range(lo, hi + 1)) - set(ids))
+                raise KeyError(f"missing partition summaries: {missing}")
+            if not ids:
+                raise KeyError("no partition summaries in requested interval")
+            if (engine or self.engine) == "tree":
+                self._sync_tree(ids, lo, hi)
+                return self._tree.query(lo, hi, beta)
+            hs = [self.summaries[i].to_histogram() for i in ids]
+            merged = merge_list(hs, beta)
+            n = sum(self.summaries[i].n for i in ids)
+            eps = theoretical_eps_max(
+                n, self.num_buckets, k=len(ids), exact_inputs=False
+            )
+            return merged, eps
 
     def query_many(
         self,
@@ -214,13 +436,14 @@ class HistogramStore:
         ``strict`` behaves exactly as in :meth:`query` (and defaults the
         same way): missing partitions raise unless ``strict=False``.
         """
-        for lo, hi in intervals:
-            ids = [i for i in range(lo, hi + 1) if i in self.summaries]
-            if strict and len(ids) != hi - lo + 1:
-                missing = sorted(set(range(lo, hi + 1)) - set(ids))
-                raise KeyError(f"missing partition summaries: {missing}")
-            self._sync_tree(ids, lo, hi)
-        return self._tree.query_many(intervals, beta)
+        with self._lock:
+            for lo, hi in intervals:
+                ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+                if strict and len(ids) != hi - lo + 1:
+                    missing = sorted(set(range(lo, hi + 1)) - set(ids))
+                    raise KeyError(f"missing partition summaries: {missing}")
+                self._sync_tree(ids, lo, hi)
+            return self._tree.query_many(intervals, beta)
 
     def quantile_query(
         self, lo: int, hi: int, q, beta: int | None = None
@@ -235,32 +458,55 @@ class HistogramStore:
     def save(self, path: str) -> None:
         """Atomic write (tmpfile + rename) — summary files survive crashes.
 
-        Persists the pre-merged tree nodes next to the leaf summaries so a
-        reloaded store serves interval queries without re-merging anything.
+        Persists the pre-merged tree nodes next to the leaf summaries (so a
+        reloaded store serves interval queries without re-merging anything)
+        plus the store configuration (``T_node``, ``engine``,
+        ``cache_size``) so a reload reconstructs the same Merger.
         """
-        payload = {}
-        tree_meta, tree_arrays = self._tree.state()
-        meta = {
-            "num_buckets": self.num_buckets,
-            "ids": sorted(self.summaries),
-            "n": {str(p): s.n for p, s in self.summaries.items()},
-            "tree": tree_meta,
-        }
-        for pid, s in self.summaries.items():
-            payload[f"b_{pid}"] = s.boundaries
-            payload[f"s_{pid}"] = s.sizes
-        payload.update(tree_arrays)
+        with self._lock:
+            payload = {}
+            tree_meta, tree_arrays = self._tree.state()
+            meta = {
+                "num_buckets": self.num_buckets,
+                "engine": self.engine,
+                "T_node": self.T_node,
+                "cache_size": self.cache_size,
+                "ids": sorted(self.summaries),
+                "n": {str(p): s.n for p, s in self.summaries.items()},
+                "tree": tree_meta,
+            }
+            for pid, s in self.summaries.items():
+                payload[f"b_{pid}"] = s.boundaries
+                payload[f"s_{pid}"] = s.sizes
+            payload.update(tree_arrays)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
-        os.close(fd)
-        np.savez(tmp, meta=json.dumps(meta), **payload)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".", suffix=".npz"
+        )
+        try:
+            # write through the open fd: np.savez never sees a suffix-less
+            # path, so no stray ``tmp`` + ``tmp.npz`` twin files
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, meta=json.dumps(meta), **payload)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path: str) -> "HistogramStore":
         data = np.load(path, allow_pickle=False)
         meta = json.loads(str(data["meta"]))
-        store = cls(num_buckets=int(meta["num_buckets"]))
+        T_node = meta.get("T_node")
+        store = cls(
+            num_buckets=int(meta["num_buckets"]),
+            engine=str(meta.get("engine", "tree")),
+            T_node=T_node if T_node in (None, "geometric") else int(T_node),
+            cache_size=int(meta.get("cache_size", 128)),
+        )
         for pid in meta["ids"]:
             b = data[f"b_{pid}"]
             s = data[f"s_{pid}"]

@@ -11,12 +11,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.histogram import Histogram, merge
 from repro.kernels.bucket_count import cumulative_counts_pallas
 from repro.kernels.merge_cut import merge_pallas
 from repro.kernels.ref import bucket_sizes_from_cumulative
-from repro.kernels.tile_sort import sort_tiles_pallas
+from repro.kernels.tile_sort import pad_to_tiles, sort_tiles_pallas
 
 __all__ = [
     "bucket_sizes_pallas",
@@ -40,16 +41,28 @@ def bucket_sizes_pallas(
     return bucket_sizes_from_cumulative(cum)
 
 
-def _tile_histograms(sorted_tiles: jax.Array, T: int) -> Histogram:
-    """Exact T-bucket histograms of each (already sorted) tile row."""
+def _tile_histograms(
+    sorted_tiles: jax.Array, T: int, n: int | None = None
+) -> Histogram:
+    """Exact T-bucket histograms of each (already sorted) tile row.
+
+    ``n`` is the total number of *real* values when the last tile carries a
+    sentinel-padded ragged tail (``pad_to_tiles``): that tile's cut indices
+    are computed from its true prefix length, so the padding never enters a
+    boundary or a bucket count.  Cut indices are static (host-side integer
+    arithmetic — exact floors, no float rounding).
+    """
     tiles, tile_len = sorted_tiles.shape
-    cuts = jnp.floor(
-        jnp.arange(T + 1, dtype=jnp.float32) * tile_len / T
-    ).astype(jnp.int32)
-    boundaries = sorted_tiles[:, jnp.minimum(cuts, tile_len - 1)]
-    sizes = jnp.broadcast_to(
-        jnp.diff(cuts).astype(jnp.float32)[None, :], (tiles, T)
-    )
+    if n is None:
+        n = tiles * tile_len
+    n_i = np.minimum(
+        tile_len, n - np.arange(tiles, dtype=np.int64) * tile_len
+    )  # true values per tile; only the last can be short, never 0
+    i = np.arange(T + 1, dtype=np.int64)
+    cuts = (i[None, :] * n_i[:, None]) // T  # (tiles, T+1), exact floor
+    idx = np.minimum(cuts, n_i[:, None] - 1).astype(np.int32)
+    boundaries = jnp.take_along_axis(sorted_tiles, jnp.asarray(idx), axis=1)
+    sizes = jnp.asarray(np.diff(cuts, axis=1).astype(np.float32))
     return Histogram(boundaries=boundaries, sizes=sizes)
 
 
@@ -69,15 +82,18 @@ def summarize_pallas(
 
     Error vs. a fully exact histogram is bounded by the hierarchy composition
     (DESIGN.md §5): ``< 2n/T_tile`` from the tile level (the T_out-level
-    output is itself a merge product).  Input length must be a multiple of
-    ``tile_len`` (the wrapper in core/distributed handles tails).
+    output is itself a merge product; the Theorem-1 bound holds for unequal
+    tile sizes, so a ragged last tile does not loosen it).  Ragged input
+    lengths are handled by sentinel-padding the tail tile and masking its
+    cut indices — no multiple-of-``tile_len`` requirement.
     """
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
-    assert n % tile_len == 0, "pad/trim to a whole number of tiles"
-    xt = flat.reshape(n // tile_len, tile_len)
+    assert n >= 1, "cannot summarize an empty array"
+    flat = pad_to_tiles(flat, tile_len)
+    xt = flat.reshape(flat.shape[0] // tile_len, tile_len)
     sorted_tiles = sort_tiles_pallas(xt, interpret=interpret)
-    tiles_h = _tile_histograms(sorted_tiles, T_tile)
+    tiles_h = _tile_histograms(sorted_tiles, T_tile, n)
     if fused_merge:
         b, s = merge_pallas(
             tiles_h.boundaries, tiles_h.sizes, T_out, interpret=interpret

@@ -29,9 +29,30 @@ __all__ = [
     "tile_sort_kv_kernel",
     "sort_tiles_pallas",
     "sort_kv_pallas",
+    "pad_to_tiles",
 ]
 
 LANE = 128
+
+
+def pad_to_tiles(flat: jax.Array, tile_len: int) -> jax.Array:
+    """Pad a 1-D array up to a whole number of tiles with a +inf sentinel.
+
+    The sentinel (dtype max for integers) sorts past every real value, so a
+    ragged tail becomes one partially-real tile whose true prefix length the
+    caller masks out (kernels/ops.py) — the same padding contract as the
+    shape-stable ``build_exact_padded`` (core/histogram.py).  The pad amount
+    is static (derived from ``flat.shape``), so this composes with jit.
+    """
+    n = flat.shape[0]
+    rem = (-n) % tile_len
+    if rem == 0:
+        return flat
+    if jnp.issubdtype(flat.dtype, jnp.floating):
+        fill = jnp.array(jnp.inf, flat.dtype)
+    else:
+        fill = jnp.array(jnp.iinfo(flat.dtype).max, flat.dtype)
+    return jnp.concatenate([flat, jnp.full((rem,), fill, flat.dtype)])
 
 
 def _bitonic(x: jax.Array) -> jax.Array:

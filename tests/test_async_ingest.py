@@ -1,0 +1,180 @@
+"""Async ingest: background Summarizer with snapshot-consistent queries.
+
+Consistency model under test (core/stream.py module docstring): partitions
+enqueued via ``ingest_async`` become visible in whole batches, FIFO, so
+
+* the visible set at any instant is a **prefix** of the enqueue order;
+* every concurrent query answers from a consistent snapshot (its mass is an
+  exact sum of completely-applied partitions, and its reported ``eps``
+  bounds the measured error of exactly that snapshot);
+* ``flush()`` makes everything enqueued so far visible and surfaces worker
+  errors.
+
+No test here sleeps or depends on scheduler timing: synchronization is only
+through ``flush``/``close`` and the store lock.
+"""
+import numpy as np
+import pytest
+
+from repro.core import HistogramStore
+
+N_PER = 256  # equal-size partitions make snapshot mass checks exact
+T = 32
+BETA = 8
+
+
+def _partitions(w, seed=0):
+    rng = np.random.default_rng(seed)
+    return {d: rng.gumbel(size=N_PER).astype(np.float32) for d in range(w)}
+
+
+def test_flush_makes_all_queued_partitions_visible():
+    parts = _partitions(24)
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    for d in sorted(parts):
+        assert store.ingest(d, parts[d]) is None  # enqueued, not applied
+    store.flush()
+    h, eps = store.query(0, 23, beta=BETA)
+    assert float(np.asarray(h.sizes).sum()) == 24 * N_PER
+    store.close()
+
+
+def test_async_matches_synchronous_store_bitexact():
+    """After flush, the async store is indistinguishable from a synchronous
+    one fed the same partitions — summaries, answers, and eps."""
+    parts = _partitions(16, seed=1)
+    sync = HistogramStore(num_buckets=T)
+    for d in sorted(parts):
+        sync.ingest(d, parts[d])
+    async_store = HistogramStore(num_buckets=T, async_ingest=True)
+    for d in sorted(parts):
+        async_store.ingest(d, parts[d])
+    async_store.flush()
+    for (a, b) in [(0, 15), (3, 11), (7, 7)]:
+        h1, e1 = sync.query(a, b, beta=BETA)
+        h2, e2 = async_store.query(a, b, beta=BETA)
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2
+    async_store.close()
+
+
+def test_queries_during_concurrent_ingest_see_consistent_prefixes():
+    """While the worker drains, every answer is a version-consistent prefix
+    snapshot: total mass is a whole multiple of the partition size, and the
+    reported eps bounds the measured error of exactly that prefix."""
+    W = 32
+    parts = _partitions(W, seed=2)
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    for d in range(W):
+        store.ingest_async(d, parts[d])
+    seen_m = []
+    for _ in range(10_000):  # bounded: worker finishes independently
+        try:
+            h, eps = store.query(0, W - 1, beta=BETA, strict=False)
+        except KeyError:  # nothing applied yet
+            continue
+        total = float(np.asarray(h.sizes).sum())
+        m = int(round(total / N_PER))
+        assert total == m * N_PER  # snapshot = whole partitions only
+        assert 1 <= m <= W
+        # prefix visibility + eps: the measured error of pooling exactly
+        # partitions 0..m-1 must respect this snapshot's reported bound —
+        # a non-prefix visible set of the same mass would violate it
+        pooled = np.sort(np.concatenate([parts[d] for d in range(m)]))
+        b = np.asarray(h.boundaries, np.float64)
+        true_sizes = (
+            np.searchsorted(pooled, b[1:], side="left")
+            - np.searchsorted(pooled, b[:-1], side="left")
+        ).astype(np.float64)
+        true_sizes[-1] += np.sum(pooled == b[-1])
+        assert np.abs(true_sizes - pooled.size / BETA).max() <= eps + 1e-3
+        seen_m.append(m)
+        if m == W:
+            break
+    store.flush()
+    h, _ = store.query(0, W - 1, beta=BETA)
+    assert float(np.asarray(h.sizes).sum()) == W * N_PER
+    assert seen_m == sorted(seen_m)  # visibility only ever grows
+    store.close()
+
+
+def test_version_gates_cache_across_async_flushes():
+    """Concurrent ingest bumps the version per applied batch, so cached
+    answers can never leak across snapshots."""
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    parts = _partitions(8, seed=3)
+    for d in range(4):
+        store.ingest_async(d, parts[d])
+    store.flush()
+    v1 = store.version
+    h1, _ = store.query(0, 7, beta=BETA, strict=False)
+    n1 = float(np.asarray(h1.sizes).sum())
+    for d in range(4, 8):
+        store.ingest_async(d, parts[d])
+    store.flush()
+    assert store.version > v1
+    h2, _ = store.query(0, 7, beta=BETA, strict=False)
+    assert float(np.asarray(h2.sizes).sum()) == 8 * N_PER > n1
+    store.close()
+
+
+def test_empty_partition_fails_synchronously_not_in_worker():
+    """Input validation happens on the caller thread: a bad partition is
+    rejected before it can poison a background batch."""
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    with pytest.raises(ValueError):
+        store.ingest_async(0, np.asarray([], np.float32))
+    store.flush()  # nothing enqueued, nothing pending, no error
+    store.close()
+
+
+def test_worker_error_isolates_poison_and_spares_cobatched_partitions():
+    """A partition that fails inside the worker must not drop the valid
+    partitions drained into the same batch: the batch is retried row by
+    row, survivors apply, and flush() reports exactly the poison pids."""
+    parts = _partitions(8, seed=4)
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    orig = store._summarize_batch
+
+    def failing(batch):  # pid 3 is poison no matter how it is batched
+        if 3 in batch:
+            raise RuntimeError("boom at pid 3")
+        return orig(batch)
+
+    store._summarize_batch = failing
+    for d in sorted(parts):  # all 8 likely drain into one batch
+        store.ingest_async(d, parts[d])
+    with pytest.raises(RuntimeError) as ei:
+        store.flush()
+    assert "partition 3" in str(ei.value)
+    # every valid co-batched partition survived and is visible
+    assert sorted(store.ids()) == [0, 1, 2, 4, 5, 6, 7]
+    h, _ = store.query(0, 7, beta=BETA, strict=False)
+    assert float(np.asarray(h.sizes).sum()) == 7 * N_PER
+    # the worker is still alive, the error list was cleared by flush
+    store._summarize_batch = orig
+    store.ingest_async(3, parts[3])
+    store.flush()
+    h, _ = store.query(0, 7, beta=BETA)
+    assert float(np.asarray(h.sizes).sum()) == 8 * N_PER
+    store.close()
+
+
+def test_close_drains_then_stops():
+    parts = _partitions(6, seed=5)
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    for d in sorted(parts):
+        store.ingest(d, parts[d])
+    store.close()  # must drain everything enqueued before the sentinel
+    h, _ = store.query(0, 5, beta=BETA)
+    assert float(np.asarray(h.sizes).sum()) == 6 * N_PER
+    # ingest_async after close restarts a worker transparently
+    store.ingest_async(6, parts[0])
+    store.flush()
+    assert 6 in store.summaries
+    store.close()

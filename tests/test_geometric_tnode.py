@@ -1,0 +1,161 @@
+"""Geometric per-level T_node: depth-independent composed error bound.
+
+With ``HistogramStore(T_node="geometric")`` a level-``l`` tree node carries
+``T·2^l`` buckets, so the per-level left-collapse terms form a geometric
+series and the composed bound converges to ``ε_total < 4N/T_leaf``
+(+ integer slack) regardless of tree depth — versus the uniform mode's
+``2N·(depth+1)/T``.  Tests run at depth ≥ 6 (W ≥ 64 partitions) per the
+acceptance bar, and cover the bound, resolution doubling, the accuracy win
+over uniform, and persistence of the mode.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HistogramStore
+
+settings.register_profile("ci", deadline=None, max_examples=8)
+settings.load_profile("ci")
+
+T = 32
+N_PER = 256
+
+
+def _build(w, seed, t_node):
+    rng = np.random.default_rng(seed)
+    parts = {}
+    for d in range(w):
+        kind = d % 3
+        if kind == 0:
+            v = rng.normal(size=N_PER) * 10
+        elif kind == 1:
+            v = rng.gumbel(size=N_PER)
+        else:
+            v = rng.lognormal(-1.0, 0.7, size=N_PER)
+        parts[d] = v.astype(np.float32)
+    store = HistogramStore(num_buckets=T, T_node=t_node)
+    store.ingest_many(parts)
+    return store, parts
+
+
+def _measured_error(h, pooled, beta):
+    b = np.asarray(h.boundaries, np.float64)
+    true_sizes = (
+        np.searchsorted(pooled, b[1:], side="left")
+        - np.searchsorted(pooled, b[:-1], side="left")
+    ).astype(np.float64)
+    true_sizes[-1] += np.sum(pooled == b[-1])
+    return np.abs(true_sizes - pooled.size / beta).max()
+
+
+def _assert_bound_holds(w, seed, windows_extra=4, betas=(8, 16)):
+    store, parts = _build(w, seed, "geometric")
+    assert store._tree.levels >= 6
+    rng = np.random.default_rng(seed + 1)
+    windows = [(0, w - 1)] + [
+        tuple(sorted((int(rng.integers(0, w)), int(rng.integers(0, w)))))
+        for _ in range(windows_extra)
+    ]
+    for beta in betas:
+        for lo, hi in windows:
+            h, eps = store.query(lo, hi, beta)
+            pooled = np.sort(
+                np.concatenate([parts[d] for d in range(lo, hi + 1)])
+            )
+            assert _measured_error(h, pooled, beta) <= eps + 1e-3
+
+
+def test_measured_error_within_reported_bound_at_depth6():
+    """The acceptance property: at depth ≥ 6, every geometric-mode answer's
+    true occupancy error stays within its reported ε_total."""
+    _assert_bound_holds(64, 0)
+
+
+@pytest.mark.slow
+@given(st.sampled_from([64, 70, 100]), st.integers(0, 2**31 - 1))
+def test_measured_error_within_reported_bound_randomized(w, seed):
+    """Randomized widths/seeds/windows of the depth ≥ 6 bound property."""
+    _assert_bound_holds(w, seed)
+
+
+def test_node_resolution_doubles_per_level():
+    store, _ = _build(64, 0, "geometric")
+    tree = store._tree
+    for (lvl, idx), nd in tree.nodes.items():
+        if lvl == 0:
+            assert nd.num_buckets == T
+        elif nd.leaves == 1 << lvl:  # true pair-merged full nodes
+            assert nd.num_buckets == T << lvl
+    assert tree.node_T(0) == T and tree.node_T(6) == T << 6
+
+
+def test_geometric_bound_depth_independent_and_beats_uniform():
+    """At depth ≥ 6 the geometric full-window bound sits below both the
+    uniform mode's bound and the 4N/T series limit plus integer slack."""
+    w = 64
+    geo, parts = _build(w, 3, "geometric")
+    uni, _ = _build(w, 3, None)
+    n = w * N_PER
+    beta = 16
+    hg, eps_geo = geo.query(0, w - 1, beta)
+    hu, eps_uni = uni.query(0, w - 1, beta)
+    assert eps_geo < eps_uni
+    # series limit 4N/T, + one single-level query term 2N/T, + integer
+    # slack (+4 per internal merge, +2 per merged node at query time)
+    assert eps_geo <= 4 * n / T + 2 * n / T + 4 * w + 2 * 16
+    # the uniform bound provably grows with depth; geometric must not
+    depth = geo._tree.levels
+    assert eps_uni >= 2 * n / T * (depth / 2)
+    # and the geometric answer is at least as accurate in practice
+    pooled = np.sort(np.concatenate([parts[d] for d in range(w)]))
+    assert _measured_error(hg, pooled, beta) <= eps_geo + 1e-3
+
+
+def test_geometric_incremental_matches_bulk():
+    """set_leaf pull-ups and the level-batched bulk build agree bit for bit
+    in geometric mode too."""
+    rng = np.random.default_rng(9)
+    parts = {
+        d: rng.normal(size=N_PER).astype(np.float32) for d in range(65)
+    }
+    bulk = HistogramStore(num_buckets=T, T_node="geometric")
+    bulk.ingest_many(parts)
+    inc = HistogramStore(num_buckets=T, T_node="geometric")
+    for d in sorted(parts):
+        inc.ingest(d, parts[d])
+    for (a, b) in [(0, 64), (13, 49), (7, 7)]:
+        h1, e1 = bulk.query(a, b, beta=8)
+        h2, e2 = inc.query(a, b, beta=8)
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2
+
+
+def test_geometric_mode_persists_through_save_load(tmp_path):
+    store, _ = _build(64, 5, "geometric")
+    path = str(tmp_path / "geo.npz")
+    store.save(path)
+    loaded = HistogramStore.load(path)
+    assert loaded.T_node == "geometric"
+    assert loaded._tree.geometric
+    assert loaded._tree.nodes.keys() == store._tree.nodes.keys()
+    h1, e1 = store.query(0, 63, beta=16)
+    h2, e2 = loaded.query(0, 63, beta=16)
+    np.testing.assert_array_equal(
+        np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+    )
+    np.testing.assert_array_equal(np.asarray(h1.sizes), np.asarray(h2.sizes))
+    assert e1 == e2
+    # a post-reload ingest keeps doubling resolution (config survived)
+    rng = np.random.default_rng(6)
+    loaded.ingest(64, rng.normal(size=N_PER).astype(np.float32))
+    assert loaded._tree.node_T(3) == T << 3
+
+
+def test_unknown_t_node_mode_rejected():
+    with pytest.raises(ValueError):
+        HistogramStore(num_buckets=8, T_node="exponential")

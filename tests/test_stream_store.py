@@ -88,6 +88,39 @@ def test_incremental_ingest_matches_batch():
     np.testing.assert_allclose(np.asarray(h1.boundaries), np.asarray(h2.boundaries))
 
 
+def test_save_load_preserves_store_config(tmp_path):
+    """T_node, engine, and cache_size survive the npz round trip — a store
+    saved with a custom Merger config must not silently reload defaults."""
+    rng = np.random.default_rng(9)
+    store = HistogramStore(
+        num_buckets=64, engine="flat", T_node=32, cache_size=7
+    )
+    for d in range(4):
+        store.ingest(d, rng.normal(size=500).astype(np.float32))
+    path = str(tmp_path / "cfg.npz")
+    store.save(path)
+    loaded = HistogramStore.load(path)
+    assert loaded.engine == "flat"
+    assert loaded.T_node == 32
+    assert loaded.cache_size == 7
+    assert loaded._tree.T_node == 32
+    assert loaded._tree._cache_size == 7
+
+
+def test_save_leaves_no_stray_tempfiles(tmp_path):
+    """np.savez's implicit .npz suffix used to orphan the mkstemp file on
+    every save — the directory must hold exactly the target afterwards."""
+    import os
+
+    store, _ = make_store(days=3, n=200, T=32)
+    path = str(tmp_path / "summaries.npz")
+    for _ in range(3):  # repeated saves must not accumulate anything
+        store.save(path)
+    assert sorted(os.listdir(tmp_path)) == ["summaries.npz"]
+    loaded = HistogramStore.load(path)
+    assert loaded.ids() == store.ids()
+
+
 def test_ingest_external_summary():
     store = HistogramStore(num_buckets=64)
     v = np.random.default_rng(6).normal(size=1000).astype(np.float32)
