@@ -9,13 +9,16 @@
   * interval_query    — flat vs segment-tree Merger (latency, qps, ε bound)
   * ingest            — per-partition vs batched vs async Summarizer
                         throughput + compile counts (writes BENCH_ingest.json)
+  * tenant            — per-store loop vs registry-batched cross-tenant
+                        query_many (writes BENCH_tenant.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
 import sys
 
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
-from benchmarks import ingest_throughput, interval_query, roofline_report
+from benchmarks import ingest_throughput, interval_query, multi_tenant
+from benchmarks import roofline_report
 
 
 def main() -> None:
@@ -35,6 +38,7 @@ def main() -> None:
         "core_micro": core_micro.main,
         "interval_query": interval_query.main,
         "ingest": ingest_throughput.main,
+        "tenant": multi_tenant.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -105,7 +105,14 @@ import numpy as np
 
 from repro.core.histogram import Histogram, merge, next_pow2
 
-__all__ = ["TreeNode", "IntervalTree", "canonical_decomposition"]
+__all__ = [
+    "TreeNode",
+    "IntervalTree",
+    "canonical_decomposition",
+    "merge_stacks",
+    "pack_node_rows",
+    "selection_eps",
+]
 
 
 @dataclass(frozen=True)
@@ -156,12 +163,15 @@ def canonical_decomposition(lo: int, hi: int) -> list[tuple[int, int]]:
 
 
 @functools.partial(jax.jit, static_argnames=("beta",))
-def _merge_stacks(bounds: jax.Array, sizes: jax.Array, beta: int):
+def merge_stacks(bounds: jax.Array, sizes: jax.Array, beta: int):
     """Batched merge: ``(Q, k, T+1)``/``(Q, k, T)`` → ``(Q, β+1)``/``(Q, β)``.
 
     One compile per static ``(Q, k, T, β)``; ``query`` pads ``k`` to a power
     of two and ``query_many`` pads a whole batch to one shape, so the cache
-    stays small under production traffic.
+    stays small under production traffic.  Shared by every batched Merger
+    path: the tree's own queries, its level maintenance, and the
+    cross-tenant ``TenantRegistry.query_many`` (core/tenant.py), which
+    stacks canonical node sets from *different* trees into one block.
     """
     return jax.vmap(lambda b, s: merge(Histogram(b, s), beta))(bounds, sizes)
 
@@ -177,6 +187,48 @@ def _pad_summary(
     return (
         np.concatenate([b, np.repeat(b[-1:], pad)]),
         np.concatenate([s, np.zeros((pad,), s.dtype)]),
+    )
+
+
+def pack_node_rows(
+    rows: Sequence[Sequence[TreeNode]],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-query node sets into one ``(Q, k_pad, T_pad)`` block.
+
+    ``k`` pads to the next power of two with rows of zero-mass copies of a
+    real boundary; ``T`` pads merge_list-style.  Both are bit-exact (module
+    docstring).  Rows may come from *different* trees (the cross-tenant
+    registry path) — only the summary arrays matter.  An empty row packs to
+    an all-zero-mass constant row: its merge output is well-defined but
+    meaningless, so callers answering queries must filter empty selections
+    first (``HistogramStore.query_many(strict=False)`` returns the
+    documented ``(None, inf)`` placeholder instead of dispatching them).
+    """
+    k_max = max((len(r) for r in rows), default=0)
+    if k_max == 0:
+        raise ValueError("pack_node_rows: every node row is empty")
+    k_pad = next_pow2(k_max)
+    T_pad = max(nd.num_buckets for r in rows for nd in r)
+    Q = len(rows)
+    bounds = np.zeros((Q, k_pad, T_pad + 1), np.float32)
+    sizes = np.zeros((Q, k_pad, T_pad), np.float32)
+    for qi, r in enumerate(rows):
+        for ki, nd in enumerate(r):
+            b, s = _pad_summary(nd.boundaries, nd.sizes, T_pad)
+            bounds[qi, ki] = b
+            sizes[qi, ki] = s
+        if r:  # zero-mass pad rows at a real boundary value of this query
+            bounds[qi, len(r) :] = r[-1].boundaries[-1]
+    return bounds, sizes
+
+
+def selection_eps(sel: Sequence[TreeNode]) -> float:
+    """Composed ``ε_total`` of merging the canonical nodes ``sel`` (module
+    docstring): accumulated per-node bounds + one more Theorem-1 level."""
+    n = sum(nd.n for nd in sel)
+    T_in = min(nd.num_buckets for nd in sel)
+    return float(
+        sum(nd.eps for nd in sel) + 2.0 * n / T_in + 2.0 * len(sel)
     )
 
 
@@ -196,6 +248,10 @@ class IntervalTree:
         self.version = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        # query-path merge dispatch observability (summarize_shapes-style):
+        # every cache-missing query batch adds one dispatch + its shape
+        self.merge_dispatches = 0
+        self.merge_shapes: set[tuple[int, int, int, int]] = set()
         self._cache: OrderedDict[tuple, tuple[Histogram, float]] = (
             OrderedDict()
         )
@@ -355,7 +411,7 @@ class IntervalTree:
                 for pair in padded_kids
             ]
         )
-        bo, so = _merge_stacks(bs, ss, self.node_T(level))
+        bo, so = merge_stacks(bs, ss, self.node_T(level))
         bo, so = np.asarray(bo), np.asarray(so)
         for row, i in enumerate(pairs):
             c0, c1 = kids[row]
@@ -415,38 +471,34 @@ class IntervalTree:
             raise KeyError("no partition summaries in requested interval")
         return sel
 
-    @staticmethod
-    def _eps_of(sel: Sequence[TreeNode]) -> float:
-        n = sum(nd.n for nd in sel)
-        T_in = min(nd.num_buckets for nd in sel)
-        return float(
-            sum(nd.eps for nd in sel) + 2.0 * n / T_in + 2.0 * len(sel)
-        )
+    def _cache_get(self, key: tuple) -> tuple[Histogram, float] | None:
+        """LRU lookup; counts (and refreshes) a hit, leaves misses to the
+        caller — shared by query/query_many and the cross-tenant registry."""
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.cache_hits += 1
+        return hit
 
-    @staticmethod
-    def _pack(
-        rows: Sequence[Sequence[TreeNode]],
+    def _cache_put(self, key: tuple, out: tuple[Histogram, float]) -> None:
+        self._cache[key] = out
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+
+    def _dispatch(
+        self, rows: Sequence[Sequence[TreeNode]], beta: int
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Stack per-query node sets into one ``(Q, k_pad, T_pad)`` block.
+        """One counted merge dispatch over packed node rows.
 
-        ``k`` pads to the next power of two with rows of zero-mass copies of
-        a real boundary; ``T`` pads merge_list-style.  Both are bit-exact
-        (module docstring).
+        Returns host arrays: one device→host transfer for the whole batch
+        beats ``Q`` lazy per-row jax slices by orders of magnitude when
+        answers are unpacked row by row.
         """
-        k_max = max(len(r) for r in rows)
-        k_pad = next_pow2(k_max)
-        T_pad = max(nd.num_buckets for r in rows for nd in r)
-        Q = len(rows)
-        bounds = np.empty((Q, k_pad, T_pad + 1), np.float32)
-        sizes = np.zeros((Q, k_pad, T_pad), np.float32)
-        for qi, r in enumerate(rows):
-            for ki, nd in enumerate(r):
-                b, s = _pad_summary(nd.boundaries, nd.sizes, T_pad)
-                bounds[qi, ki] = b
-                sizes[qi, ki] = s
-            # zero-mass pad rows at a real boundary value of this query
-            bounds[qi, len(r) :] = r[-1].boundaries[-1]
-        return bounds, sizes
+        bounds, sizes = pack_node_rows(rows)
+        self.merge_dispatches += 1
+        self.merge_shapes.add(bounds.shape + (int(beta),))
+        bo, so = merge_stacks(bounds, sizes, int(beta))
+        return np.asarray(bo), np.asarray(so)
 
     def query(self, lo: int, hi: int, beta: int) -> tuple[Histogram, float]:
         """β-bucket histogram over ``lo..hi`` plus its composed ``ε_total``.
@@ -455,39 +507,56 @@ class IntervalTree:
         LRU-cached until the next mutation.
         """
         key = (int(lo), int(hi), int(beta), self.version)
-        hit = self._cache.get(key)
+        hit = self._cache_get(key)
         if hit is not None:
-            self._cache.move_to_end(key)
-            self.cache_hits += 1
             return hit
         self.cache_misses += 1
         sel = self._selected(lo, hi)
-        bounds, sizes = self._pack([sel])
-        bo, so = _merge_stacks(bounds, sizes, int(beta))
-        out = (Histogram(bo[0], so[0]), self._eps_of(sel))
-        self._cache[key] = out
-        while len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
+        bo, so = self._dispatch([sel], beta)
+        out = (Histogram(bo[0], so[0]), selection_eps(sel))
+        self._cache_put(key, out)
         return out
 
     def query_many(
         self, intervals: Sequence[tuple[int, int]], beta: int
     ) -> list[tuple[Histogram, float]]:
-        """Answer many interval queries with one jitted merge dispatch.
+        """Answer many interval queries with at most one jitted merge.
 
-        All node sets are padded to a single static ``(k_pad, T_pad)`` shape
-        so the whole batch — the concurrent-dashboard path — is served by a
-        single XLA program regardless of the mix of window lengths.
+        The LRU answer cache is consulted *per interval* first (a repeated
+        dashboard batch costs zero dispatches and counts its hits exactly
+        like :meth:`query`); only the misses — deduplicated, so the same
+        window twice in one batch merges once — are padded to a single
+        static ``(k_pad, T_pad)`` shape and served by one XLA program
+        regardless of the mix of window lengths, then cached for the next
+        batch.
         """
         if not intervals:
             return []
-        sels = [self._selected(lo, hi) for lo, hi in intervals]
-        bounds, sizes = self._pack(sels)
-        bo, so = _merge_stacks(bounds, sizes, int(beta))
-        return [
-            (Histogram(bo[i], so[i]), self._eps_of(sel))
-            for i, sel in enumerate(sels)
+        keys = [
+            (int(lo), int(hi), int(beta), self.version)
+            for lo, hi in intervals
         ]
+        answers: dict[tuple, tuple[Histogram, float]] = {}
+        miss_keys: list[tuple] = []
+        pending: set[tuple] = set()  # dedups repeated misses in this batch
+        for key in keys:
+            if key in answers or key in pending:
+                continue
+            hit = self._cache_get(key)
+            if hit is not None:
+                answers[key] = hit
+            else:
+                self.cache_misses += 1
+                pending.add(key)
+                miss_keys.append(key)
+        if miss_keys:
+            sels = [self._selected(k[0], k[1]) for k in miss_keys]
+            bo, so = self._dispatch(sels, beta)
+            for i, (key, sel) in enumerate(zip(miss_keys, sels)):
+                out = (Histogram(bo[i], so[i]), selection_eps(sel))
+                answers[key] = out
+                self._cache_put(key, out)
+        return [answers[key] for key in keys]
 
     # ---------------------------------------------------------- persistence
     def state(self) -> tuple[dict, dict[str, np.ndarray]]:

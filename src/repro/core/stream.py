@@ -78,9 +78,52 @@ from repro.core.histogram import (
 )
 from repro.core.interval_tree import IntervalTree
 
-__all__ = ["StoredSummary", "HistogramStore"]
+__all__ = ["StoredSummary", "HistogramStore", "atomic_savez"]
 
 _SENTINEL = object()  # shuts down the background ingest worker
+
+
+def _validated(values) -> np.ndarray:
+    """Flatten + reject empty — the synchronous ingest validation rule."""
+    v = np.asarray(values).reshape(-1)
+    if v.shape[0] < 1:
+        raise ValueError("cannot summarize an empty partition")
+    return v
+
+
+def atomic_savez(path: str, meta: dict, payload: dict[str, np.ndarray]) -> None:
+    """Crash-safe npz write: mkstemp + fd write + atomic rename.
+
+    Writing through the open fd keeps np.savez from appending its implicit
+    ``.npz`` suffix (no stray twin files); the rename makes readers see
+    either the old file or the complete new one.  Shared by
+    ``HistogramStore.save`` and the multi-tenant registry's one-file-for-
+    all-tenants save (core/tenant.py).
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, meta=json.dumps(meta), **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+class _PrefixedArrays:
+    """Key-prefixing view over an npz/dict — lets ``IntervalTree.from_state``
+    read its ``tb_*``/``ts_*`` arrays out of a namespaced container."""
+
+    def __init__(self, data, prefix: str):
+        self._data = data
+        self._prefix = prefix
+
+    def __getitem__(self, key: str):
+        return self._data[self._prefix + key]
 
 # Max rows per batched-summarizer dispatch.  Chunking the batch axis keeps
 # the power-of-two row padding waste ≤ ~12 % on large groups (padding 579
@@ -136,6 +179,11 @@ class HistogramStore:
         self.summarize_shapes: set[tuple[int, int, int]] = set()
         self._lock = threading.RLock()  # guards summaries + tree + queries
         self._cv = threading.Condition()  # pending-count synchronization
+        # serializes enqueue against close(): without it a producer could
+        # land an item behind the shutdown sentinel and strand it (leaking
+        # _pending, wedging every later flush).  The worker never takes
+        # this mutex, so close() may hold it across join().
+        self._ingest_mutex = threading.Lock()
         self._pending = 0  # enqueued-but-not-yet-applied partitions
         self._queue: queue.Queue | None = None
         self._worker: threading.Thread | None = None
@@ -241,7 +289,25 @@ class HistogramStore:
     def ingest_many(self, partitions: dict[int, "np.ndarray"]) -> None:
         """Bulk-summarize many partitions — grouped one-dispatch summaries
         plus a single level-batched tree maintenance pass (``log W`` XLA
-        dispatches total) instead of per-partition work."""
+        dispatches total) instead of per-partition work.
+
+        With ``async_ingest=True`` the batch is *enqueued* (input-validated
+        synchronously, like :meth:`ingest_async` — and all-or-nothing, so a
+        bad partition fails the call before anything is enqueued) instead
+        of applied in-line, preserving FIFO prefix visibility with respect
+        to every other enqueued partition — a synchronous bulk apply here
+        could make later partitions visible before earlier queued ones.
+        The worker drains the whole batch into one grouped summarization;
+        call :meth:`flush` for visibility.
+        """
+        if self.async_ingest:
+            validated = {
+                int(pid): _validated(values)
+                for pid, values in partitions.items()
+            }
+            for pid, v in validated.items():
+                self._enqueue(pid, v)
+            return
         self._apply(self._summarize_batch(dict(partitions)))
 
     def _put(self, summ: StoredSummary) -> None:
@@ -273,13 +339,15 @@ class HistogramStore:
         enqueued so far.  Input validation happens here, synchronously, so
         an obviously-bad partition fails the caller instead of the queue.
         """
-        values = np.asarray(values).reshape(-1)
-        if values.shape[0] < 1:
-            raise ValueError("cannot summarize an empty partition")
-        self._ensure_worker()
-        with self._cv:
-            self._pending += 1
-        self._queue.put((int(partition_id), values))
+        self._enqueue(int(partition_id), _validated(values))
+
+    def _enqueue(self, pid: int, values: np.ndarray) -> None:
+        """Post-validation enqueue body shared with async ``ingest_many``."""
+        with self._ingest_mutex:
+            self._ensure_worker()
+            with self._cv:
+                self._pending += 1
+            self._queue.put((pid, values))
 
     def flush(self) -> None:
         """Block until every enqueued partition is summarized and visible.
@@ -293,8 +361,11 @@ class HistogramStore:
         with self._cv:
             while self._pending > 0:
                 self._cv.wait()
-        if self._async_errors:
+            # swap-read under _cv: the worker appends under the same lock,
+            # so a batch failing concurrently with this flush can neither
+            # vanish into the swapped-out list nor be reported twice
             errs, self._async_errors = self._async_errors, []
+        if errs:
             detail = "; ".join(f"partition {pid}: {e!r}" for pid, e in errs)
             raise RuntimeError(
                 f"async ingest failed for {len(errs)} partition(s): {detail}"
@@ -302,10 +373,11 @@ class HistogramStore:
 
     def close(self) -> None:
         """Drain the queue, stop the background worker, surface errors."""
-        if self._worker is not None and self._worker.is_alive():
-            self._queue.put(_SENTINEL)
-            self._worker.join()
-        self._worker = None
+        with self._ingest_mutex:
+            if self._worker is not None and self._worker.is_alive():
+                self._queue.put(_SENTINEL)
+                self._worker.join()
+            self._worker = None
         self.flush()
 
     def _ensure_worker(self) -> None:
@@ -348,13 +420,14 @@ class HistogramStore:
                     try:
                         self._apply(self._summarize_batch({pid: values}))
                     except BaseException as e:
-                        self._async_errors.append((pid, e))
+                        with self._cv:  # pairs with flush()'s swap-read
+                            self._async_errors.append((pid, e))
         finally:
             with self._cv:
                 self._pending -= len(batch)
                 self._cv.notify_all()
 
-    def _sync_tree(self, ids: list[int], lo: int, hi: int) -> None:
+    def _sync_tree(self, ids: list[int], lo: int, hi: int) -> list[tuple[int, int]]:
         """Re-sync after direct ``summaries`` dict mutation (the documented
         summary-loss idiom ``del store.summaries[pid]``, or outright row
         replacement).  Every tree leaf shares its arrays with the stored
@@ -362,7 +435,9 @@ class HistogramStore:
         scan — the price of supporting raw dict mutation on the hot path;
         callers that only mutate through ingest* never trigger a rebuild.
         Replaced leaves are re-pointed incrementally (O(log W) merges each);
-        deletions rebuild level-batched."""
+        deletions rebuild level-batched.  Returns the (post-sync) canonical
+        decomposition of ``[lo, hi]`` so hot callers (the cross-tenant
+        registry) don't decompose twice."""
         tree = self._tree
         stale = []
         for pid in ids:
@@ -382,6 +457,8 @@ class HistogramStore:
         sel = tree.decompose(lo, hi)
         if sum(tree.nodes[k].leaves for k in sel) != len(ids):
             self.rebuild_tree()  # leaves were deleted from the dict
+            sel = tree.decompose(lo, hi)
+        return sel
 
     # --------------------------------------------------------------- Merger
     def query(
@@ -427,23 +504,45 @@ class HistogramStore:
         beta: int,
         *,
         strict: bool = True,
-    ) -> list[tuple[Histogram, float]]:
+    ) -> list[tuple[Histogram | None, float]]:
         """Answer a batch of interval queries with one jitted merge.
 
         The serving path for many concurrent users: every query's canonical
         node set is padded to one static shape, so the whole batch costs a
-        single XLA dispatch regardless of the mix of window lengths.
-        ``strict`` behaves exactly as in :meth:`query` (and defaults the
-        same way): missing partitions raise unless ``strict=False``.
+        single XLA dispatch regardless of the mix of window lengths (cached
+        repeats cost none at all).  ``strict`` behaves exactly as in
+        :meth:`query` (and defaults the same way): missing partitions raise
+        unless ``strict=False``.  With ``strict=False`` an interval holding
+        *zero* present summaries does not kill the batch (summary-loss
+        tolerance): its slot in the returned list is the placeholder
+        ``(None, float("inf"))`` — indexing is stable, result ``i`` always
+        answers ``intervals[i]``.
         """
         with self._lock:
-            for lo, hi in intervals:
+            results: list[tuple[Histogram | None, float]] = [None] * len(
+                intervals
+            )
+            live: list[int] = []
+            for qi, (lo, hi) in enumerate(intervals):
                 ids = [i for i in range(lo, hi + 1) if i in self.summaries]
                 if strict and len(ids) != hi - lo + 1:
                     missing = sorted(set(range(lo, hi + 1)) - set(ids))
                     raise KeyError(f"missing partition summaries: {missing}")
                 self._sync_tree(ids, lo, hi)
-            return self._tree.query_many(intervals, beta)
+                if ids:
+                    live.append(qi)
+                elif strict:  # degenerate strict span (hi < lo)
+                    raise KeyError(
+                        "no partition summaries in requested interval"
+                    )
+                else:
+                    results[qi] = (None, float("inf"))
+            answered = self._tree.query_many(
+                [intervals[qi] for qi in live], beta
+            )
+            for qi, ans in zip(live, answered):
+                results[qi] = ans
+            return results
 
     def quantile_query(
         self, lo: int, hi: int, q, beta: int | None = None
@@ -455,6 +554,51 @@ class HistogramStore:
         return np.asarray(quantile(h, np.asarray(q)))
 
     # ---------------------------------------------------------- persistence
+    def _state(self, prefix: str = "") -> tuple[dict, dict[str, np.ndarray]]:
+        """(json-able meta, array payload) of summaries + tree nodes.
+
+        Array keys are ``prefix``-namespaced so many stores can share one
+        npz (the ``TenantRegistry`` container format).  Callers must hold
+        or not need ``_lock``.
+        """
+        tree_meta, tree_arrays = self._tree.state()
+        meta = {
+            "ids": sorted(self.summaries),
+            "n": {str(p): s.n for p, s in self.summaries.items()},
+            "tree": tree_meta,
+        }
+        payload = {}
+        for pid, s in self.summaries.items():
+            payload[f"{prefix}b_{pid}"] = s.boundaries
+            payload[f"{prefix}s_{pid}"] = s.sizes
+        for key, arr in tree_arrays.items():
+            payload[f"{prefix}{key}"] = arr
+        return meta, payload
+
+    def _restore(self, meta: dict, data, prefix: str = "") -> None:
+        """Rebuild summaries + tree from a :meth:`_state`-shaped payload."""
+        for pid in meta["ids"]:
+            b = data[f"{prefix}b_{pid}"]
+            s = data[f"{prefix}s_{pid}"]
+            self.summaries[int(pid)] = StoredSummary(
+                partition_id=int(pid),
+                n=int(meta.get("n", {}).get(str(pid), s.sum())),
+                boundaries=b,
+                sizes=s,
+            )
+        if "tree" in meta:  # restore pre-merged nodes — no re-merge on load
+            self._tree = IntervalTree.from_state(
+                meta["tree"],
+                _PrefixedArrays(data, prefix),
+                cache_size=self.cache_size,
+            )
+            # share leaf storage with the summary rows so _sync_tree's
+            # pointer-identity staleness scan passes without re-merging
+            for pid, s in self.summaries.items():
+                self._tree.adopt_leaf_arrays(pid, s.boundaries, s.sizes)
+        else:  # summary file from an older layout: rebuild level-batched
+            self.rebuild_tree()
+
     def save(self, path: str) -> None:
         """Atomic write (tmpfile + rename) — summary files survive crashes.
 
@@ -464,68 +608,33 @@ class HistogramStore:
         ``cache_size``) so a reload reconstructs the same Merger.
         """
         with self._lock:
-            payload = {}
-            tree_meta, tree_arrays = self._tree.state()
+            state_meta, payload = self._state()
             meta = {
                 "num_buckets": self.num_buckets,
                 "engine": self.engine,
                 "T_node": self.T_node,
                 "cache_size": self.cache_size,
-                "ids": sorted(self.summaries),
-                "n": {str(p): s.n for p, s in self.summaries.items()},
-                "tree": tree_meta,
+                **state_meta,
             }
-            for pid, s in self.summaries.items():
-                payload[f"b_{pid}"] = s.boundaries
-                payload[f"s_{pid}"] = s.sizes
-            payload.update(tree_arrays)
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(
-            dir=os.path.dirname(path) or ".", suffix=".npz"
-        )
-        try:
-            # write through the open fd: np.savez never sees a suffix-less
-            # path, so no stray ``tmp`` + ``tmp.npz`` twin files
-            with os.fdopen(fd, "wb") as f:
-                np.savez(f, meta=json.dumps(meta), **payload)
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        atomic_savez(path, meta, payload)
 
     @classmethod
     def load(cls, path: str) -> "HistogramStore":
-        data = np.load(path, allow_pickle=False)
-        meta = json.loads(str(data["meta"]))
-        T_node = meta.get("T_node")
-        store = cls(
-            num_buckets=int(meta["num_buckets"]),
-            engine=str(meta.get("engine", "tree")),
-            T_node=T_node if T_node in (None, "geometric") else int(T_node),
-            cache_size=int(meta.get("cache_size", 128)),
-        )
-        for pid in meta["ids"]:
-            b = data[f"b_{pid}"]
-            s = data[f"s_{pid}"]
-            store.summaries[int(pid)] = StoredSummary(
-                partition_id=int(pid),
-                n=int(meta.get("n", {}).get(str(pid), s.sum())),
-                boundaries=b,
-                sizes=s,
+        # context-managed NpzFile: every array is materialized inside the
+        # block, so the fd closes here instead of leaking for the store's
+        # lifetime (an NpzFile holds its file handle open until closed)
+        with np.load(path, allow_pickle=False) as data:
+            meta = json.loads(str(data["meta"]))
+            T_node = meta.get("T_node")
+            store = cls(
+                num_buckets=int(meta["num_buckets"]),
+                engine=str(meta.get("engine", "tree")),
+                T_node=(
+                    T_node if T_node in (None, "geometric") else int(T_node)
+                ),
+                cache_size=int(meta.get("cache_size", 128)),
             )
-        if "tree" in meta:  # restore pre-merged nodes — no re-merge on load
-            store._tree = IntervalTree.from_state(
-                meta["tree"], data, cache_size=store.cache_size
-            )
-            # share leaf storage with the summary rows so _sync_tree's
-            # pointer-identity staleness scan passes without re-merging
-            for pid, s in store.summaries.items():
-                store._tree.adopt_leaf_arrays(pid, s.boundaries, s.sizes)
-        else:  # summary file from an older layout: rebuild level-batched
-            store.rebuild_tree()
+            store._restore(meta, data)
         return store
 
     # ------------------------------------------------------------- utility

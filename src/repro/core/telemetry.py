@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.histogram import Histogram, build_exact, merge, quantile
 from repro.core.distributed import tensor_histogram_in_step
+from repro.core.tenant import TenantRegistry
 
 __all__ = [
     "tensor_summary",
@@ -28,6 +29,7 @@ __all__ = [
     "grad_quantile",
     "StragglerDetector",
     "TelemetryLog",
+    "TelemetryHub",
 ]
 
 
@@ -182,6 +184,67 @@ class TelemetryLog:
 
     def last(self, name: str) -> float:
         return self.scalars[name][-1][1]
+
+
+@dataclass
+class TelemetryHub:
+    """Many named metric streams through ONE multi-tenant registry.
+
+    The serving-plane counterpart of :class:`TelemetryLog`: every metric
+    (a gradient leaf's magnitudes, a host's step times, a service's
+    latencies) is a *tenant* of a shared :class:`TenantRegistry`, and
+    every window of raw samples (a step range, a day) is a partition —
+    so one registry answers "p95 of ANY metric over ANY window" with
+    per-metric stores, per-metric LRU caches, and a whole dashboard of
+    cross-metric panels in a single merge dispatch
+    (``TenantRegistry.query_many``).
+
+    ``async_record=True`` routes samples through the registry's shared
+    worker pool — the trainer thread only enqueues; call :meth:`flush`
+    before reading fresh windows.
+    """
+
+    T: int = 128
+    async_record: bool = False
+    registry: TenantRegistry = None
+
+    def __post_init__(self) -> None:
+        if self.registry is None:
+            self.registry = TenantRegistry(num_buckets=self.T)
+
+    def record(self, metric: str, partition_id: int, values) -> None:
+        """Summarize one window of raw samples for the named metric."""
+        if self.async_record:
+            self.registry.ingest_async(metric, partition_id, values)
+        else:
+            self.registry.ingest(metric, partition_id, values)
+
+    def flush(self) -> None:
+        self.registry.flush()
+
+    def close(self) -> None:
+        self.registry.close()
+
+    def metrics(self) -> list[str]:
+        return self.registry.names()
+
+    def quantile(
+        self, metric: str, lo: int, hi: int, q, beta: int | None = None
+    ) -> np.ndarray:
+        """q-quantile of one metric over windows ``lo..hi`` (paper-style:
+        'p95 latency for any interval', now for any of N metrics)."""
+        return self.registry[metric].quantile_query(lo, hi, q, beta)
+
+    def dashboard(
+        self,
+        panels: "list[tuple[str, int, int]]",
+        beta: int = 64,
+    ) -> list[tuple[Histogram | None, float]]:
+        """Answer a whole dashboard — ``[(metric, lo, hi), ...]`` — with at
+        most one cross-tenant merge dispatch; missing metrics/windows come
+        back as the ``(None, inf)`` placeholder instead of failing the
+        refresh."""
+        return self.registry.query_many(panels, beta, strict=False)
 
 
 def timed(fn: Callable) -> Callable:

@@ -1,0 +1,441 @@
+"""Multi-tenant registry: many named HistogramStores, one serving plane.
+
+A production deployment of the paper's Summarizer/Merger framework tracks
+not one metric but thousands — per-service latency, per-table scan sizes,
+per-gradient-leaf magnitudes.  One ``HistogramStore`` + ``IntervalTree``
+per metric answers each tenant correctly, but N tenants then cost N query
+dispatches per dashboard refresh and N independent ingest threads.  The
+``TenantRegistry`` keeps the stores (shared configuration, one per named
+tenant) and collapses the two hot cross-tenant paths:
+
+Cross-tenant batched queries (one XLA dispatch)
+-----------------------------------------------
+``query_many([(tenant, lo, hi), ...], beta)`` resolves each query's
+canonical segment-tree node set inside its own tenant's tree, then packs
+*all* miss selections — across tenants — into one static-shape
+``(Q, k_pad, T_pad)`` block and answers the whole batch with a single
+jitted ``merge_stacks`` call (the same free function the per-tree engine
+uses; stacking node sets from different trees is sound because only the
+summary arrays matter and the shared registry configuration keeps ``T``
+uniform).  Per-tenant LRU answer caches are consulted first and populated
+after, exactly like the single-tree ``query_many``, so a repeated
+dashboard batch costs zero dispatches.
+
+Consistency: each answer is a consistent snapshot of *its* tenant (node
+selection happens under that store's lock); there is no cross-tenant
+barrier — two tenants' answers in one batch may reflect different ingest
+frontiers, which is the right contract for independent metrics.
+
+Shared async ingest (one worker pool)
+-------------------------------------
+``ingest_async(tenant, pid, values)`` fans every tenant's partitions into
+a single bounded-queue worker pool instead of one thread per store.  Each
+drained batch is grouped by tenant and summarized with the store's grouped
+one-dispatch summarizer; per-partition failures are isolated (the batch is
+retried row by row) and surface on :meth:`flush`, which blocks until
+everything enqueued so far is visible.  With ``workers > 1`` partitions
+are routed to a worker by a stable hash of the tenant name, so per-tenant
+FIFO prefix visibility is preserved (global cross-tenant ordering is not —
+again the right contract for independent metrics).
+
+Shared persistence (one npz, atomic)
+------------------------------------
+``save``/``load`` hold every tenant in a single npz written with the same
+mkstemp + rename discipline as ``HistogramStore.save`` — a crash leaves
+either the complete old registry or the complete new one.  Array keys are
+namespaced ``t{i}_`` per tenant via ``HistogramStore._state``.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.histogram import Histogram
+from repro.core.interval_tree import (
+    merge_stacks,
+    pack_node_rows,
+    selection_eps,
+)
+from repro.core.stream import HistogramStore, _validated, atomic_savez
+
+__all__ = ["TenantRegistry"]
+
+_SENTINEL = object()  # shuts down one pool worker
+
+_SCHEMA = "tenant_registry/v1"
+
+
+class TenantRegistry:
+    """Many named stores, shared config, one-dispatch cross-tenant serving."""
+
+    def __init__(
+        self,
+        num_buckets: int,
+        *,
+        engine: str = "tree",
+        T_node: int | str | None = None,
+        cache_size: int = 128,
+        queue_size: int = 4096,
+        workers: int = 1,
+    ):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.num_buckets = int(num_buckets)
+        self.engine = engine
+        self.T_node = T_node
+        self.cache_size = int(cache_size)
+        self.queue_size = int(queue_size)
+        self.workers = int(workers)
+        self._stores: dict[str, HistogramStore] = {}
+        self._lock = threading.RLock()  # guards the tenant dict + pool setup
+        # shared ingest pool state (mirrors HistogramStore's single worker)
+        # serializes enqueue against close(): without it a producer could
+        # land an item behind a shutdown sentinel (or hit the torn-down
+        # queue list) and strand it, leaking _pending and wedging flush.
+        # Workers never take this mutex, so close() holds it across join().
+        self._ingest_mutex = threading.Lock()
+        self._cv = threading.Condition()
+        self._pending = 0
+        self._queues: list[queue.Queue] | None = None
+        self._threads: list[threading.Thread] = []
+        # every failed partition since the last flush: [(tenant, pid, exc)]
+        self._errors: list[tuple[str, int, BaseException]] = []
+        # cross-tenant merge dispatch observability (summarize_shapes-style)
+        self.merge_dispatches = 0
+        self.merge_shapes: set[tuple[int, int, int, int]] = set()
+
+    # -------------------------------------------------------------- tenants
+    def tenant(self, name: str) -> HistogramStore:
+        """Get-or-create the named store (shared registry configuration).
+
+        Names are str()-normalized everywhere (lookup and storage alike),
+        so ``reg.tenant(5)`` and ``reg.tenant("5")`` are the same tenant.
+        Stores are created synchronous (``async_ingest=False``) — the
+        registry's own worker pool is the async plane.
+        """
+        name = str(name)
+        with self._lock:
+            store = self._stores.get(name)
+            if store is None:
+                store = HistogramStore(
+                    num_buckets=self.num_buckets,
+                    engine=self.engine,
+                    T_node=self.T_node,
+                    cache_size=self.cache_size,
+                )
+                self._stores[name] = store
+            return store
+
+    def __getitem__(self, name: str) -> HistogramStore:
+        with self._lock:
+            try:
+                return self._stores[str(name)]
+            except KeyError:
+                raise KeyError(f"unknown tenant: {name!r}") from None
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return str(name) in self._stores
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._stores)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._stores)
+
+    # ----------------------------------------------------------- Summarizer
+    def ingest(self, tenant: str, partition_id: int, values):
+        """Synchronous single-partition ingest into the named tenant."""
+        return self.tenant(tenant).ingest(partition_id, values)
+
+    def ingest_many(self, tenant: str, partitions: dict[int, np.ndarray]) -> None:
+        """Grouped one-dispatch bulk ingest into the named tenant."""
+        self.tenant(tenant).ingest_many(partitions)
+
+    def ingest_async(self, tenant: str, partition_id: int, values) -> None:
+        """Enqueue one partition for the shared background worker pool.
+
+        Validation is synchronous (a bad partition fails the caller, not
+        the pool); visibility comes with the worker's next flush of the
+        batch — call :meth:`flush` to wait for everything enqueued so far.
+        """
+        values = _validated(values)
+        name = str(tenant)
+        self.tenant(name)  # create eagerly: queries can see the tenant
+        with self._ingest_mutex:
+            self._ensure_pool()
+            with self._cv:
+                self._pending += 1
+            # stable per-tenant routing keeps each tenant's partitions FIFO
+            q = self._queues[self._route(name)]
+            q.put((name, int(partition_id), values))
+
+    def flush(self) -> None:
+        """Block until every enqueued partition is visible; surface errors.
+
+        Re-raises (wrapped) every per-partition failure the pool hit since
+        the last flush; valid partitions co-batched with a poison one are
+        retried and applied individually, so the pool never wedges.
+        """
+        with self._cv:
+            while self._pending > 0:
+                self._cv.wait()
+            errs, self._errors = self._errors, []
+        if errs:
+            detail = "; ".join(
+                f"tenant {t!r} partition {pid}: {e!r}" for t, pid, e in errs
+            )
+            raise RuntimeError(
+                f"async ingest failed for {len(errs)} partition(s): {detail}"
+            ) from errs[0][2]
+
+    def close(self) -> None:
+        """Drain the pool, stop its workers, surface pending errors."""
+        with self._ingest_mutex:
+            with self._lock:
+                threads, queues = self._threads, self._queues
+                self._threads, self._queues = [], None
+            if queues is not None:
+                for q in queues:
+                    q.put(_SENTINEL)
+                for t in threads:
+                    t.join()
+        self.flush()
+
+    def _route(self, name: str) -> int:
+        # hash() is salted per process but stable within one — all that
+        # per-tenant FIFO needs
+        return hash(name) % self.workers
+
+    def _ensure_pool(self) -> None:
+        with self._lock:
+            if self._queues is not None and all(
+                t.is_alive() for t in self._threads
+            ):
+                return
+            self._queues = [
+                queue.Queue(maxsize=self.queue_size)
+                for _ in range(self.workers)
+            ]
+            self._threads = [
+                threading.Thread(
+                    target=self._drain_loop,
+                    args=(q,),
+                    name=f"tenant-ingest-{i}",
+                    daemon=True,
+                )
+                for i, q in enumerate(self._queues)
+            ]
+            for t in self._threads:
+                t.start()
+
+    def _drain_loop(self, q: queue.Queue) -> None:
+        while True:
+            item = q.get()
+            if item is _SENTINEL:
+                return
+            batch = [item]
+            stop = False
+            while True:  # drain whatever else is already queued — one flush
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._flush_batch(batch)
+            if stop:
+                return
+
+    def _flush_batch(
+        self, batch: list[tuple[str, int, np.ndarray]]
+    ) -> None:
+        try:
+            groups: dict[str, dict[int, np.ndarray]] = {}
+            for name, pid, values in batch:
+                groups.setdefault(name, {})[pid] = values
+            for name, parts in groups.items():
+                store = self.tenant(name)
+                try:
+                    store._apply(store._summarize_batch(parts))
+                except BaseException:
+                    # isolate poison rows: retry one partition at a time so
+                    # a single bad partition cannot drop its co-batched
+                    # valid neighbours (errors surface on flush())
+                    for pid, values in parts.items():
+                        try:
+                            store._apply(store._summarize_batch({pid: values}))
+                        except BaseException as e:
+                            with self._cv:  # pairs with flush's swap-read
+                                self._errors.append((name, pid, e))
+        finally:
+            with self._cv:
+                self._pending -= len(batch)
+                self._cv.notify_all()
+
+    # --------------------------------------------------------------- Merger
+    def query(
+        self, tenant: str, lo: int, hi: int, beta: int, **kwargs
+    ) -> tuple[Histogram, float]:
+        """Single-tenant query — delegates to the named store."""
+        return self[tenant].query(lo, hi, beta, **kwargs)
+
+    def query_many(
+        self,
+        queries: Sequence[tuple[str, int, int]],
+        beta: int,
+        *,
+        strict: bool = True,
+    ) -> list[tuple[Histogram | None, float]]:
+        """Answer ``[(tenant, lo, hi), ...]`` with ≤ one merge dispatch.
+
+        Each query's canonical node set is collected under its own store's
+        lock (per-tenant snapshot consistency), per-tenant LRU caches are
+        consulted first, and all misses — deduplicated, across tenants —
+        are packed into one static-shape block and merged by a single
+        jitted ``merge_stacks`` call.  Answers are returned in query order
+        (stable indexing) and populated back into each tenant's cache.
+
+        ``strict=False`` applies the store-level summary-loss contract per
+        query: an unknown tenant or an interval with zero present summaries
+        yields the placeholder ``(None, float("inf"))`` instead of killing
+        the batch; with ``strict=True`` both raise ``KeyError``.
+        """
+        results: list[tuple[Histogram | None, float] | None] = [None] * len(
+            queries
+        )
+        # mkey (store id + cache key) → (miss row, result slots)
+        miss_map: dict[tuple, tuple[int, list[int]]] = {}
+        miss_sels: list[list] = []
+        miss_meta: list[tuple[HistogramStore, tuple]] = []
+        for qi, (name, lo, hi) in enumerate(queries):
+            if not strict and name not in self:
+                results[qi] = (None, float("inf"))
+                continue
+            store = self[name]
+            tree = store._tree
+            with store._lock:
+                ids = [
+                    i for i in range(lo, hi + 1) if i in store.summaries
+                ]
+                if strict and len(ids) != hi - lo + 1:
+                    missing = sorted(set(range(lo, hi + 1)) - set(ids))
+                    raise KeyError(
+                        f"tenant {name!r}: missing partition summaries: "
+                        f"{missing}"
+                    )
+                keys = store._sync_tree(ids, lo, hi)
+                if not ids:
+                    if strict:
+                        raise KeyError(
+                            f"tenant {name!r}: no partition summaries in "
+                            f"requested interval"
+                        )
+                    results[qi] = (None, float("inf"))
+                    continue
+                key = (int(lo), int(hi), int(beta), tree.version)
+                mkey = (id(store), key)
+                prior = miss_map.get(mkey)
+                if prior is not None:  # duplicate within this batch
+                    prior[1].append(qi)
+                    continue
+                hit = tree._cache_get(key)
+                if hit is not None:
+                    results[qi] = hit
+                    continue
+                tree.cache_misses += 1
+                sel = [tree.nodes[k] for k in keys]
+                miss_map[mkey] = (len(miss_sels), [qi])
+                miss_sels.append(sel)
+                miss_meta.append((store, key))
+        if miss_sels:
+            # ONE cross-tenant merge dispatch for the whole batch; TreeNode
+            # summaries are immutable, so packing outside the store locks
+            # is safe
+            bounds, sizes = pack_node_rows(miss_sels)
+            with self._lock:  # counters are read by concurrent servers
+                self.merge_dispatches += 1
+                self.merge_shapes.add(bounds.shape + (int(beta),))
+            bo, so = merge_stacks(bounds, sizes, int(beta))
+            # one device→host transfer; per-row unpacking is then free views
+            bo, so = np.asarray(bo), np.asarray(so)
+            for row, slots in miss_map.values():
+                store, key = miss_meta[row]
+                out = (
+                    Histogram(bo[row], so[row]),
+                    selection_eps(miss_sels[row]),
+                )
+                with store._lock:
+                    store._tree._cache_put(key, out)
+                for qi in slots:
+                    results[qi] = out
+        return results
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Atomic one-npz write of every tenant (summaries + tree nodes)."""
+        with self._lock:
+            names = sorted(self._stores)
+            payload: dict[str, np.ndarray] = {}
+            stores_meta: dict[str, dict] = {}
+            for i, name in enumerate(names):
+                store = self._stores[name]
+                with store._lock:
+                    meta_i, payload_i = store._state(prefix=f"t{i}_")
+                stores_meta[name] = meta_i
+                payload.update(payload_i)
+            meta = {
+                "schema": _SCHEMA,
+                "num_buckets": self.num_buckets,
+                "engine": self.engine,
+                "T_node": self.T_node,
+                "cache_size": self.cache_size,
+                "tenants": names,
+                "stores": stores_meta,
+            }
+        atomic_savez(path, meta, payload)
+
+    @classmethod
+    def load(cls, path: str) -> "TenantRegistry":
+        with np.load(path, allow_pickle=False) as data:
+            meta = json.loads(str(data["meta"]))
+            if meta.get("schema") != _SCHEMA:
+                raise ValueError(
+                    f"not a tenant registry file: schema="
+                    f"{meta.get('schema')!r}"
+                )
+            T_node = meta.get("T_node")
+            reg = cls(
+                num_buckets=int(meta["num_buckets"]),
+                engine=str(meta.get("engine", "tree")),
+                T_node=(
+                    T_node if T_node in (None, "geometric") else int(T_node)
+                ),
+                cache_size=int(meta.get("cache_size", 128)),
+            )
+            for i, name in enumerate(meta["tenants"]):
+                store = reg.tenant(name)
+                store._restore(meta["stores"][name], data, prefix=f"t{i}_")
+        return reg
+
+    # ------------------------------------------------------------- utility
+    def cache_stats(self) -> dict[str, int]:
+        """Aggregated per-tenant cache counters + registry dispatch count."""
+        with self._lock:
+            stores = list(self._stores.values())
+        hits = sum(s._tree.cache_hits for s in stores)
+        misses = sum(s._tree.cache_misses for s in stores)
+        return {
+            "hits": hits,
+            "misses": misses,
+            "merge_dispatches": self.merge_dispatches,
+            "merge_shapes": len(self.merge_shapes),
+        }

@@ -1,0 +1,320 @@
+"""Regression tests for verified HistogramStore/IntervalTree bugs.
+
+Each test here failed on the pre-fix code:
+
+* ``query_many(strict=False)`` raised ``KeyError`` out of
+  ``IntervalTree._selected`` when any interval in the batch held zero
+  present summaries — one empty query killed the whole batch, violating
+  the documented summary-loss tolerance;
+* ``_async_errors`` was appended from the worker thread and swap-read by
+  ``flush()`` with no common lock — a flush concurrent with a failing
+  batch could drop or double-report errors;
+* ``IntervalTree.query_many`` bypassed the LRU answer cache entirely, so
+  repeated dashboard batches re-merged every window and ``cache_stats``
+  under-counted;
+* ``HistogramStore.load`` never closed its ``NpzFile`` — the fd leaked
+  for the store's lifetime;
+* ``ingest_many`` under ``async_ingest=True`` silently bypassed the queue
+  and applied synchronously, breaking FIFO prefix visibility with respect
+  to concurrently enqueued partitions.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import HistogramStore
+from repro.core.interval_tree import pack_node_rows
+
+T = 32
+BETA = 8
+N_PER = 200
+
+
+def _store(days=6, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    store = HistogramStore(num_buckets=T, **kw)
+    parts = {d: rng.gumbel(size=N_PER).astype(np.float32) for d in range(days)}
+    if kw.get("async_ingest"):
+        return store, parts
+    store.ingest_many(parts)
+    return store, parts
+
+
+# ------------------------------------------------- strict=False empty query
+def test_query_many_tolerates_fully_empty_interval():
+    """An interval with ZERO present summaries must not kill the batch:
+    its slot is the documented (None, inf) placeholder, with stable
+    indexing for every other answer."""
+    store, _ = _store(days=6)
+    intervals = [(0, 5), (100, 200), (2, 4)]  # middle one: nothing present
+    res = store.query_many(intervals, BETA, strict=False)
+    assert len(res) == 3
+    h0, e0 = res[0]
+    assert float(np.asarray(h0.sizes).sum()) == 6 * N_PER
+    assert res[1] == (None, float("inf"))
+    h2, e2 = res[2]
+    assert float(np.asarray(h2.sizes).sum()) == 3 * N_PER
+    # stable indexing: answers bit-match the single-query path
+    h, e = store.query(2, 4, BETA)
+    np.testing.assert_array_equal(np.asarray(h.sizes), np.asarray(h2.sizes))
+    assert e == e2
+
+
+def test_query_many_all_empty_and_strict_still_raises():
+    store, _ = _store(days=4)
+    res = store.query_many([(50, 60), (70, 80)], BETA, strict=False)
+    assert res == [(None, float("inf"))] * 2
+    with pytest.raises(KeyError):
+        store.query_many([(0, 3), (50, 60)], BETA, strict=True)
+
+
+def test_query_many_empty_after_summary_loss():
+    """The documented loss idiom: delete every summary of one window —
+    the batch keeps answering the surviving windows."""
+    store, _ = _store(days=8)
+    for pid in (4, 5):
+        del store.summaries[pid]
+    res = store.query_many([(0, 3), (4, 5), (6, 7)], BETA, strict=False)
+    assert float(np.asarray(res[0][0].sizes).sum()) == 4 * N_PER
+    assert res[1] == (None, float("inf"))
+    assert float(np.asarray(res[2][0].sizes).sum()) == 2 * N_PER
+
+
+def test_pack_node_rows_guards_empty_rows():
+    """pack_node_rows used to index r[-1] on an empty row (IndexError);
+    now an empty row packs to a zero-mass block and an all-empty pack
+    raises a clear ValueError."""
+    store, _ = _store(days=4)
+    tree = store._tree
+    sel = [tree.nodes[k] for k in tree.decompose(0, 3)]
+    bounds, sizes = pack_node_rows([sel, []])
+    assert bounds.shape[0] == 2 and sizes[1].sum() == 0.0
+    with pytest.raises(ValueError):
+        pack_node_rows([[], []])
+
+
+# ------------------------------------------------------- async error race
+def test_async_error_appends_hold_the_flush_lock():
+    """The worker's error append and flush()'s swap-read must synchronize
+    on the same condition: pre-fix the append ran lock-free, so a flush
+    racing a failing batch could lose the error into the swapped-out list.
+    A non-reentrant lock makes the invariant deterministic to check."""
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    store._cv = threading.Condition(threading.Lock())  # non-reentrant
+    unlocked_appends = []
+
+    class Guarded(list):
+        def append(self, item):
+            if store._cv._lock.acquire(blocking=False):
+                store._cv._lock.release()
+                unlocked_appends.append(item)
+            super().append(item)
+
+    store._async_errors = Guarded()
+    store._summarize_batch = lambda parts: (_ for _ in ()).throw(
+        RuntimeError("boom")
+    )
+    rng = np.random.default_rng(0)
+    for d in range(4):
+        store.ingest_async(d, rng.normal(size=16).astype(np.float32))
+    with pytest.raises(RuntimeError):
+        store.flush()
+    assert unlocked_appends == []  # every append held _cv
+    store.close()
+
+
+def test_async_error_conservation_under_concurrent_flush():
+    """Stress the flush-vs-failing-batch interleaving: every failed
+    partition is reported by exactly one flush — none dropped, none
+    doubled — while a second thread keeps enqueueing poison."""
+    store = HistogramStore(num_buckets=T, async_ingest=True, queue_size=8192)
+    orig = store._summarize_batch
+
+    def failing(parts):
+        bad = [pid for pid in parts if pid % 2 == 1]
+        if bad:
+            raise RuntimeError(f"poison {bad}")
+        return orig(parts)
+
+    store._summarize_batch = failing
+    total = 300  # odd pids fail; even pids are tiny but valid
+    rng = np.random.default_rng(1)
+    rows = {pid: rng.normal(size=16).astype(np.float32) for pid in range(total)}
+
+    def produce():
+        for pid in range(total):
+            store.ingest_async(pid, rows[pid])
+
+    producer = threading.Thread(target=produce)
+    producer.start()
+    reported: list[str] = []
+    while True:
+        try:
+            store.flush()
+        except RuntimeError as e:
+            reported.append(str(e))
+        if not producer.is_alive():
+            break
+    producer.join()
+    try:
+        store.flush()  # final drain of any errors raised after the loop
+    except RuntimeError as e:
+        reported.append(str(e))
+    seen = []
+    for msg in reported:
+        for pid in range(total):
+            if f"partition {pid}:" in msg:
+                seen.append(pid)
+    expect = [pid for pid in range(total) if pid % 2 == 1]
+    assert sorted(seen) == expect  # exactly-once error reporting
+    store._summarize_batch = orig
+    store.close()
+    assert sorted(store.ids()) == [pid for pid in range(total) if pid % 2 == 0]
+
+
+# ------------------------------------------------- query_many cache reuse
+def test_query_many_serves_and_populates_the_lru():
+    """query_many must consult the same LRU as query: a warm window is a
+    hit (no re-merge), a cold one populates the cache for later queries."""
+    store, _ = _store(days=8)
+    store.query(0, 7, BETA)  # warm one window
+    tree = store._tree
+    hits0, disp0 = tree.cache_hits, tree.merge_dispatches
+    res = store.query_many([(0, 7), (2, 5)], BETA)
+    assert tree.cache_hits == hits0 + 1  # (0,7) came from the LRU
+    assert tree.merge_dispatches == disp0 + 1  # one dispatch for the miss
+    # and the miss is now cached: a repeat batch costs zero dispatches
+    res2 = store.query_many([(0, 7), (2, 5)], BETA)
+    assert tree.merge_dispatches == disp0 + 1
+    assert tree.cache_hits == hits0 + 3
+    for (h1, e1), (h2, e2) in zip(res, res2):
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2
+
+
+def test_query_many_dedupes_repeated_windows_within_a_batch():
+    store, _ = _store(days=8)
+    tree = store._tree
+    disp0, miss0 = tree.merge_dispatches, tree.cache_misses
+    tree.merge_shapes.clear()
+    res = store.query_many([(1, 6), (1, 6), (1, 6)], BETA)
+    assert tree.merge_dispatches == disp0 + 1
+    assert tree.cache_misses == miss0 + 1  # ONE miss, not one per duplicate
+    ((Q, _, _, _),) = tree.merge_shapes  # and the dispatch packed ONE row
+    assert Q == 1
+    for h, e in res:
+        np.testing.assert_array_equal(
+            np.asarray(h.sizes), np.asarray(res[0][0].sizes)
+        )
+
+
+def test_query_many_cache_respects_version():
+    """Cached batch answers must die with the next mutation."""
+    store, _ = _store(days=8)
+    store.query_many([(0, 7)], BETA)
+    rng = np.random.default_rng(7)
+    store.ingest(8, rng.gumbel(size=N_PER).astype(np.float32))
+    (h, e), = store.query_many([(0, 8)], BETA)
+    assert float(np.asarray(h.sizes).sum()) == 9 * N_PER
+
+
+# ----------------------------------------------------- npz handle leak
+def test_load_closes_the_npz_file(tmp_path, monkeypatch):
+    """HistogramStore.load kept the NpzFile (and its fd) open forever;
+    it must be closed by the time load returns, with every array
+    materialized."""
+    store, _ = _store(days=4)
+    path = str(tmp_path / "s.npz")
+    store.save(path)
+    opened = []
+    orig = np.load
+
+    def spy(*a, **k):
+        f = orig(*a, **k)
+        opened.append(f)
+        return f
+
+    monkeypatch.setattr(np, "load", spy)
+    loaded = HistogramStore.load(path)
+    assert opened, "np.load was not used"
+    for f in opened:
+        assert f.zip is None and f.fid is None  # NpzFile.close() ran
+    h1, _ = store.query(0, 3, BETA)
+    h2, _ = loaded.query(0, 3, BETA)
+    np.testing.assert_array_equal(np.asarray(h1.sizes), np.asarray(h2.sizes))
+
+
+# ------------------------------------- ingest_many under async_ingest=True
+def _gate_worker(store):
+    """Block the background worker's summarization until the gate opens —
+    deterministic visibility probes without sleeping.  Only the worker
+    thread is gated, so a (buggy) synchronous apply on the caller thread
+    runs straight through and is caught by the assertions."""
+    gate = threading.Event()
+    orig = store._summarize_batch
+
+    def gated(parts):
+        if threading.current_thread() is not threading.main_thread():
+            gate.wait(timeout=30)
+        return orig(parts)
+
+    store._summarize_batch = gated
+    return gate
+
+
+def test_ingest_many_routes_through_the_async_queue():
+    """With async_ingest=True, ingest_many must enqueue (nothing visible
+    until flush) instead of silently applying synchronously."""
+    store, parts = _store(days=6, async_ingest=True)
+    gate = _gate_worker(store)
+    store.ingest_many(parts)
+    # not applied in-line: visibility only comes with flush()
+    assert store.ids() == []
+    gate.set()
+    store.flush()
+    assert store.ids() == sorted(parts)
+    h, _ = store.query(0, 5, BETA)
+    assert float(np.asarray(h.sizes).sum()) == 6 * N_PER
+    store.close()
+
+
+def test_ingest_many_async_preserves_fifo_with_ingest_async():
+    """Interleaved ingest_async + ingest_many enqueue in caller order, so
+    no snapshot can show ingest_many's partitions while an earlier
+    enqueued partition is invisible (the non-prefix view the old
+    sync-apply fast path produced)."""
+    rng = np.random.default_rng(3)
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    gate = _gate_worker(store)
+    store.ingest_async(0, rng.normal(size=N_PER).astype(np.float32))
+    store.ingest_many(
+        {1: rng.normal(size=N_PER).astype(np.float32),
+         2: rng.normal(size=N_PER).astype(np.float32)}
+    )
+    store.ingest_async(3, rng.normal(size=N_PER).astype(np.float32))
+    assert store.ids() == []  # in particular: 1, 2 are NOT visible early
+    gate.set()
+    store.flush()
+    assert store.ids() == [0, 1, 2, 3]
+    store.close()
+
+
+def test_ingest_many_async_validates_all_before_enqueueing_any():
+    """Validation is synchronous AND all-or-nothing: a bad partition
+    mid-dict must not leave its valid neighbours half-enqueued (the
+    sync path applies nothing on failure; async must match)."""
+    store = HistogramStore(num_buckets=T, async_ingest=True)
+    rng = np.random.default_rng(4)
+    with pytest.raises(ValueError):
+        store.ingest_many(
+            {
+                0: rng.normal(size=50).astype(np.float32),
+                1: np.asarray([], np.float32),
+            }
+        )
+    store.flush()
+    assert store.ids() == []  # pid 0 was not enqueued either
+    store.close()

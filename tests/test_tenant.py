@@ -1,0 +1,334 @@
+"""Multi-tenant registry (core/tenant.py): correctness of the one-dispatch
+cross-tenant Merger, the shared async ingest pool, and one-npz persistence.
+
+The cross-tenant ``query_many`` stacks canonical node sets from *different*
+trees into one static-shape merge — the key property is that every answer
+is bit-identical to the same query asked of its tenant's store alone (the
+padding proofs of core/interval_tree.py apply unchanged, since only the
+summary arrays matter), while the whole batch costs one dispatch.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import HistogramStore, TenantRegistry, TelemetryHub
+
+T = 32
+BETA = 8
+N_PER = 256
+PARTS = 6
+
+
+def _parts(seed, n_parts=PARTS):
+    rng = np.random.default_rng(seed)
+    return {
+        d: rng.gumbel(size=N_PER).astype(np.float32) for d in range(n_parts)
+    }
+
+
+def _registry(n_tenants=6, **kw):
+    reg = TenantRegistry(num_buckets=T, **kw)
+    for t in range(n_tenants):
+        reg.ingest_many(f"svc{t}", _parts(seed=t))
+    return reg
+
+
+# ------------------------------------------------------------ tenant admin
+def test_tenant_get_or_create_shares_config():
+    reg = TenantRegistry(num_buckets=T, T_node="geometric", cache_size=7)
+    s1 = reg.tenant("a")
+    assert reg.tenant("a") is s1  # get-or-create is idempotent
+    assert s1.num_buckets == T
+    assert s1.T_node == "geometric"
+    assert s1.cache_size == 7
+    assert not s1.async_ingest  # the registry pool owns asynchrony
+    assert "a" in reg and "b" not in reg
+    with pytest.raises(KeyError):
+        reg["b"]
+    assert len(reg) == 1 and reg.names() == ["a"]
+
+
+def test_tenant_names_are_str_normalized():
+    """reg.tenant(5) and reg.tenant("5") are the SAME tenant — a non-str
+    name must not create a fresh store per call (silently dropping data)."""
+    reg = TenantRegistry(num_buckets=T)
+    rng = np.random.default_rng(0)
+    reg.ingest(5, 0, rng.normal(size=100).astype(np.float32))
+    reg.ingest(5, 1, rng.normal(size=100).astype(np.float32))
+    assert reg["5"].ids() == [0, 1]  # nothing discarded
+    assert reg[5] is reg["5"] and 5 in reg and len(reg) == 1
+    h, _ = reg.query(5, 0, 1, BETA)  # int name works end to end
+    assert float(np.asarray(h.sizes).sum()) == 200
+    reg.ingest_async(5, 2, rng.normal(size=100).astype(np.float32))
+    reg.flush()
+    assert reg["5"].ids() == [0, 1, 2]  # sync and async share the store
+    (r,) = reg.query_many([(5, 0, 2)], BETA)
+    assert float(np.asarray(r[0].sizes).sum()) == 300
+    reg.close()
+
+
+# ------------------------------------------- cross-tenant batched queries
+def test_query_many_bitexact_vs_per_store_queries():
+    """Every answer (histogram AND eps) must be bit-identical to asking
+    the tenant's own store — across tenants, window mixes, duplicates."""
+    reg = _registry(6)
+    rng = np.random.default_rng(99)
+    qs = []
+    for name in reg.names():
+        lo = int(rng.integers(0, PARTS))
+        qs.append((name, lo, int(rng.integers(lo, PARTS))))
+    qs += [qs[0], ("svc3", 0, PARTS - 1)]  # duplicate + full window
+    res = reg.query_many(qs, BETA)
+    assert len(res) == len(qs)
+    for (name, lo, hi), (h, e) in zip(qs, res):
+        h2, e2 = reg[name].query(lo, hi, BETA)
+        np.testing.assert_array_equal(
+            np.asarray(h.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h.sizes), np.asarray(h2.sizes)
+        )
+        assert e == e2
+
+
+def test_query_many_is_one_dispatch_and_caches():
+    reg = _registry(5)
+    qs = [(name, 0, PARTS - 1) for name in reg.names()]
+    reg.merge_dispatches = 0
+    res = reg.query_many(qs, BETA)
+    assert reg.merge_dispatches == 1  # the tentpole claim
+    assert len(reg.merge_shapes) == 1
+    # warm repeat: zero dispatches, answers from the per-tenant LRUs
+    res2 = reg.query_many(qs, BETA)
+    assert reg.merge_dispatches == 1
+    for (h1, e1), (h2, e2) in zip(res, res2):
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2
+    # and single-store queries hit the entries query_many populated
+    hits0 = reg["svc0"]._tree.cache_hits
+    reg["svc0"].query(0, PARTS - 1, BETA)
+    assert reg["svc0"]._tree.cache_hits == hits0 + 1
+
+
+def test_query_many_mixed_hit_miss_single_dispatch():
+    reg = _registry(4)
+    reg.query_many([("svc0", 0, 2), ("svc1", 1, 3)], BETA)
+    d0 = reg.merge_dispatches
+    res = reg.query_many(
+        [("svc0", 0, 2), ("svc2", 0, 1), ("svc1", 1, 3), ("svc3", 2, 4)],
+        BETA,
+    )
+    assert reg.merge_dispatches == d0 + 1  # one dispatch for the 2 misses
+    assert all(h is not None for h, _ in res)
+
+
+def test_query_many_strict_false_placeholders_keep_indexing_stable():
+    reg = _registry(3)
+    del reg["svc1"].summaries[2]
+    qs = [
+        ("svc0", 0, PARTS - 1),
+        ("ghost", 0, 3),  # unknown tenant
+        ("svc1", 2, 2),  # only the lost partition
+        ("svc2", 0, 0),
+    ]
+    res = reg.query_many(qs, BETA, strict=False)
+    assert float(np.asarray(res[0][0].sizes).sum()) == PARTS * N_PER
+    assert res[1] == (None, float("inf"))
+    assert res[2] == (None, float("inf"))
+    assert float(np.asarray(res[3][0].sizes).sum()) == N_PER
+    with pytest.raises(KeyError):
+        reg.query_many(qs, BETA, strict=True)
+    with pytest.raises(KeyError):
+        reg.query_many([("svc1", 0, PARTS - 1)], BETA)  # lost partition
+
+
+def test_query_many_geometric_tnode_mixed_node_resolutions():
+    """Geometric trees hold different T per level — the cross-tenant pack
+    pads to T_pad and must stay bit-exact."""
+    reg = TenantRegistry(num_buckets=T, T_node="geometric")
+    for t in range(3):
+        reg.ingest_many(f"m{t}", _parts(seed=10 + t, n_parts=8))
+    qs = [(f"m{t}", 0, 7) for t in range(3)] + [("m1", 2, 5)]
+    res = reg.query_many(qs, BETA)
+    for (name, lo, hi), (h, e) in zip(qs, res):
+        h2, e2 = reg[name].query(lo, hi, BETA)
+        np.testing.assert_array_equal(
+            np.asarray(h.sizes), np.asarray(h2.sizes)
+        )
+        assert e == e2
+
+
+# ---------------------------------------------------- shared async ingest
+def test_async_pool_fans_in_many_tenants():
+    reg = TenantRegistry(num_buckets=T, workers=3)
+    want = {}
+    for t in range(8):
+        parts = _parts(seed=20 + t, n_parts=4)
+        want[f"w{t}"] = parts
+        for d, v in parts.items():
+            reg.ingest_async(f"w{t}", d, v)
+    reg.flush()
+    for name, parts in want.items():
+        h, _ = reg.query(name, 0, 3, BETA)
+        assert float(np.asarray(h.sizes).sum()) == 4 * N_PER
+        # bit-identical to a synchronous store fed the same partitions
+        sync = HistogramStore(num_buckets=T)
+        sync.ingest_many(parts)
+        h2, e2 = sync.query(0, 3, BETA)
+        np.testing.assert_array_equal(
+            np.asarray(h.sizes), np.asarray(h2.sizes)
+        )
+    reg.close()
+
+
+def test_async_pool_validates_synchronously_and_isolates_poison():
+    reg = TenantRegistry(num_buckets=T)
+    with pytest.raises(ValueError):
+        reg.ingest_async("a", 0, np.asarray([], np.float32))
+    # poison one tenant's partition; its co-batched neighbours survive
+    parts = _parts(seed=5, n_parts=4)
+    store = reg.tenant("a")
+    orig = store._summarize_batch
+
+    def failing(batch):
+        if 2 in batch:
+            raise RuntimeError("boom at pid 2")
+        return orig(batch)
+
+    store._summarize_batch = failing
+    for d, v in parts.items():
+        reg.ingest_async("a", d, v)
+    for d, v in _parts(seed=6, n_parts=4).items():
+        reg.ingest_async("b", d, v)
+    with pytest.raises(RuntimeError) as ei:
+        reg.flush()
+    assert "tenant 'a' partition 2" in str(ei.value)
+    assert sorted(store.ids()) == [0, 1, 3]
+    assert sorted(reg["b"].ids()) == [0, 1, 2, 3]  # other tenant untouched
+    store._summarize_batch = orig
+    reg.ingest_async("a", 2, parts[2])
+    reg.flush()  # error list was cleared by the raising flush
+    assert sorted(store.ids()) == [0, 1, 2, 3]
+    reg.close()
+
+
+def test_async_pool_error_appends_hold_the_flush_lock():
+    """Same invariant as the store-level race fix: pool workers append
+    errors only under the registry's condition variable."""
+    reg = TenantRegistry(num_buckets=T)
+    reg._cv = threading.Condition(threading.Lock())  # non-reentrant
+    unlocked = []
+
+    class Guarded(list):
+        def append(self, item):
+            if reg._cv._lock.acquire(blocking=False):
+                reg._cv._lock.release()
+                unlocked.append(item)
+            super().append(item)
+
+    reg._errors = Guarded()
+    store = reg.tenant("a")
+    store._summarize_batch = lambda parts: (_ for _ in ()).throw(
+        RuntimeError("boom")
+    )
+    rng = np.random.default_rng(0)
+    for d in range(3):
+        reg.ingest_async("a", d, rng.normal(size=16).astype(np.float32))
+    with pytest.raises(RuntimeError):
+        reg.flush()
+    assert unlocked == []
+    reg.close()
+
+
+def test_close_drains_and_pool_restarts():
+    reg = TenantRegistry(num_buckets=T, workers=2)
+    parts = _parts(seed=7, n_parts=4)
+    for d, v in parts.items():
+        reg.ingest_async("a", d, v)
+    reg.close()  # must drain everything enqueued before the sentinel
+    assert sorted(reg["a"].ids()) == [0, 1, 2, 3]
+    reg.ingest_async("b", 0, parts[0])  # restarts the pool transparently
+    reg.flush()
+    assert reg["b"].ids() == [0]
+    reg.close()
+
+
+# ------------------------------------------------------------ persistence
+def test_registry_roundtrip_one_npz(tmp_path):
+    reg = _registry(4, T_node="geometric")
+    path = str(tmp_path / "registry.npz")
+    for _ in range(2):  # repeated saves must not accumulate tempfiles
+        reg.save(path)
+    import os
+
+    assert sorted(os.listdir(tmp_path)) == ["registry.npz"]
+    loaded = TenantRegistry.load(path)
+    assert loaded.names() == reg.names()
+    assert loaded.num_buckets == T and loaded.T_node == "geometric"
+    # tree nodes restored — answers (and eps) identical, no re-merge
+    for name in reg.names():
+        assert (
+            loaded[name]._tree.nodes.keys() == reg[name]._tree.nodes.keys()
+        )
+    qs = [(n, 1, 4) for n in reg.names()]
+    for (h1, e1), (h2, e2) in zip(
+        reg.query_many(qs, BETA), loaded.query_many(qs, BETA)
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2
+
+
+def test_registry_load_rejects_store_files(tmp_path):
+    store = HistogramStore(num_buckets=T)
+    store.ingest_many(_parts(seed=1, n_parts=3))
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    with pytest.raises(ValueError):
+        TenantRegistry.load(path)
+
+
+# ------------------------------------------------------------- telemetry
+def test_telemetry_hub_tracks_many_metrics():
+    hub = TelemetryHub(T=64)
+    rng = np.random.default_rng(0)
+    truth = {}
+    for metric in ("step_time", "grad_norm", "latency"):
+        vals = []
+        for step in range(4):
+            v = np.abs(rng.normal(size=300)).astype(np.float32)
+            hub.record(metric, step, v)
+            vals.append(v)
+        truth[metric] = np.concatenate(vals)
+    assert hub.metrics() == ["grad_norm", "latency", "step_time"]
+    for metric, pooled in truth.items():
+        got = float(hub.quantile(metric, 0, 3, 0.95))
+        true = float(np.quantile(pooled, 0.95))
+        # rank-error guarantee translated loosely to a value check
+        assert abs(got - true) <= np.ptp(pooled) * 0.1
+    panels = [(m, 0, 3) for m in hub.metrics()] + [("missing", 0, 3)]
+    hub.registry.merge_dispatches = 0
+    res = hub.dashboard(panels, beta=BETA)
+    assert hub.registry.merge_dispatches <= 1
+    assert res[-1] == (None, float("inf"))
+    for h, _ in res[:-1]:
+        assert float(np.asarray(h.sizes).sum()) == 4 * 300
+    hub.close()
+
+
+def test_telemetry_hub_async_record():
+    hub = TelemetryHub(T=T, async_record=True)
+    rng = np.random.default_rng(1)
+    for step in range(3):
+        hub.record("loss", step, np.abs(rng.normal(size=200)).astype(np.float32))
+    hub.flush()
+    h, _ = hub.registry.query("loss", 0, 2, BETA)
+    assert float(np.asarray(h.sizes).sum()) == 3 * 200
+    hub.close()
