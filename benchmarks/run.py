@@ -11,6 +11,9 @@
                         throughput + compile counts (writes BENCH_ingest.json)
   * tenant            — per-store loop vs registry-batched cross-tenant
                         query_many (writes BENCH_tenant.json)
+  * retention         — 7-day sliding window vs unbounded store: steady-
+                        state memory + query latency, bit-exactness vs a
+                        flat rebuild (writes BENCH_retention.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -18,6 +21,7 @@ import sys
 
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
 from benchmarks import ingest_throughput, interval_query, multi_tenant
+from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
 
 
@@ -39,6 +43,7 @@ def main() -> None:
         "interval_query": interval_query.main,
         "ingest": ingest_throughput.main,
         "tenant": multi_tenant.main,
+        "retention": retention_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -270,6 +270,25 @@ class IntervalTree:
     def num_leaves(self) -> int:
         return sum(1 for (lvl, _) in self.nodes if lvl == 0)
 
+    def node_floats(self) -> int:
+        """Total floats held by node summaries, counting shared arrays once.
+
+        Single-child internal nodes *share* their child's arrays (and tree
+        leaves share the caller's stored-summary rows), so the footprint is
+        deduplicated by array identity — this is the store's memory figure
+        that :class:`~repro.core.retention.MemoryBudget` and the registry's
+        cross-tenant budget act on.
+        """
+        seen: set[int] = set()
+        total = 0
+        for nd in self.nodes.values():
+            key = id(nd.boundaries)
+            if key in seen:
+                continue
+            seen.add(key)
+            total += int(nd.boundaries.size) + int(nd.sizes.size)
+        return total
+
     def _invalidate(self) -> None:
         self.version += 1
         self._cache.clear()
@@ -424,6 +443,112 @@ class IntervalTree:
                 eps=c0.eps + c1.eps + 2.0 * n / T_in + 4.0,
                 leaves=c0.leaves + c1.leaves,
             )
+
+    def evict_leaves(self, partition_ids) -> int:
+        """Remove leaf summaries — :meth:`set_leaf`'s pull-up in reverse.
+
+        The evicted slots' ancestor paths are refreshed with the same
+        level-batched machinery as ingest (``_pull_up_many``: a parent left
+        with both children re-merges in the level batch, one child shares
+        its summary, none frees its row), then the tree **lazily
+        collapses**: fully-evicted leading subtrees are dropped in one pass
+        so the root re-anchors at the lowest surviving leaf (see
+        :meth:`_collapse`).  One version bump per batch — every LRU-cached
+        answer keyed on the old version can never serve evicted data.
+
+        Returns the number of leaves actually removed (absent ids are
+        ignored, so a policy may re-list already-evicted partitions).
+        """
+        if self.base is None:
+            return 0
+        dirty: set[int] = set()
+        for pid in partition_ids:
+            slot = int(pid) - self.base
+            if (0, slot) in self.nodes:
+                del self.nodes[(0, slot)]
+                dirty.add(slot)
+        if not dirty:
+            return 0
+        self._collapse(dirty)
+        self._invalidate()
+        return len(dirty)
+
+    def _collapse(self, dirty: set[int]) -> None:
+        """Lazy subtree collapse: re-root the tree at the smallest subtree
+        whose slot range starts at the lowest surviving leaf.
+
+        Eviction from an infinite stream always removes a *prefix* of the
+        partition axis, so without collapse ``slot = pid - base`` (and with
+        it tree depth and, in geometric mode, per-node resolution) would
+        grow without bound.  Two paths, both batched per eviction sweep
+        rather than per leaf:
+
+        * **aligned rename** — when the survivors fit an aligned subtree
+          ``(L, j)`` starting exactly at the lowest surviving slot, that
+          subtree becomes the root by re-keying its nodes (zero merges;
+          the single-child chain above it is dropped, freeing rows whose
+          arrays were shared anyway);
+        * **rebase-rebuild** — when the survivors straddle an alignment
+          boundary, they are re-based to slot 0 with one level-batched
+          :meth:`rebuild`.  Under geometric ``T_node`` this is what
+          *re-coarsens* the surviving ancestors: pair merges now happen at
+          the shallow tree's levels, with resolution ``T·2^l`` for the new
+          small ``l`` instead of the deep tree's.
+
+        Either way the post-collapse tree is **bit-identical to a fresh
+        build over the surviving leaves** (same base, minimal depth, and
+        node summaries are a deterministic function of the slot→leaf map),
+        which is what keeps post-eviction queries bit-exact vs a flat
+        rebuild of the retained window (tests/test_retention_props.py).
+
+        Cost, stated plainly: that bit-equality contract is what forces
+        the rebuild path in the sliding-window steady state.  A window
+        sliding by one shifts every slot by one, which re-pairs *every*
+        level — a fresh build after the shift shares no internal node
+        with the old tree — so any implementation honouring the contract
+        re-merges O(window) pairs per slide.  The level batching keeps it
+        at O(log W) *dispatches* (the dominant cost in the serving
+        regime, per-dispatch overhead being ~50-70 µs against tiny
+        per-pair merges); a future opt-in mode could defer collapse
+        behind a dead-prefix slack for amortized O(log W) merge work at
+        the price of rebuild bit-equality (see ROADMAP).
+        """
+        slots = sorted(s for (lvl, s) in self.nodes if lvl == 0)
+        if not slots:
+            self.nodes.clear()
+            self.base = None
+            self.levels = 0
+            return
+        lo, hi = slots[0], slots[-1]
+        L = self.levels
+        while L > 0 and (lo >> (L - 1)) == (hi >> (L - 1)):
+            L -= 1
+        j = lo >> L
+        if (j << L) == lo:
+            # no collapse (already rooted at slot 0, minimal depth) or an
+            # aligned rename: either way the surviving ancestors stay, so
+            # refresh the evicted slots' paths (the reverse pull-up) first
+            self._pull_up_many(dirty)
+            if not (lo == 0 and L == self.levels):
+                # subtree (L, j) becomes the root by re-keying, no merges
+                self.nodes = {
+                    (lvl, i - (j << (L - lvl))): nd
+                    for (lvl, i), nd in self.nodes.items()
+                    if lvl <= L
+                }
+                self.base += j << L
+                self.levels = L
+        else:
+            # straddling survivors: one level-batched rebase-rebuild from
+            # the (untouched) leaf rows — every ancestor is recomputed, so
+            # the reverse pull-up would be wasted dispatches here
+            leaves = {
+                self.base + s: (nd.boundaries, nd.sizes)
+                for (lvl, s), nd in self.nodes.items()
+                if lvl == 0
+            }
+            self.base = None
+            self.rebuild(leaves)
 
     def rebuild(self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]) -> None:
         """Bulk (re)build from ``{partition_id: (boundaries, sizes)}``.

@@ -46,6 +46,33 @@ the store lock, bumping the version once per batch.  Guarantees:
     so far is visible (and re-raises any background summarization error);
     ``close()`` stops the worker after a final drain.  Nothing is
     timing-dependent: synchronization is by lock/condition only.
+  * **Retention between flushes** — with a ``retention`` policy
+    (core/retention.py) the watermark-driven sweeper runs on the ingest
+    worker after each applied batch and *before* the pending count drops,
+    so ``flush()`` returning also implies retention has been enforced on
+    everything visible (synchronous ingest sweeps inline after each
+    apply).  Eviction bumps the store version, so answers cached before
+    an eviction can never be served after it.
+
+The drain/poison-isolation/flush/close machinery itself is the shared
+:class:`~repro.core.workers.IngestPool` — one lock-sensitive
+implementation for this store's single worker and the multi-tenant
+registry's pool alike.
+
+Watermark persistence format
+----------------------------
+Retention ages partitions against the **watermark** — the highest
+partition id ever ingested (ids are the time axis; see
+core/retention.py).  It is persisted as the ``"watermark"`` key of the
+:meth:`HistogramStore._state` meta dict (json int, or null for an empty
+store) next to ``"ids"``/``"n"``/``"tree"``, and restored by
+:meth:`_restore` (falling back to ``max(ids)`` for summary files written
+before this key existed).  The retention policy itself round-trips
+through ``save``/``load`` as the json spec ``meta["retention"]``
+(``RetentionPolicy.spec()`` / ``policy_from_spec``), so a reloaded store
+resumes aging exactly where it stopped instead of resurrecting expired
+partitions — the registry's one-npz container persists both per tenant
+the same way.
 
 It is deliberately NumPy/host-resident (like the NameNode metadata path);
 the heavy lifting — per-partition sort — runs through the jitted JAX
@@ -57,7 +84,6 @@ from __future__ import annotations
 
 import json
 import os
-import queue
 import tempfile
 import threading
 from dataclasses import dataclass, field
@@ -77,10 +103,10 @@ from repro.core.histogram import (
     theoretical_eps_max,
 )
 from repro.core.interval_tree import IntervalTree
+from repro.core.retention import RetentionPolicy, StoreStats, policy_from_spec
+from repro.core.workers import IngestPool, PoolStateView
 
 __all__ = ["StoredSummary", "HistogramStore", "atomic_savez"]
-
-_SENTINEL = object()  # shuts down the background ingest worker
 
 
 def _validated(values) -> np.ndarray:
@@ -149,8 +175,9 @@ class StoredSummary:
 
 
 @dataclass
-class HistogramStore:
-    """Append-only store of per-partition exact equi-depth summaries."""
+class HistogramStore(PoolStateView):
+    """Store of per-partition exact equi-depth summaries (append-only by
+    default; a ``retention`` policy bounds it for infinite streams)."""
 
     num_buckets: int  # T — summary resolution; pick T ≥ 40·β for ≤5 % error
     summaries: dict[int, StoredSummary] = field(default_factory=dict)
@@ -161,6 +188,8 @@ class HistogramStore:
     cache_size: int = 128  # LRU capacity of the tree's answer cache
     async_ingest: bool = False  # route ``ingest`` through the background queue
     queue_size: int = 1024  # bound of the pending-partition queue
+    # retention policy (core/retention.py): None → append-only (unbounded)
+    retention: RetentionPolicy | None = None
     _tree: IntervalTree = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
@@ -178,24 +207,46 @@ class HistogramStore:
         # observability for the compile-stability tests and benchmarks
         self.summarize_shapes: set[tuple[int, int, int]] = set()
         self._lock = threading.RLock()  # guards summaries + tree + queries
-        self._cv = threading.Condition()  # pending-count synchronization
-        # serializes enqueue against close(): without it a producer could
-        # land an item behind the shutdown sentinel and strand it (leaking
-        # _pending, wedging every later flush).  The worker never takes
-        # this mutex, so close() may hold it across join().
-        self._ingest_mutex = threading.Lock()
-        self._pending = 0  # enqueued-but-not-yet-applied partitions
-        self._queue: queue.Queue | None = None
-        self._worker: threading.Thread | None = None
-        # every failed partition since the last flush: [(pid, exception)]
-        self._async_errors: list[tuple[int, BaseException]] = []
+        # highest partition id ever ingested — the retention watermark
+        # (persisted; survives the eviction of the partitions beneath it)
+        self._watermark: int | None = (
+            max(self.summaries) if self.summaries else None
+        )
+        # the background ingest plane: shared drain/poison-isolation/flush
+        # machinery (core/workers.py); threads start lazily on first enqueue.
+        # on_batch_end runs the retention sweeper on the worker between
+        # flushes, before the pending count drops.
+        self._pool = IngestPool(
+            apply_batch=self._apply_worker_batch,
+            wrap_error=self._wrap_async_error,
+            workers=1,
+            queue_size=self.queue_size,
+            name="histstore-ingest",
+            on_batch_end=self._sweep_after_batch,
+        )
         for pid, s in self.summaries.items():
             self._tree.set_leaf(pid, s.boundaries, s.sizes)
+
+    # (PoolStateView provides _cv/_pending/_ingest_mutex onto the pool)
+    @property
+    def _async_errors(self) -> list:
+        """Every failed partition since the last flush: [(pid, exception)];
+        a ``(None, exception)`` entry is a failed retention sweep."""
+        return self._pool.errors
+
+    @_async_errors.setter
+    def _async_errors(self, value: list) -> None:
+        self._pool.errors = value
 
     @property
     def version(self) -> int:
         """Bumps on every mutation — keys the interval engine's LRU cache."""
         return self._tree.version
+
+    @property
+    def watermark(self) -> int | None:
+        """Highest partition id ever ingested (monotonic; drives TTL)."""
+        return self._watermark
 
     # ----------------------------------------------------------- Summarizer
     def _summarize_batch(self, parts: dict[int, np.ndarray]) -> dict[int, StoredSummary]:
@@ -309,9 +360,11 @@ class HistogramStore:
                 self._enqueue(pid, v)
             return
         self._apply(self._summarize_batch(dict(partitions)))
+        self._maybe_sweep()
 
     def _put(self, summ: StoredSummary) -> None:
         self._apply({summ.partition_id: summ})
+        self._maybe_sweep()
 
     def _apply(self, summs: dict[int, StoredSummary]) -> None:
         """Make a batch of summaries visible atomically (one version bump)."""
@@ -319,6 +372,9 @@ class HistogramStore:
             return
         with self._lock:
             self.summaries.update(summs)
+            newest = max(summs)
+            if self._watermark is None or newest > self._watermark:
+                self._watermark = newest
             self._tree.set_leaves(
                 {pid: (s.boundaries, s.sizes) for pid, s in summs.items()}
             )
@@ -328,6 +384,69 @@ class HistogramStore:
             self._tree.rebuild(
                 {p: (s.boundaries, s.sizes) for p, s in self.summaries.items()}
             )
+
+    # ------------------------------------------------------------ retention
+    def evict(self, partition_ids: Iterable[int]) -> list[int]:
+        """Drop partitions from the store: summaries and tree leaves leave
+        together (``set_leaf``'s pull-up in reverse, with lazy subtree
+        collapse), with one version bump — cached answers from before the
+        eviction can never be served after it.  Returns the partition ids
+        actually evicted (absent ids are ignored).  The watermark does NOT
+        move: evicted history stays expired after a save/load round-trip.
+        """
+        with self._lock:
+            victims = sorted(
+                {int(p) for p in partition_ids} & self.summaries.keys()
+            )
+            if not victims:
+                return []
+            for pid in victims:
+                del self.summaries[pid]
+            self._tree.evict_leaves(victims)
+            return victims
+
+    def sweep_retention(self) -> list[int]:
+        """Evaluate the retention policy against the watermark and evict
+        its victims; re-evaluates until the policy is satisfied (so
+        ``MemoryBudget`` converges over its estimate-driven passes).
+        Returns everything evicted.  No-op without a policy.
+        """
+        if self.retention is None:
+            return []
+        evicted: list[int] = []
+        with self._lock:
+            while True:
+                victims = self.evict(
+                    self.retention.victims(self._retention_stats())
+                )
+                if not victims:
+                    return evicted
+                evicted += victims
+
+    def _retention_stats(self) -> StoreStats:
+        """Policy-facing snapshot (callers hold ``_lock``)."""
+        ids = tuple(sorted(self.summaries))
+        wm = self._watermark
+        if wm is None and ids:
+            wm = ids[-1]  # summaries injected without _apply (rare)
+        return StoreStats(
+            ids=ids, watermark=wm, node_floats=self._tree.node_floats()
+        )
+
+    def _maybe_sweep(self) -> None:
+        if self.retention is not None:
+            self.sweep_retention()
+
+    def _sweep_after_batch(self, batch) -> None:
+        """Retention slot of the ingest worker (IngestPool on_batch_end):
+        runs between flushes, before the pending count drops."""
+        self._maybe_sweep()
+
+    def node_floats(self) -> int:
+        """Current tree node-float footprint (shared arrays counted once)
+        — the figure retention budgets act on."""
+        with self._lock:
+            return self._tree.node_floats()
 
     # -------------------------------------------------------- async ingest
     def ingest_async(self, partition_id: int, values) -> None:
@@ -343,14 +462,23 @@ class HistogramStore:
 
     def _enqueue(self, pid: int, values: np.ndarray) -> None:
         """Post-validation enqueue body shared with async ``ingest_many``."""
-        with self._ingest_mutex:
-            self._ensure_worker()
-            with self._cv:
-                self._pending += 1
-            self._queue.put((pid, values))
+        self._pool.submit((pid, values))
+
+    def _apply_worker_batch(self, batch: list[tuple[int, np.ndarray]]) -> None:
+        """IngestPool apply callback: one grouped summarization + one
+        level-batched tree maintenance pass per drained batch (also the
+        per-item retry body of the pool's poison isolation)."""
+        self._apply(self._summarize_batch(dict(batch)))
+
+    @staticmethod
+    def _wrap_async_error(item, exc: BaseException):
+        # pool error record: (pid, exception); a failed retention sweep
+        # (item None — the on_batch_end hook) records as (None, exception)
+        return (item[0] if item is not None else None, exc)
 
     def flush(self) -> None:
-        """Block until every enqueued partition is summarized and visible.
+        """Block until every enqueued partition is summarized, visible, and
+        retention-swept.
 
         Re-raises (wrapped) every per-partition error the background worker
         hit since the last flush; the queue keeps draining either way, so a
@@ -358,74 +486,22 @@ class HistogramStore:
         partitions drained into the same batch (they are retried and
         applied individually).
         """
-        with self._cv:
-            while self._pending > 0:
-                self._cv.wait()
-            # swap-read under _cv: the worker appends under the same lock,
-            # so a batch failing concurrently with this flush can neither
-            # vanish into the swapped-out list nor be reported twice
-            errs, self._async_errors = self._async_errors, []
+        errs = self._pool.drain()
         if errs:
-            detail = "; ".join(f"partition {pid}: {e!r}" for pid, e in errs)
+            detail = "; ".join(
+                f"partition {pid}: {e!r}"
+                if pid is not None
+                else f"retention sweep: {e!r}"
+                for pid, e in errs
+            )
             raise RuntimeError(
                 f"async ingest failed for {len(errs)} partition(s): {detail}"
             ) from errs[0][1]
 
     def close(self) -> None:
         """Drain the queue, stop the background worker, surface errors."""
-        with self._ingest_mutex:
-            if self._worker is not None and self._worker.is_alive():
-                self._queue.put(_SENTINEL)
-                self._worker.join()
-            self._worker = None
+        self._pool.close()
         self.flush()
-
-    def _ensure_worker(self) -> None:
-        if self._worker is None or not self._worker.is_alive():
-            self._queue = queue.Queue(maxsize=self.queue_size)
-            self._worker = threading.Thread(
-                target=self._drain_loop, name="histstore-ingest", daemon=True
-            )
-            self._worker.start()
-
-    def _drain_loop(self) -> None:
-        while True:
-            item = self._queue.get()
-            if item is _SENTINEL:
-                return
-            batch = [item]
-            stop = False
-            while True:  # drain whatever else is already queued — one flush
-                try:
-                    nxt = self._queue.get_nowait()
-                except queue.Empty:
-                    break
-                if nxt is _SENTINEL:
-                    stop = True
-                    break
-                batch.append(nxt)
-            self._flush_batch(batch)
-            if stop:
-                return
-
-    def _flush_batch(self, batch: list[tuple[int, np.ndarray]]) -> None:
-        try:
-            try:
-                self._apply(self._summarize_batch(dict(batch)))
-            except BaseException:
-                # isolate the poison rows: retry one partition at a time so
-                # a single bad partition cannot drop the valid partitions
-                # drained into the same batch (errors surface on flush())
-                for pid, values in batch:
-                    try:
-                        self._apply(self._summarize_batch({pid: values}))
-                    except BaseException as e:
-                        with self._cv:  # pairs with flush()'s swap-read
-                            self._async_errors.append((pid, e))
-        finally:
-            with self._cv:
-                self._pending -= len(batch)
-                self._cv.notify_all()
 
     def _sync_tree(self, ids: list[int], lo: int, hi: int) -> list[tuple[int, int]]:
         """Re-sync after direct ``summaries`` dict mutation (the documented
@@ -566,6 +642,9 @@ class HistogramStore:
             "ids": sorted(self.summaries),
             "n": {str(p): s.n for p, s in self.summaries.items()},
             "tree": tree_meta,
+            # retention watermark (module docstring: persistence format) —
+            # survives eviction of everything beneath it
+            "watermark": self._watermark,
         }
         payload = {}
         for pid, s in self.summaries.items():
@@ -577,6 +656,10 @@ class HistogramStore:
 
     def _restore(self, meta: dict, data, prefix: str = "") -> None:
         """Rebuild summaries + tree from a :meth:`_state`-shaped payload."""
+        wm = meta.get("watermark")
+        if wm is None and meta["ids"]:  # pre-watermark summary files
+            wm = max(int(p) for p in meta["ids"])
+        self._watermark = None if wm is None else int(wm)
         for pid in meta["ids"]:
             b = data[f"{prefix}b_{pid}"]
             s = data[f"{prefix}s_{pid}"]
@@ -614,6 +697,9 @@ class HistogramStore:
                 "engine": self.engine,
                 "T_node": self.T_node,
                 "cache_size": self.cache_size,
+                "retention": (
+                    None if self.retention is None else self.retention.spec()
+                ),
                 **state_meta,
             }
         atomic_savez(path, meta, payload)
@@ -633,6 +719,7 @@ class HistogramStore:
                     T_node if T_node in (None, "geometric") else int(T_node)
                 ),
                 cache_size=int(meta.get("cache_size", 128)),
+                retention=policy_from_spec(meta.get("retention")),
             )
             store._restore(meta, data)
         return store

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.histogram import Histogram, build_exact, merge, quantile
 from repro.core.distributed import tensor_histogram_in_step
+from repro.core.retention import RetentionPolicy
 from repro.core.tenant import TenantRegistry
 
 __all__ = [
@@ -202,15 +203,34 @@ class TelemetryHub:
     ``async_record=True`` routes samples through the registry's shared
     worker pool — the trainer thread only enqueues; call :meth:`flush`
     before reading fresh windows.
+
+    A long-running trainer records windows forever, so the hub forwards
+    the registry's bounded-memory knobs (core/retention.py): ``retention``
+    ages every metric's old windows out (e.g. ``SlidingWindow(256)`` keeps
+    the last 256 step-windows per metric), ``budget`` caps total node
+    floats across ALL metrics with fair per-metric quotas.
     """
 
     T: int = 128
     async_record: bool = False
     registry: TenantRegistry = None
+    retention: RetentionPolicy | None = None
+    budget: int | None = None
 
     def __post_init__(self) -> None:
         if self.registry is None:
-            self.registry = TenantRegistry(num_buckets=self.T)
+            self.registry = TenantRegistry(
+                num_buckets=self.T,
+                retention=self.retention,
+                budget=self.budget,
+            )
+        elif self.retention is not None or self.budget is not None:
+            # an explicit registry carries its own knobs — silently
+            # ignoring these would unbound the memory they promise to cap
+            raise ValueError(
+                "pass retention/budget to the explicit TenantRegistry, "
+                "not to TelemetryHub"
+            )
 
     def record(self, metric: str, partition_id: int, values) -> None:
         """Summarize one window of raw samples for the named metric."""

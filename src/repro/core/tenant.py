@@ -43,12 +43,33 @@ Shared persistence (one npz, atomic)
 ``save``/``load`` hold every tenant in a single npz written with the same
 mkstemp + rename discipline as ``HistogramStore.save`` — a crash leaves
 either the complete old registry or the complete new one.  Array keys are
-namespaced ``t{i}_`` per tenant via ``HistogramStore._state``.
+namespaced ``t{i}_`` per tenant via ``HistogramStore._state`` (which also
+carries each tenant's retention watermark).
+
+Retention and registry-wide memory budgets
+------------------------------------------
+Two bounded-memory layers compose (core/retention.py):
+
+* ``retention=`` — a per-tenant :class:`RetentionPolicy` shared by every
+  store the registry creates (TTL / sliding window / per-store budget);
+  the pool worker sweeps the tenants touched by each drained batch
+  between flushes, and synchronous ingest sweeps inline.
+* ``budget=`` — a **global node-float budget across tenants**.  When the
+  summed footprint exceeds it, :meth:`enforce_budget` evicts oldest
+  partitions from the **largest-over-quota tenant first** (fair quota =
+  budget / #tenants), never below a tenant's newest partition, until the
+  registry fits — so thousands of tenants share one bounded memory
+  envelope and a single noisy tenant cannot squeeze out the rest.
+  Per-tenant footprints are cached per store version, so the steady-state
+  check costs O(#tenants) dict lookups, not O(#nodes) scans.
+
+Both planes ride the shared :class:`~repro.core.workers.IngestPool`
+(drain/poison-isolation/flush/close live in one place — this used to be
+near-duplicate lock-sensitive code in the store and the registry).
 """
 from __future__ import annotations
 
 import json
-import queue
 import threading
 from typing import Sequence
 
@@ -60,16 +81,20 @@ from repro.core.interval_tree import (
     pack_node_rows,
     selection_eps,
 )
+from repro.core.retention import (
+    MemoryBudget,
+    RetentionPolicy,
+    policy_from_spec,
+)
 from repro.core.stream import HistogramStore, _validated, atomic_savez
+from repro.core.workers import IngestPool, PartialBatchFailure, PoolStateView
 
 __all__ = ["TenantRegistry"]
-
-_SENTINEL = object()  # shuts down one pool worker
 
 _SCHEMA = "tenant_registry/v1"
 
 
-class TenantRegistry:
+class TenantRegistry(PoolStateView):
     """Many named stores, shared config, one-dispatch cross-tenant serving."""
 
     def __init__(
@@ -81,32 +106,50 @@ class TenantRegistry:
         cache_size: int = 128,
         queue_size: int = 4096,
         workers: int = 1,
+        retention: RetentionPolicy | None = None,
+        budget: int | None = None,
     ):
-        if workers < 1:
-            raise ValueError("workers must be >= 1")
+        if budget is not None and budget < 1:
+            raise ValueError("budget must be >= 1 node floats")
         self.num_buckets = int(num_buckets)
         self.engine = engine
         self.T_node = T_node
         self.cache_size = int(cache_size)
         self.queue_size = int(queue_size)
         self.workers = int(workers)
+        self.retention = retention  # per-tenant policy (shared config)
+        self.budget = None if budget is None else int(budget)  # node floats
         self._stores: dict[str, HistogramStore] = {}
-        self._lock = threading.RLock()  # guards the tenant dict + pool setup
-        # shared ingest pool state (mirrors HistogramStore's single worker)
-        # serializes enqueue against close(): without it a producer could
-        # land an item behind a shutdown sentinel (or hit the torn-down
-        # queue list) and strand it, leaking _pending and wedging flush.
-        # Workers never take this mutex, so close() holds it across join().
-        self._ingest_mutex = threading.Lock()
-        self._cv = threading.Condition()
-        self._pending = 0
-        self._queues: list[queue.Queue] | None = None
-        self._threads: list[threading.Thread] = []
-        # every failed partition since the last flush: [(tenant, pid, exc)]
-        self._errors: list[tuple[str, int, BaseException]] = []
+        self._lock = threading.RLock()  # guards the tenant dict + caches
+        # per-tenant node-float footprints, cached per store version so the
+        # budget check is O(#tenants) when nothing changed
+        self._floats_cache: dict[str, tuple[int, int]] = {}
+        # the shared ingest plane (core/workers.py): drain, poison
+        # isolation, enqueue-vs-close serialization, and the retention/
+        # budget sweep between flushes all live on the pool
+        self._pool = IngestPool(
+            apply_batch=self._apply_worker_batch,
+            wrap_error=self._wrap_async_error,
+            workers=int(workers),
+            queue_size=self.queue_size,
+            name="tenant-ingest",
+            on_batch_end=self._sweep_after_batch,
+        )
         # cross-tenant merge dispatch observability (summarize_shapes-style)
         self.merge_dispatches = 0
         self.merge_shapes: set[tuple[int, int, int, int]] = set()
+
+    # (PoolStateView provides _cv/_pending/_ingest_mutex onto the pool)
+    @property
+    def _errors(self) -> list:
+        """Every failed partition since the last flush: [(tenant, pid,
+        exc)]; a ``(None, None, exc)`` entry is a failed retention/budget
+        sweep."""
+        return self._pool.errors
+
+    @_errors.setter
+    def _errors(self, value: list) -> None:
+        self._pool.errors = value
 
     # -------------------------------------------------------------- tenants
     def tenant(self, name: str) -> HistogramStore:
@@ -126,6 +169,7 @@ class TenantRegistry:
                     engine=self.engine,
                     T_node=self.T_node,
                     cache_size=self.cache_size,
+                    retention=self.retention,
                 )
                 self._stores[name] = store
             return store
@@ -152,11 +196,14 @@ class TenantRegistry:
     # ----------------------------------------------------------- Summarizer
     def ingest(self, tenant: str, partition_id: int, values):
         """Synchronous single-partition ingest into the named tenant."""
-        return self.tenant(tenant).ingest(partition_id, values)
+        out = self.tenant(tenant).ingest(partition_id, values)
+        self._enforce_budget_cached([tenant])
+        return out
 
     def ingest_many(self, tenant: str, partitions: dict[int, np.ndarray]) -> None:
         """Grouped one-dispatch bulk ingest into the named tenant."""
         self.tenant(tenant).ingest_many(partitions)
+        self._enforce_budget_cached([tenant])
 
     def ingest_async(self, tenant: str, partition_id: int, values) -> None:
         """Enqueue one partition for the shared background worker pool.
@@ -168,28 +215,83 @@ class TenantRegistry:
         values = _validated(values)
         name = str(tenant)
         self.tenant(name)  # create eagerly: queries can see the tenant
-        with self._ingest_mutex:
-            self._ensure_pool()
-            with self._cv:
-                self._pending += 1
-            # stable per-tenant routing keeps each tenant's partitions FIFO
-            q = self._queues[self._route(name)]
-            q.put((name, int(partition_id), values))
+        # stable per-tenant routing keeps each tenant's partitions FIFO —
+        # hash() is salted per process but stable within one, which is all
+        # that per-tenant FIFO needs
+        self._pool.submit((name, int(partition_id), values), route=hash(name))
+
+    def _apply_worker_batch(
+        self, batch: list[tuple[str, int, np.ndarray]]
+    ) -> None:
+        """IngestPool apply callback: group the drained batch by tenant and
+        apply each group with the store's grouped one-dispatch summarizer.
+
+        Per-tenant groups apply independently: a poison partition narrows
+        the pool's retry to its own group's items (PartialBatchFailure),
+        so tenants whose groups already applied are not re-summarized —
+        and their store versions aren't churned.  A single-group batch
+        lets the real exception propagate, so the per-item retry records
+        the underlying error, not a wrapper.
+        """
+        groups: dict[str, dict[int, np.ndarray]] = {}
+        for name, pid, values in batch:
+            groups.setdefault(name, {})[pid] = values
+        if len(groups) == 1:
+            ((name, parts),) = groups.items()
+            store = self.tenant(name)
+            store._apply(store._summarize_batch(parts))
+            return
+        suspects: list[tuple[str, int, np.ndarray]] = []
+        for name, parts in groups.items():
+            store = self.tenant(name)
+            try:
+                store._apply(store._summarize_batch(parts))
+            except BaseException:
+                suspects += [
+                    item for item in batch if item[0] == name
+                ]
+        if suspects:
+            raise PartialBatchFailure(suspects)
+
+    @staticmethod
+    def _wrap_async_error(item, exc: BaseException):
+        # pool error record: (tenant, pid, exception); a failed retention/
+        # budget sweep (item None) records as (None, None, exception)
+        if item is None:
+            return (None, None, exc)
+        return (item[0], item[1], exc)
+
+    def _sweep_after_batch(
+        self, batch: list[tuple[str, int, np.ndarray]]
+    ) -> None:
+        """Retention slot of the pool worker: per-tenant sweeps for the
+        tenants this batch touched, then the registry-wide budget (the
+        cached-total check — only touched tenants are recounted) — runs
+        between flushes, before the pending count drops."""
+        touched = {item[0] for item in batch}
+        if self.retention is not None:
+            for name in touched:
+                with self._lock:
+                    store = self._stores.get(name)
+                if store is not None:
+                    store.sweep_retention()
+        self._enforce_budget_cached(touched)
 
     def flush(self) -> None:
-        """Block until every enqueued partition is visible; surface errors.
+        """Block until every enqueued partition is visible (and swept);
+        surface errors.
 
         Re-raises (wrapped) every per-partition failure the pool hit since
         the last flush; valid partitions co-batched with a poison one are
         retried and applied individually, so the pool never wedges.
         """
-        with self._cv:
-            while self._pending > 0:
-                self._cv.wait()
-            errs, self._errors = self._errors, []
+        errs = self._pool.drain()
         if errs:
             detail = "; ".join(
-                f"tenant {t!r} partition {pid}: {e!r}" for t, pid, e in errs
+                f"tenant {t!r} partition {pid}: {e!r}"
+                if t is not None
+                else f"retention sweep: {e!r}"
+                for t, pid, e in errs
             )
             raise RuntimeError(
                 f"async ingest failed for {len(errs)} partition(s): {detail}"
@@ -197,89 +299,99 @@ class TenantRegistry:
 
     def close(self) -> None:
         """Drain the pool, stop its workers, surface pending errors."""
-        with self._ingest_mutex:
-            with self._lock:
-                threads, queues = self._threads, self._queues
-                self._threads, self._queues = [], None
-            if queues is not None:
-                for q in queues:
-                    q.put(_SENTINEL)
-                for t in threads:
-                    t.join()
+        self._pool.close()
         self.flush()
 
-    def _route(self, name: str) -> int:
-        # hash() is salted per process but stable within one — all that
-        # per-tenant FIFO needs
-        return hash(name) % self.workers
-
-    def _ensure_pool(self) -> None:
+    # ------------------------------------------------------------ retention
+    def node_floats(self) -> dict[str, int]:
+        """Per-tenant tree node-float footprints (version-cached)."""
         with self._lock:
-            if self._queues is not None and all(
-                t.is_alive() for t in self._threads
-            ):
-                return
-            self._queues = [
-                queue.Queue(maxsize=self.queue_size)
-                for _ in range(self.workers)
-            ]
-            self._threads = [
-                threading.Thread(
-                    target=self._drain_loop,
-                    args=(q,),
-                    name=f"tenant-ingest-{i}",
-                    daemon=True,
-                )
-                for i, q in enumerate(self._queues)
-            ]
-            for t in self._threads:
-                t.start()
+            names = list(self._stores)
+        return {name: self._store_floats(name) for name in names}
 
-    def _drain_loop(self, q: queue.Queue) -> None:
+    def _store_floats(self, name: str) -> int:
+        # lock order: store lock and registry lock are taken sequentially,
+        # never nested (save() nests registry→store, so nesting store→
+        # registry here would be a lock-order inversion)
+        with self._lock:
+            store = self._stores[name]
+            hit = self._floats_cache.get(name)
+        with store._lock:
+            v = store._tree.version
+            if hit is not None and hit[0] == v:
+                return hit[1]
+            floats = store._tree.node_floats()
+        with self._lock:
+            self._floats_cache[name] = (v, floats)
+        return floats
+
+    def _enforce_budget_cached(self, touched) -> None:
+        """Budget check without the O(#tenants) lock scan — shared by
+        sync ingest and the pool worker's between-flush sweep.
+
+        Only the mutated tenants' footprints are recounted (their
+        versions bumped anyway); untouched tenants answer from the
+        version cache.  The full :meth:`enforce_budget` scan runs only
+        when the cached total crosses the budget or some tenant has
+        never been counted — so a hot ingest loop under budget costs one
+        store recount per batch, not three lock round-trips per tenant.
+        """
+        if self.budget is None:
+            return
+        for name in touched:
+            with self._lock:
+                present = str(name) in self._stores
+            if present:
+                self._store_floats(str(name))
+        with self._lock:
+            cached_total = sum(f for _, f in self._floats_cache.values())
+            complete = len(self._floats_cache) == len(self._stores)
+        if not complete or cached_total > self.budget:
+            self.enforce_budget()
+
+    def enforce_budget(self) -> dict[str, list[int]]:
+        """Evict until the summed node-float footprint fits ``budget``.
+
+        Fairness rule: quota = budget / #tenants; while over budget, the
+        **largest-over-quota tenant** gives up its oldest partitions
+        first, down to its quota (or just far enough to fit the budget,
+        whichever is less eviction) — an under-quota tenant is never
+        touched, and no tenant loses its newest partition.  Returns
+        ``{tenant: [evicted ids]}``.  No-op without a budget.
+        """
+        if self.budget is None:
+            return {}
+        evicted: dict[str, list[int]] = {}
         while True:
-            item = q.get()
-            if item is _SENTINEL:
-                return
-            batch = [item]
-            stop = False
-            while True:  # drain whatever else is already queued — one flush
-                try:
-                    nxt = q.get_nowait()
-                except queue.Empty:
+            sizes = self.node_floats()
+            total = sum(sizes.values())
+            if not sizes or total <= self.budget:
+                break
+            quota = self.budget / len(sizes)
+            progressed = False
+            # largest-over-quota tenant first
+            for name in sorted(sizes, key=lambda n: -sizes[n]):
+                if sizes[name] <= quota:
+                    break  # nobody else is over quota either
+                with self._lock:
+                    store = self._stores[name]
+                # shrink to quota, or just under the global overflow —
+                # delegate the "how many oldest partitions" estimate to
+                # the MemoryBudget policy and let the outer loop converge
+                target = max(int(quota), sizes[name] - (total - self.budget))
+                victims = []
+                with store._lock:
+                    stats = store._retention_stats()
+                    victims = store.evict(
+                        MemoryBudget(max(1, target)).victims(stats)
+                    )
+                if victims:
+                    evicted.setdefault(name, []).extend(victims)
+                    progressed = True
                     break
-                if nxt is _SENTINEL:
-                    stop = True
-                    break
-                batch.append(nxt)
-            self._flush_batch(batch)
-            if stop:
-                return
-
-    def _flush_batch(
-        self, batch: list[tuple[str, int, np.ndarray]]
-    ) -> None:
-        try:
-            groups: dict[str, dict[int, np.ndarray]] = {}
-            for name, pid, values in batch:
-                groups.setdefault(name, {})[pid] = values
-            for name, parts in groups.items():
-                store = self.tenant(name)
-                try:
-                    store._apply(store._summarize_batch(parts))
-                except BaseException:
-                    # isolate poison rows: retry one partition at a time so
-                    # a single bad partition cannot drop its co-batched
-                    # valid neighbours (errors surface on flush())
-                    for pid, values in parts.items():
-                        try:
-                            store._apply(store._summarize_batch({pid: values}))
-                        except BaseException as e:
-                            with self._cv:  # pairs with flush's swap-read
-                                self._errors.append((name, pid, e))
-        finally:
-            with self._cv:
-                self._pending -= len(batch)
-                self._cv.notify_all()
+            if not progressed:
+                break  # every over-quota tenant is down to one partition
+        return evicted
 
     # --------------------------------------------------------------- Merger
     def query(
@@ -398,6 +510,10 @@ class TenantRegistry:
                 "engine": self.engine,
                 "T_node": self.T_node,
                 "cache_size": self.cache_size,
+                "retention": (
+                    None if self.retention is None else self.retention.spec()
+                ),
+                "budget": self.budget,
                 "tenants": names,
                 "stores": stores_meta,
             }
@@ -420,6 +536,8 @@ class TenantRegistry:
                     T_node if T_node in (None, "geometric") else int(T_node)
                 ),
                 cache_size=int(meta.get("cache_size", 128)),
+                retention=policy_from_spec(meta.get("retention")),
+                budget=meta.get("budget"),
             )
             for i, name in enumerate(meta["tenants"]):
                 store = reg.tenant(name)

@@ -1,0 +1,232 @@
+"""Shared async-ingest worker pool for the store and the tenant registry.
+
+``HistogramStore``'s single background thread and ``TenantRegistry``'s
+worker pool used to be near-duplicate lock-sensitive code: the greedy
+queue drain, the poison-row isolation retry, the enqueue-vs-close mutex
+(a producer landing an item behind the shutdown sentinel would strand it,
+leaking ``pending`` and wedging every later flush), and the
+pending-count/condition bookkeeping that makes ``flush()`` deterministic.
+This module is that logic, once — both planes now build an
+:class:`IngestPool` with plane-specific callbacks, so fixes to the drain
+loop land in one place.
+
+Contract (the async-ingest consistency model of core/stream.py):
+
+* ``submit(item, route)`` enqueues; items with the same route key stay
+  FIFO (per-tenant prefix visibility in the registry; a single store uses
+  one route).  Threads are started lazily and restarted transparently
+  after ``close()``.
+* Each worker drains whatever is already queued into one batch and calls
+  ``apply_batch(batch)``.  If the batch raises, every item is retried
+  alone — a poison item cannot take down its co-batched neighbours — and
+  each individual failure is recorded as ``wrap_error(item, exc)`` under
+  the pool condition (pairs with ``drain()``'s swap-read: a failure
+  concurrent with a flush can neither vanish nor double-report).
+* ``on_batch_end(batch)``, when given, runs on the worker after every
+  applied batch and *before* the pending count drops — the retention
+  sweeper's slot: ``flush()`` returning implies the sweep ran on
+  everything visible.  Its failures are recorded as
+  ``wrap_error(None, exc)``.
+* ``drain()`` blocks until everything submitted so far is processed and
+  returns (swapping out) the accumulated error records; ``close()`` stops
+  the workers after a final drain of each queue.  Nothing is
+  timing-dependent: synchronization is by lock/condition only.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable
+
+__all__ = ["IngestPool", "PartialBatchFailure", "PoolStateView"]
+
+_SENTINEL = object()  # shuts down one pool worker
+
+
+class PartialBatchFailure(Exception):
+    """Raised by ``apply_batch`` to narrow the poison retry.
+
+    When the callback knows which items of the batch are suspect (the
+    registry applies per-tenant groups independently, so a failing group
+    doesn't taint the groups that already applied), it raises this with
+    just those items — the pool then retries *only them* one by one,
+    instead of re-applying the whole batch.  Any other exception keeps
+    the conservative whole-batch retry.
+    """
+
+    def __init__(self, items: list):
+        super().__init__(f"{len(items)} item(s) failed")
+        self.items = items
+
+
+class PoolStateView:
+    """Forwarding properties onto the owner's ``_pool`` (an IngestPool).
+
+    Mixed into the store and the registry so their historical attribute
+    surface keeps working — tests pin the error/flush synchronization by
+    replacing ``_cv`` (and the per-owner errors alias) directly, and the
+    pool reads these dynamically.  Each owner adds its own errors alias
+    (``_async_errors`` / ``_errors``) since the record shapes differ.
+    """
+
+    @property
+    def _cv(self) -> threading.Condition:
+        return self._pool.cv
+
+    @_cv.setter
+    def _cv(self, value: threading.Condition) -> None:
+        self._pool.cv = value
+
+    @property
+    def _pending(self) -> int:
+        return self._pool.pending
+
+    @property
+    def _ingest_mutex(self) -> threading.Lock:
+        return self._pool.ingest_mutex
+
+
+class IngestPool:
+    """Bounded-queue worker pool with batch drain + poison isolation."""
+
+    def __init__(
+        self,
+        *,
+        apply_batch: Callable[[list], None],
+        wrap_error: Callable[[object, BaseException], object],
+        workers: int = 1,
+        queue_size: int = 1024,
+        name: str = "ingest",
+        on_batch_end: Callable[[list], None] | None = None,
+    ):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.apply_batch = apply_batch
+        self.wrap_error = wrap_error
+        self.on_batch_end = on_batch_end
+        self.workers = int(workers)
+        self.queue_size = int(queue_size)
+        self.name = name
+        # pending-count + error-record synchronization; owners may expose
+        # (or tests may replace) this condition — always read via self.cv
+        self.cv = threading.Condition()
+        self.pending = 0  # submitted-but-not-yet-processed items
+        self.errors: list = []  # wrap_error records since the last drain
+        # serializes submit against close(): without it a producer could
+        # land an item behind the shutdown sentinel (or hit the torn-down
+        # queue list) and strand it.  Workers never take this mutex, so
+        # close() may hold it across join().
+        self.ingest_mutex = threading.Lock()
+        self._state_lock = threading.Lock()  # guards queue/thread setup
+        self._queues: list[queue.Queue] | None = None
+        self._threads: list[threading.Thread] = []
+
+    # --------------------------------------------------------------- submit
+    def submit(self, item, route: int = 0) -> None:
+        """Enqueue one item (blocking only when the bounded queue is full).
+        Items sharing ``route % workers`` are processed FIFO."""
+        with self.ingest_mutex:
+            self._ensure_workers()
+            with self.cv:
+                self.pending += 1
+            self._queues[route % self.workers].put(item)
+
+    def _ensure_workers(self) -> None:
+        with self._state_lock:
+            if self._queues is not None and all(
+                t.is_alive() for t in self._threads
+            ):
+                return
+            self._queues = [
+                queue.Queue(maxsize=self.queue_size)
+                for _ in range(self.workers)
+            ]
+            self._threads = [
+                threading.Thread(
+                    target=self._drain_loop,
+                    args=(q,),
+                    name=f"{self.name}-{i}",
+                    daemon=True,
+                )
+                for i, q in enumerate(self._queues)
+            ]
+            for t in self._threads:
+                t.start()
+
+    # ---------------------------------------------------------------- drain
+    def _drain_loop(self, q: queue.Queue) -> None:
+        while True:
+            item = q.get()
+            if item is _SENTINEL:
+                return
+            batch = [item]
+            stop = False
+            while True:  # drain whatever else is already queued — one flush
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._run_batch(batch)
+            if stop:
+                return
+
+    def _run_batch(self, batch: list) -> None:
+        try:
+            try:
+                self.apply_batch(batch)
+            except PartialBatchFailure as pf:
+                suspects = pf.items
+            except BaseException:
+                suspects = batch
+            else:
+                suspects = ()
+            # isolate the poison rows: retry the suspect items one at a
+            # time so a single bad item cannot drop the valid items
+            # drained into the same batch (errors surface on the owner's
+            # flush())
+            for item in suspects:
+                try:
+                    self.apply_batch([item])
+                except BaseException as e:
+                    with self.cv:  # pairs with drain()'s swap-read
+                        self.errors.append(self.wrap_error(item, e))
+            if self.on_batch_end is not None:
+                try:
+                    self.on_batch_end(batch)
+                except BaseException as e:
+                    with self.cv:
+                        self.errors.append(self.wrap_error(None, e))
+        finally:
+            with self.cv:
+                self.pending -= len(batch)
+                self.cv.notify_all()
+
+    # ----------------------------------------------------------- lifecycle
+    def drain(self) -> list:
+        """Block until every submitted item is processed; swap out and
+        return the accumulated error records (the owner formats/raises)."""
+        with self.cv:
+            while self.pending > 0:
+                self.cv.wait()
+            # swap-read under cv: workers append under the same lock, so a
+            # batch failing concurrently with this drain can neither vanish
+            # into the swapped-out list nor be reported twice
+            errs, self.errors = self.errors, []
+        return errs
+
+    def close(self) -> None:
+        """Drain each queue, stop the workers.  Safe to call repeatedly;
+        the next submit() restarts the pool transparently."""
+        with self.ingest_mutex:
+            with self._state_lock:
+                threads, queues = self._threads, self._queues
+                self._threads, self._queues = [], None
+            if queues is not None:
+                for q in queues:
+                    q.put(_SENTINEL)
+                for t in threads:
+                    t.join()

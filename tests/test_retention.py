@@ -1,0 +1,313 @@
+"""Retention subsystem (core/retention.py + evict_leaves + registry budget).
+
+Covers the retention lifecycle layer end to end:
+
+* eviction/cache interaction — an answer cached before ``evict_leaves``
+  (single query, batched ``query_many``, and the cross-tenant registry
+  ``query_many``) is never returned after eviction: eviction bumps the
+  store version and the LRU is version-keyed;
+* the watermark-driven policies (TTL / SlidingWindow / MemoryBudget /
+  AnyOf), swept inline on synchronous ingest and on the shared ingest
+  worker between flushes for async ingest;
+* lazy subtree collapse — after eviction the tree re-roots at the lowest
+  surviving leaf and is *structurally identical* to a fresh build over
+  the survivors (same base, depth, node keys, and node-float footprint —
+  the geometric re-coarsening claim, machine-checked);
+* watermark + policy persistence through save/load (store and registry);
+* the registry-wide memory budget with fair per-tenant quotas.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnyOf,
+    HistogramStore,
+    MemoryBudget,
+    SlidingWindow,
+    TTL,
+    TenantRegistry,
+    policy_from_spec,
+)
+
+T = 32
+BETA = 8
+N_PER = 200
+
+
+def _parts(days, seed=0, n_per=N_PER, start=0):
+    rng = np.random.default_rng(seed)
+    return {
+        d: rng.gumbel(size=n_per).astype(np.float32)
+        for d in range(start, start + days)
+    }
+
+
+def _store(days=8, seed=0, **kw):
+    parts = _parts(days, seed=seed)
+    store = HistogramStore(num_buckets=T, **kw)
+    store.ingest_many(parts)
+    return store, parts
+
+
+# ------------------------------------------------------------ basic evict
+def test_evict_removes_partitions_and_bumps_version():
+    store, _ = _store(days=8)
+    v0 = store.version
+    assert store.evict([0, 1, 99]) == [0, 1]  # absent ids ignored
+    assert store.version > v0
+    assert store.ids() == list(range(2, 8))
+    assert store.evict([0, 1]) == []  # idempotent
+    with pytest.raises(KeyError):
+        store.query(0, 7, BETA, strict=True)  # strict sees the loss
+    h, eps = store.query(0, 7, BETA, strict=False)
+    assert float(np.asarray(h.sizes).sum()) == 6 * N_PER
+    assert np.isfinite(eps)
+
+
+def test_cached_answer_never_served_after_evict():
+    """The satellite regression: a query/query_many answer cached before
+    evict must never be returned after it (version-keyed invalidation)."""
+    store, _ = _store(days=8)
+    h_before, _ = store.query(0, 7, BETA)  # populates the LRU
+    store.query_many([(0, 7), (2, 5)], BETA)  # and the batched path
+    assert float(np.asarray(h_before.sizes).sum()) == 8 * N_PER
+    store.evict([0, 1, 2, 3])
+    h_after, _ = store.query(0, 7, BETA, strict=False)
+    assert float(np.asarray(h_after.sizes).sum()) == 4 * N_PER
+    (hm, _), (hm2, _) = store.query_many([(0, 7), (2, 5)], BETA, strict=False)
+    assert float(np.asarray(hm.sizes).sum()) == 4 * N_PER
+    assert float(np.asarray(hm2.sizes).sum()) == 2 * N_PER  # only 4, 5 left
+
+
+def test_registry_query_many_never_serves_evicted_cross_tenant():
+    """Cross-tenant batched path: warm both tenants' LRUs via the
+    registry, evict in one tenant, re-ask the same batch — the evicted
+    tenant's answer must be fresh while the untouched tenant's answer is
+    bit-identical (still served from its cache)."""
+    reg = TenantRegistry(num_buckets=T)
+    for name, seed in (("a", 1), ("b", 2)):
+        reg.ingest_many(name, _parts(6, seed=seed))
+    qs = [("a", 0, 5), ("b", 0, 5)]
+    (ha0, _), (hb0, _) = reg.query_many(qs, BETA)
+    assert float(np.asarray(ha0.sizes).sum()) == 6 * N_PER
+    reg["a"].evict([0, 1, 2])
+    res = reg.query_many(qs, BETA, strict=False)
+    (ha1, _), (hb1, _) = res
+    assert float(np.asarray(ha1.sizes).sum()) == 3 * N_PER  # not the cache
+    np.testing.assert_array_equal(
+        np.asarray(hb0.sizes), np.asarray(hb1.sizes)
+    )
+
+
+# ---------------------------------------------------------------- policies
+def test_ttl_sweeps_on_sync_ingest_against_watermark():
+    store = HistogramStore(num_buckets=T, retention=TTL(max_age=3))
+    for d, v in _parts(10, seed=3).items():
+        store.ingest(d, v)
+    assert store.watermark == 9
+    assert store.ids() == [6, 7, 8, 9]  # keep watermark-3 .. watermark
+
+
+def test_sliding_window_sweeps_on_the_async_worker():
+    store = HistogramStore(
+        num_buckets=T, async_ingest=True, retention=SlidingWindow(4)
+    )
+    for d, v in _parts(12, seed=4).items():
+        store.ingest_async(d, v)
+    store.flush()  # flush returning implies the sweep ran on the worker
+    assert store.ids() == [8, 9, 10, 11]
+    store.close()
+
+
+def test_memory_budget_bounds_node_floats_and_keeps_newest():
+    probe, _ = _store(days=4, seed=5)
+    budget = probe.node_floats()  # room for roughly four partitions
+    store = HistogramStore(num_buckets=T, retention=MemoryBudget(budget))
+    for d, v in _parts(32, seed=5).items():
+        store.ingest(d, v)
+    assert store.node_floats() <= budget
+    assert store.ids(), "budget must not empty the store"
+    assert store.ids()[-1] == 31  # newest partition never evicted
+    assert store.ids() == sorted(store.ids())  # oldest-first eviction
+
+
+def test_anyof_unions_policies_and_specs_roundtrip():
+    store = HistogramStore(
+        num_buckets=T, retention=AnyOf(TTL(5), SlidingWindow(3))
+    )
+    for d, v in _parts(10, seed=6).items():
+        store.ingest(d, v)
+    assert store.ids() == [7, 8, 9]  # the window is the tighter policy
+    for policy in (
+        TTL(7),
+        SlidingWindow(4),
+        MemoryBudget(12345),
+        AnyOf(TTL(2), MemoryBudget(99)),
+    ):
+        assert policy_from_spec(policy.spec()) == policy
+    assert policy_from_spec(None) is None
+    with pytest.raises(ValueError):
+        TTL(-1)
+    with pytest.raises(ValueError):
+        SlidingWindow(0)
+    with pytest.raises(ValueError):
+        MemoryBudget(0)
+    with pytest.raises(ValueError):
+        AnyOf()
+    with pytest.raises(ValueError):
+        policy_from_spec({"kind": "bogus"})
+
+
+# ----------------------------------------------------------- lazy collapse
+def test_collapse_rebases_tree_at_lowest_survivor():
+    store, parts = _store(days=64, seed=7)
+    store.evict(range(60))
+    tree = store._tree
+    assert store.ids() == [60, 61, 62, 63]
+    assert tree.base == 60  # re-rooted: slots no longer grow unboundedly
+    assert tree.levels == 2  # minimal depth for 4 leaves
+    fresh = HistogramStore(num_buckets=T)
+    fresh.ingest_many({d: parts[d] for d in store.ids()})
+    assert tree.nodes.keys() == fresh._tree.nodes.keys()
+    assert store.node_floats() == fresh.node_floats()
+
+
+@pytest.mark.parametrize("t_node", [None, "geometric"])
+def test_collapse_matches_fresh_build_floats(t_node):
+    """Misaligned survivors take the rebase-rebuild path; under geometric
+    T_node that is the re-coarsening claim: ancestors are recomputed at
+    the shallow tree's resolutions, so the footprint equals (not merely
+    approaches) a fresh build over the survivors."""
+    parts = _parts(64, seed=8)
+    store = HistogramStore(num_buckets=T, T_node=t_node)
+    store.ingest_many(parts)
+    full = store.node_floats()
+    store.evict(range(59))  # survivors 59..63 straddle an alignment
+    fresh = HistogramStore(num_buckets=T, T_node=t_node)
+    fresh.ingest_many({d: parts[d] for d in range(59, 64)})
+    assert store._tree.base == fresh._tree.base == 59
+    assert store._tree.levels == fresh._tree.levels
+    assert store._tree.nodes.keys() == fresh._tree.nodes.keys()
+    assert store.node_floats() == fresh.node_floats() < full
+    # eviction-aware eps: the composed bound reflects the collapsed tree
+    h1, e1 = store.query(59, 63, BETA)
+    h2, e2 = fresh.query(59, 63, BETA)
+    np.testing.assert_array_equal(np.asarray(h1.sizes), np.asarray(h2.sizes))
+    assert e1 == e2 and np.isfinite(e1)
+
+
+def test_evict_everything_then_reingest():
+    store, _ = _store(days=6, seed=9)
+    store.evict(range(6))
+    assert store.ids() == []
+    assert store._tree.base is None and store._tree.levels == 0
+    with pytest.raises(KeyError):
+        store.query(0, 5, BETA, strict=False)
+    rng = np.random.default_rng(10)
+    store.ingest(100, rng.gumbel(size=N_PER).astype(np.float32))
+    h, _ = store.query(100, 100, BETA)
+    assert float(np.asarray(h.sizes).sum()) == N_PER
+
+
+# ------------------------------------------------------------- persistence
+def test_watermark_and_policy_persist_through_save_load(tmp_path):
+    store = HistogramStore(num_buckets=T, retention=TTL(3))
+    for d, v in _parts(6, seed=11).items():
+        store.ingest(d, v)
+    assert store.ids() == [2, 3, 4, 5] and store.watermark == 5
+    path = str(tmp_path / "s.npz")
+    store.save(path)
+    loaded = HistogramStore.load(path)
+    assert loaded.watermark == 5
+    assert loaded.retention == TTL(3)
+    # aging resumes where it stopped: one new partition expires pid 2
+    rng = np.random.default_rng(12)
+    loaded.ingest(6, rng.gumbel(size=N_PER).astype(np.float32))
+    assert loaded.ids() == [3, 4, 5, 6]
+
+
+def test_watermark_survives_full_eviction_roundtrip(tmp_path):
+    store = HistogramStore(num_buckets=T, retention=TTL(2))
+    for d, v in _parts(5, seed=13).items():
+        store.ingest(d, v)
+    store.evict(store.ids())  # operator wipe: nothing retained
+    path = str(tmp_path / "s.npz")
+    store.save(path)
+    loaded = HistogramStore.load(path)
+    assert loaded.ids() == [] and loaded.watermark == 4  # not resurrected
+
+
+def test_registry_persists_budget_retention_and_watermarks(tmp_path):
+    reg = TenantRegistry(
+        num_buckets=T, retention=SlidingWindow(3), budget=10**9
+    )
+    reg.ingest_many("a", _parts(6, seed=14))
+    assert reg["a"].ids() == [3, 4, 5]
+    path = str(tmp_path / "reg.npz")
+    reg.save(path)
+    loaded = TenantRegistry.load(path)
+    assert loaded.budget == 10**9
+    assert loaded.retention == SlidingWindow(3)
+    assert loaded["a"].retention == SlidingWindow(3)
+    assert loaded["a"].watermark == 5
+    rng = np.random.default_rng(15)
+    loaded.ingest("a", 6, rng.gumbel(size=N_PER).astype(np.float32))
+    assert loaded["a"].ids() == [4, 5, 6]  # window keeps sliding
+
+
+# ---------------------------------------------------------- registry quota
+def test_registry_budget_evicts_largest_over_quota_tenant_first():
+    probe, _ = _store(days=3, seed=16)
+    small_floats = probe.node_floats()
+    budget = 4 * small_floats  # quota = 2×small per tenant at 2 tenants
+    reg = TenantRegistry(num_buckets=T, budget=budget)
+    reg.ingest_many("big", _parts(24, seed=17))
+    reg.ingest_many("small", _parts(3, seed=16))
+    sizes = reg.node_floats()
+    assert sum(sizes.values()) <= budget
+    assert reg["small"].ids() == [0, 1, 2]  # under quota: never touched
+    big_ids = reg["big"].ids()
+    assert big_ids and big_ids[-1] == 23  # newest survives
+    assert big_ids == list(range(big_ids[0], 24))  # oldest-first suffix
+
+
+def test_registry_budget_runs_on_the_pool_worker():
+    probe, _ = _store(days=2, seed=18)
+    budget = 3 * probe.node_floats()
+    reg = TenantRegistry(num_buckets=T, budget=budget, workers=2)
+    for name in ("x", "y"):
+        for d, v in _parts(10, seed=19).items():
+            reg.ingest_async(name, d, v)
+    reg.flush()  # flush returning implies the budget sweep ran
+    assert sum(reg.node_floats().values()) <= budget
+    for name in ("x", "y"):
+        assert reg[name].ids() and reg[name].ids()[-1] == 9
+    reg.close()
+
+
+def test_registry_per_tenant_retention_on_the_pool_worker():
+    reg = TenantRegistry(num_buckets=T, retention=SlidingWindow(3))
+    for d, v in _parts(8, seed=20).items():
+        reg.ingest_async("m", d, v)
+    reg.flush()
+    assert reg["m"].ids() == [5, 6, 7]
+    reg.close()
+
+
+def test_telemetry_hub_forwards_retention():
+    from repro.core import TelemetryHub
+
+    hub = TelemetryHub(T=T, retention=SlidingWindow(2))
+    rng = np.random.default_rng(21)
+    for step in range(5):
+        hub.record("loss", step, np.abs(rng.normal(size=64)).astype(np.float32))
+    assert hub.registry["loss"].ids() == [3, 4]
+    hub.close()
+    # silently dropping the knobs would unbound the memory they cap —
+    # an explicit registry must carry its own retention/budget
+    with pytest.raises(ValueError):
+        TelemetryHub(
+            T=T, registry=TenantRegistry(num_buckets=T), retention=TTL(1)
+        )
+    with pytest.raises(ValueError):
+        TelemetryHub(T=T, registry=TenantRegistry(num_buckets=T), budget=10)

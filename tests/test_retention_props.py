@@ -1,0 +1,140 @@
+"""Property tests for the retention subsystem (tests/_propcheck.py harness).
+
+Two guarantees over random interleavings of ``ingest`` / ``evict`` /
+``query`` (prefix-, interior-, and suffix-shaped evictions, gappy
+monotone partition ids, both uniform and geometric ``T_node``):
+
+* **bit-exactness vs a flat rebuild of only the retained partitions** —
+  after any interleaving, the store's tree is structurally identical
+  (base, depth, node keys) to a fresh store fed exactly the retained raw
+  partitions, and every ``query``/``query_many`` answer (histogram AND
+  reported ``eps_total``) is bit-identical to the rebuilt store's.  This
+  holds because ``evict_leaves``'s lazy collapse always re-roots at the
+  lowest surviving leaf, and node summaries are a deterministic function
+  of the slot→leaf map (padding invariance, interval_tree.py docstring).
+* **the composed error bound survives collapse** — measured bucket error
+  (reported sizes and true pooled-value occupancy) stays within the
+  reported ``eps_total`` after any amount of eviction and re-rooting.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HistogramStore
+
+settings.register_profile("ci", deadline=None, max_examples=12)
+settings.load_profile("ci")
+
+T = 16
+BETA = 8
+
+
+@st.composite
+def interleaving_case(draw):
+    geometric = draw(st.booleans())
+    seed = draw(st.integers(0, 2**31 - 1))
+    n_steps = draw(st.integers(4, 14))
+    rng = np.random.default_rng(seed)
+    store = HistogramStore(
+        num_buckets=T, T_node="geometric" if geometric else None
+    )
+    raw: dict[int, np.ndarray] = {}
+    next_pid = 0
+    for _ in range(n_steps):
+        op = int(rng.integers(0, 4))
+        if op <= 1 or not raw:  # ingest a small burst (gappy monotone ids)
+            parts = {}
+            for _ in range(int(rng.integers(1, 4))):
+                next_pid += int(rng.integers(1, 3))
+                n = T * int(rng.integers(1, 5))
+                parts[next_pid] = rng.normal(size=n).astype(np.float32)
+            raw.update(parts)
+            store.ingest_many(parts)
+        elif op == 2:  # evict: prefix-biased (the policy shape) + interior
+            ids = sorted(raw)
+            k = int(rng.integers(1, len(ids) + 1))
+            if rng.random() < 0.6:
+                victims = ids[:k]
+            else:
+                victims = [
+                    ids[i]
+                    for i in rng.choice(len(ids), size=k, replace=False)
+                ]
+            assert store.evict(victims) == sorted(victims)
+            for p in victims:
+                raw.pop(p)
+        else:  # query mid-interleaving: exercises + populates the LRU
+            ids = sorted(raw)
+            lo, hi = sorted(
+                (int(rng.choice(ids)), int(rng.choice(ids)))
+            )
+            store.query(lo, hi, BETA, strict=False)
+    return store, raw, geometric, seed
+
+
+def _windows(raw, seed):
+    ids = sorted(raw)
+    rng = np.random.default_rng(seed + 1)
+    out = [(ids[0], ids[-1]), (ids[0], ids[0]), (ids[-1], ids[-1])]
+    for _ in range(3):
+        lo, hi = sorted((int(rng.choice(ids)), int(rng.choice(ids))))
+        out.append((lo, hi))
+    return out
+
+
+@given(interleaving_case())
+def test_interleaved_evictions_bitexact_vs_flat_rebuild(case):
+    store, raw, geometric, seed = case
+    if not raw:  # everything evicted: the store must say so, not guess
+        with pytest.raises(KeyError):
+            store.query(0, 10**6, BETA, strict=False)
+        assert store._tree.base is None
+        return
+    fresh = HistogramStore(
+        num_buckets=T, T_node="geometric" if geometric else None
+    )
+    fresh.ingest_many(dict(raw))
+    # the tree IS the flat rebuild of the retained window, structurally
+    assert store._tree.base == fresh._tree.base
+    assert store._tree.levels == fresh._tree.levels
+    assert store._tree.nodes.keys() == fresh._tree.nodes.keys()
+    windows = _windows(raw, seed)
+    batched = store.query_many(windows, BETA, strict=False)
+    for (lo, hi), (hb, eb) in zip(windows, batched):
+        h1, e1 = store.query(lo, hi, BETA, strict=False)
+        h2, e2 = fresh.query(lo, hi, BETA, strict=False)
+        np.testing.assert_array_equal(
+            np.asarray(h1.boundaries), np.asarray(h2.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h1.sizes), np.asarray(h2.sizes)
+        )
+        assert e1 == e2  # eviction-aware eps ≡ rebuilt tree's eps
+        np.testing.assert_array_equal(
+            np.asarray(hb.sizes), np.asarray(h2.sizes)
+        )
+        assert eb == e2
+
+
+@given(interleaving_case())
+def test_measured_error_within_reported_eps_after_collapse(case):
+    store, raw, geometric, seed = case
+    if not raw:
+        return
+    for lo, hi in _windows(raw, seed):
+        h, eps = store.query(lo, hi, BETA, strict=False)
+        pids = [p for p in sorted(raw) if lo <= p <= hi]
+        pooled = np.sort(np.concatenate([raw[p] for p in pids]))
+        n = pooled.size
+        sizes = np.asarray(h.sizes, np.float64)
+        assert float(sizes.sum()) == pytest.approx(n, abs=0.5)
+        # Theorem 1 on the reported sizes
+        assert np.abs(sizes - n / BETA).max() <= eps + 1e-3
+        # Theorem 1 on the TRUE occupancy of the answer's buckets
+        # (normal draws: no ties, so true counts are unambiguous)
+        b = np.asarray(h.boundaries, np.float64)
+        lo_i = np.searchsorted(pooled, b[:-1], side="left")
+        hi_i = np.searchsorted(pooled, b[1:], side="left")
+        true_sizes = (hi_i - lo_i).astype(np.float64)
+        true_sizes[-1] += np.sum(pooled == b[-1])  # last bucket right-closed
+        assert np.abs(true_sizes - n / BETA).max() <= eps + 1e-3

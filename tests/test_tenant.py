@@ -243,6 +243,42 @@ def test_async_pool_error_appends_hold_the_flush_lock():
     reg.close()
 
 
+def test_poison_narrows_retry_to_the_failing_tenants_group():
+    """A poison partition must not make the pool re-apply tenants whose
+    groups already applied (redundant dispatches + version churn that
+    kills their warm LRUs): the apply callback raises PartialBatchFailure
+    carrying only the failing group's items."""
+    from repro.core.workers import PartialBatchFailure
+
+    reg = TenantRegistry(num_buckets=T)
+    a, b = reg.tenant("a"), reg.tenant("b")
+    a._summarize_batch = lambda parts: (_ for _ in ()).throw(
+        RuntimeError("boom")
+    )
+    rng = np.random.default_rng(0)
+    batch = [
+        ("a", 0, rng.normal(size=64).astype(np.float32)),
+        ("b", 0, rng.normal(size=64).astype(np.float32)),
+        ("b", 1, rng.normal(size=64).astype(np.float32)),
+    ]
+    applies = []
+    orig_b_apply = b._apply
+
+    def counting(summs):
+        applies.append(sorted(summs))
+        return orig_b_apply(summs)
+
+    b._apply = counting
+    with pytest.raises(PartialBatchFailure) as ei:
+        reg._apply_worker_batch(batch)
+    assert [(t, pid) for t, pid, _ in ei.value.items] == [("a", 0)]
+    assert applies == [[0, 1]]  # b's group applied exactly once, in bulk
+    # single-group batches propagate the REAL error so the pool's
+    # per-item retry records the underlying exception, not a wrapper
+    with pytest.raises(RuntimeError, match="boom"):
+        reg._apply_worker_batch([batch[0]])
+
+
 def test_close_drains_and_pool_restarts():
     reg = TenantRegistry(num_buckets=T, workers=2)
     parts = _parts(seed=7, n_parts=4)
