@@ -1,0 +1,435 @@
+"""Shared node-storage arena: zero-copy pack vs per-tenant host packs.
+
+The serving-side A/B for ``TenantRegistry(shared_arena=True)``
+(core/arena.py): both layouts answer the same cold cross-tenant dashboard
+refresh with ONE merge dispatch (that was PR 3), so what differs is how
+the ``(Q, k_pad, T_pad)`` merge stack gets *assembled*:
+
+  * **per_tenant_pack** — the non-shared layout: one stacked fancy-index
+    copy per tenant, the host block fill, and the host→device transfer
+    of the whole block;
+  * **shared_arena** — a single device gather over the registry-wide
+    pool: zero host row copies, machine-checked, bit-identical block.
+
+Two levels of measurement, both reported:
+
+  * **pack stage** (``query.pack``) — the stack assembly alone, on
+    identical selections, including each side's path to device-resident
+    merge inputs.  This is the cost the arena actually removes and the
+    ≥1.5× acceptance claim: ~4× here, and the gap only widens on a real
+    accelerator where the host→device block transfer crosses PCIe.
+  * **end-to-end** (``query.per_tenant_pack``/``query.shared_arena``) —
+    cold ``query_many`` wall time.  The merge dispatch itself (identical
+    device-side sort work in both layouts) dominates wall time on this
+    CPU backend, so the end-to-end ratio is structurally the smaller
+    number (~1.1-1.3×); it is asserted ``>= 1.0`` and reported for
+    honesty, not as the headline.
+
+Reported sections:
+
+  * **query**  — pack-stage + end-to-end A/B above, with the
+    machine-checked counters (``merge_dispatches == 1``, shared
+    ``host_row_copies == 0``) and bit-identity checks across layouts;
+  * **ingest** — one steady-state drained batch (one new day for every
+    tenant) applied per-tenant vs cross-tenant batched: merge dispatches
+    drop from ``tenants × log W`` to ``log W`` (counted deterministically
+    by driving the pool's apply callback with a known batch);
+  * **slide**  — canonical vs amortized collapse under a sliding window:
+    merged pairs per stream (the O(W) → O(log W) per-slide claim), with
+    the amortized answers' measured error still within their reported
+    ``eps_total``.
+
+Results print as CSV rows and are written to ``BENCH_arena.json`` (schema
+``bench_arena/v1``; CI smoke-checks it at small sizes via ``--smoke``).
+Every run appends a ``trajectory`` entry (headline numbers per run) so the
+file carries its own history.
+
+Run standalone: ``PYTHONPATH=src python benchmarks/arena.py``
+or as a section of ``python -m benchmarks.run --only arena``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import HistogramStore, SlidingWindow, TenantRegistry
+from repro.core import interval_tree as it_mod
+
+SCHEMA = "bench_arena/v1"
+
+T = 32  # summary resolution (serving regime: many small per-metric
+BETA = 16  # summaries — the same sizing argument as BENCH_tenant)
+N_PER = 128
+PARTS = 48  # deep windows → k_pad = 16 canonical rows per query
+
+
+def _collect_selections(reg, qs) -> list[list]:
+    """Resolve each query's canonical node handles (the pack inputs),
+    exactly as query_many does on a cold miss."""
+    sels = []
+    for name, lo, hi in qs:
+        store = reg[name]
+        with store._lock:
+            keys = store._sync_tree([], lo, hi)
+            sels.append([store._tree.nodes[k] for k in keys])
+    return sels
+
+
+def _build(shared: bool, n_tenants: int, parts: int, n_per: int) -> TenantRegistry:
+    rng = np.random.default_rng(1)
+    reg = TenantRegistry(num_buckets=T, shared_arena=shared)
+    for t in range(n_tenants):
+        reg.ingest_many(
+            f"svc{t:04d}",
+            {
+                d: rng.lognormal(-1.8, 0.55, size=n_per).astype(np.float32)
+                for d in range(parts)
+            },
+        )
+    return reg
+
+
+def _queries(reg: TenantRegistry, parts: int) -> list[tuple[str, int, int]]:
+    rng = np.random.default_rng(2)
+    out = []
+    for name in reg.names():
+        lo = int(rng.integers(0, parts // 2))
+        hi = int(rng.integers(lo + parts // 3, parts))
+        out.append((name, lo, hi))
+    return out
+
+
+def _clear_caches(reg: TenantRegistry) -> None:
+    for name in reg.names():
+        reg[name]._tree._cache.clear()
+
+
+def _timed_cold_interleaved(variants: list[tuple], reps: int) -> list[float]:
+    """Best-of-``reps`` cold timing with the variants interleaved round-
+    robin, so slow machine phases (CPU contention, frequency drift) hit
+    every variant equally instead of biasing whichever ran last."""
+    best = [float("inf")] * len(variants)
+    for _ in range(reps):
+        for vi, (reg, fn) in enumerate(variants):
+            _clear_caches(reg)
+            t0 = time.perf_counter()
+            fn()
+            dt = time.perf_counter() - t0
+            if dt < best[vi]:
+                best[vi] = dt
+    return best
+
+
+def _bit_identical(a, b) -> bool:
+    for (ha, ea), (hb, eb) in zip(a, b):
+        if ea != eb:
+            return False
+        if not np.array_equal(np.asarray(ha.boundaries), np.asarray(hb.boundaries)):
+            return False
+        if not np.array_equal(np.asarray(ha.sizes), np.asarray(hb.sizes)):
+            return False
+    return True
+
+
+def _query_section(n_tenants: int, parts: int, n_per: int, reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.interval_tree import pack_device_rows, pack_node_rows
+
+    legacy = _build(False, n_tenants, parts, n_per)
+    shared = _build(True, n_tenants, parts, n_per)
+    qs = _queries(legacy, parts)
+    Q = len(qs)
+    # warm each registry's own compile shapes before timing (the layouts
+    # share shapes here, but each pays its own first dispatch)
+    for reg in (legacy, shared):
+        reg.query_many(qs, BETA)
+        _clear_caches(reg)
+    t_legacy, t_shared = _timed_cold_interleaved(
+        [
+            (legacy, lambda: legacy.query_many(qs, BETA)),
+            (shared, lambda: shared.query_many(qs, BETA)),
+        ],
+        reps,
+    )
+
+    # pack-stage A/B on identical selections: each side timed to device-
+    # resident merge inputs (the host pack must also ship its block)
+    sel_legacy = _collect_selections(legacy, qs)
+    sel_shared = _collect_selections(shared, qs)
+    T_pad = max(nd.width for sel in sel_legacy for nd in sel)
+
+    def host_pack():
+        b, s = pack_node_rows(sel_legacy, T_pad=T_pad, pad_row_copy=True)
+        out = (jnp.asarray(b), jnp.asarray(s))
+        jax.block_until_ready(out)
+        return out
+
+    def gather_pack():
+        out = pack_device_rows(sel_shared)
+        jax.block_until_ready(out)
+        return out
+
+    hb, hs = host_pack()
+    gb, gs = gather_pack()
+    blocks_identical = bool(jnp.array_equal(hb, gb)) and bool(
+        jnp.array_equal(hs, gs)
+    )
+    t_host_pack = t_gather_pack = float("inf")
+    for _ in range(max(reps, 5)):
+        t0 = time.perf_counter()
+        host_pack()
+        t_host_pack = min(t_host_pack, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        gather_pack()
+        t_gather_pack = min(t_gather_pack, time.perf_counter() - t0)
+
+    # machine-checked cold batch: one dispatch, zero host row copies, and
+    # answers bit-identical between the two layouts
+    for reg in (legacy, shared):
+        _clear_caches(reg)
+        reg.merge_dispatches = 0
+        reg.merge_shapes.clear()
+        reg.reset_host_row_copies()
+    ans_legacy = legacy.query_many(qs, BETA)
+    ans_shared = shared.query_many(qs, BETA)
+    out = {
+        "queries": Q,
+        "pack": {
+            "host_pack_seconds": t_host_pack,
+            "gather_pack_seconds": t_gather_pack,
+            "pack_speedup": t_host_pack / t_gather_pack,
+            "blocks_bit_identical": blocks_identical,
+        },
+        "per_tenant_pack": {
+            "seconds": t_legacy,
+            "qps": Q / t_legacy,
+            "dispatches_per_batch": legacy.merge_dispatches,
+            "host_row_copies": legacy.host_row_copies,
+        },
+        "shared_arena": {
+            "seconds": t_shared,
+            "qps": Q / t_shared,
+            "dispatches_per_batch": shared.merge_dispatches,
+            "host_row_copies": shared.host_row_copies,
+            "merge_shapes": [list(s) for s in sorted(shared.merge_shapes)],
+        },
+        "speedup_vs_per_tenant_pack": t_legacy / t_shared,
+        "bit_identical": _bit_identical(ans_legacy, ans_shared),
+    }
+    legacy.close()
+    shared.close()
+    return out
+
+
+def _ingest_section(n_tenants: int, parts: int, n_per: int) -> dict:
+    """One steady-state drained batch — one new day per tenant — applied
+    through the pool callback of each layout (deterministic composition,
+    unlike racing the real workers)."""
+    rng = np.random.default_rng(3)
+    day = parts
+    batch = [
+        (
+            f"svc{t:04d}",
+            day,
+            rng.lognormal(-1.8, 0.55, size=n_per).astype(np.float32),
+        )
+        for t in range(n_tenants)
+    ]
+    out = {}
+    for tag, shared in (("per_tenant_pullups", False), ("shared_batched_pullups", True)):
+        reg = _build(shared, n_tenants, parts, n_per)
+        it_mod.reset_pullup_stats()
+        t0 = time.perf_counter()
+        reg._apply_worker_batch(batch)
+        seconds = time.perf_counter() - t0
+        stats = it_mod.reset_pullup_stats()
+        out[tag] = {
+            "seconds": seconds,
+            "dispatches": stats["dispatches"],
+            "pair_merges": stats["pair_merges"],
+        }
+        reg.close()
+    out["dispatch_reduction"] = (
+        out["per_tenant_pullups"]["dispatches"]
+        / max(1, out["shared_batched_pullups"]["dispatches"])
+    )
+    return out
+
+
+def _slide_section(window: int, days: int) -> dict:
+    rng = np.random.default_rng(4)
+    parts = {d: rng.normal(size=256).astype(np.float32) for d in range(days)}
+    counts = {}
+    stores = {}
+    for mode in ("canonical", "amortized"):
+        store = HistogramStore(
+            num_buckets=32, retention=SlidingWindow(window), collapse=mode
+        )
+        it_mod.reset_pullup_stats()
+        t0 = time.perf_counter()
+        for d in range(days):
+            store.ingest(d, parts[d])
+        seconds = time.perf_counter() - t0
+        counts[mode] = {
+            "seconds": seconds,
+            **{k: v for k, v in it_mod.reset_pullup_stats().items()},
+        }
+        stores[mode] = store
+    # amortized answers still within their reported eps over the window
+    store = stores["amortized"]
+    lo, hi = store.ids()[0], store.ids()[-1]
+    h, eps = store.query(lo, hi, BETA)
+    pooled = np.sort(np.concatenate([parts[d] for d in range(lo, hi + 1)]))
+    err = float(
+        np.abs(np.asarray(h.sizes, np.float64) - pooled.size / BETA).max()
+    )
+    return {
+        "window": window,
+        "days": days,
+        "canonical": counts["canonical"],
+        "amortized": counts["amortized"],
+        "merge_work_reduction": (
+            counts["canonical"]["pair_merges"]
+            / max(1, counts["amortized"]["pair_merges"])
+        ),
+        "amortized_measured_err": err,
+        "amortized_eps_total": eps,
+        "amortized_eps_ok": err <= eps + 1e-3,
+    }
+
+
+def main(
+    emit,
+    *,
+    n_tenants: int = 256,
+    parts: int = PARTS,
+    n_per: int = N_PER,
+    reps: int = 5,
+    slide_window: int = 32,
+    slide_days: int = 200,
+    out_path: str = "BENCH_arena.json",
+) -> dict:
+    query = _query_section(n_tenants, parts, n_per, reps)
+    ingest = _ingest_section(n_tenants, parts, n_per)
+    slide = _slide_section(slide_window, slide_days)
+
+    # per-run history: carry the previous file's trajectory forward so the
+    # json records how the headline numbers move across commits
+    trajectory = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                trajectory = json.load(f).get("trajectory", [])
+        except (json.JSONDecodeError, OSError):
+            trajectory = []
+    trajectory.append(
+        {
+            "tenants": n_tenants,
+            "pack_speedup": query["pack"]["pack_speedup"],
+            "speedup_vs_per_tenant_pack": query["speedup_vs_per_tenant_pack"],
+            "ingest_dispatch_reduction": ingest["dispatch_reduction"],
+            "slide_merge_work_reduction": slide["merge_work_reduction"],
+        }
+    )
+
+    result = {
+        "schema": SCHEMA,
+        "tenants": n_tenants,
+        "partitions_per_tenant": parts,
+        "values_per_partition": n_per,
+        "T": T,
+        "beta": BETA,
+        "query": query,
+        "ingest": ingest,
+        "slide": slide,
+        # headline claims hoisted for the CI schema check
+        "pack_speedup": query["pack"]["pack_speedup"],
+        "speedup_vs_per_tenant_pack": query["speedup_vs_per_tenant_pack"],
+        "host_row_copies": query["shared_arena"]["host_row_copies"],
+        "merge_dispatches": query["shared_arena"]["dispatches_per_batch"],
+        "bit_identical": query["bit_identical"],
+        "trajectory": trajectory,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    Q = query["queries"]
+    emit(
+        "arena_per_tenant_pack_qps",
+        Q / query["per_tenant_pack"]["seconds"],
+        f"queries/s, {query['per_tenant_pack']['host_row_copies']} host row "
+        f"copies per cold refresh",
+    )
+    emit(
+        "arena_shared_gather_qps",
+        Q / query["shared_arena"]["seconds"],
+        f"queries/s, {query['shared_arena']['dispatches_per_batch']} "
+        f"dispatch, {query['shared_arena']['host_row_copies']} host row "
+        f"copies (bit_identical={query['bit_identical']})",
+    )
+    emit(
+        "arena_pack_speedup",
+        query["pack"]["pack_speedup"],
+        f"x pack stage at {n_tenants} tenants: host pack+transfer "
+        f"{query['pack']['host_pack_seconds']*1e3:.1f}ms -> gather "
+        f"{query['pack']['gather_pack_seconds']*1e3:.1f}ms, blocks "
+        f"bit-identical={query['pack']['blocks_bit_identical']} "
+        f"(target >= 1.5x at >= 256)",
+    )
+    emit(
+        "arena_speedup_vs_per_tenant_pack",
+        query["speedup_vs_per_tenant_pack"],
+        f"x end-to-end at {n_tenants} tenants (merge compute dominates "
+        f"and is identical in both layouts — see module docstring)",
+    )
+    emit(
+        "arena_ingest_dispatch_reduction",
+        ingest["dispatch_reduction"],
+        f"x: {ingest['per_tenant_pullups']['dispatches']} -> "
+        f"{ingest['shared_batched_pullups']['dispatches']} merge dispatches "
+        f"per drained {n_tenants}-tenant batch",
+    )
+    emit(
+        "arena_slide_merge_work_reduction",
+        slide["merge_work_reduction"],
+        f"x fewer merged pairs, amortized vs canonical collapse at "
+        f"W={slide_window} over {slide_days} days "
+        f"(eps_ok={slide['amortized_eps_ok']})",
+    )
+    emit("arena_json", 0.0, f"written to {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small sizes for CI: validates the pipeline + JSON schema only",
+    )
+    ap.add_argument("--out", default="BENCH_arena.json")
+    ap.add_argument("--tenants", type=int, default=256)
+    args = ap.parse_args()
+    kw = dict(out_path=args.out, n_tenants=args.tenants)
+    if args.smoke:
+        # small but not tiny: below ~64 tenants the per-query python
+        # bookkeeping (shared by both layouts) hides the pack difference
+        # and the speedup assert would be pure noise; best-of-5
+        # interleaved reps keep the CI timing floors off the noise floor
+        kw.update(
+            n_tenants=96, parts=32, n_per=64, reps=5,
+            slide_window=8, slide_days=40,
+        )
+    print("name,value,derived")
+    main(
+        lambda name, v, derived="": print(
+            f"{name},{v:.2f},{derived}", flush=True
+        ),
+        **kw,
+    )

@@ -14,6 +14,10 @@
   * retention         — 7-day sliding window vs unbounded store: steady-
                         state memory + query latency, bit-exactness vs a
                         flat rebuild (writes BENCH_retention.json)
+  * arena             — shared node-storage arena: zero-copy cross-tenant
+                        pack vs per-tenant host pack, batched pull-up
+                        dispatches, amortized window slides
+                        (writes BENCH_arena.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -21,6 +25,7 @@ import sys
 
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
 from benchmarks import ingest_throughput, interval_query, multi_tenant
+from benchmarks import arena as arena_bench
 from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
 
@@ -44,6 +49,7 @@ def main() -> None:
         "ingest": ingest_throughput.main,
         "tenant": multi_tenant.main,
         "retention": retention_bench.main,
+        "arena": arena_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

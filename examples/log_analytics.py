@@ -134,9 +134,11 @@ def main() -> None:
     print("\n== multi-tenant serving (one registry, many services) ==")
     services = [f"svc-{s:02d}" for s in range(24)]
     reg = TenantRegistry(num_buckets=256)
+    svc_days = {name: {} for name in services}
     for s, name in enumerate(services):
         for day in range(7):
-            reg.ingest_async(name, day, synth_day(rng, day)[: 8192 + 128 * s])
+            svc_days[name][day] = synth_day(rng, day)[: 8192 + 128 * s]
+            reg.ingest_async(name, day, svc_days[name][day])
     reg.flush()  # the explicit freshness barrier, as for a single store
     refresh = [(name, 0, 6) for name in services]
     reg.merge_dispatches = 0
@@ -156,6 +158,42 @@ def main() -> None:
         print(f"registry persisted+reloaded from one file "
               f"({os.path.getsize(path)/1e6:.1f} MB, answers identical: {same})")
     reg.close()
+
+    # scale the registry up and the remaining per-tenant cost is storage:
+    # every tree still owns its own little node arrays, so each dashboard
+    # refresh re-packs its merge stack host-side, row by row.  A shared
+    # NodeArena pools every service's nodes into one device-resident
+    # (n_slots, T) pool — the refresh's whole merge stack is then
+    # assembled with a single device gather (zero host row copies, the
+    # counter proves it), the drained ingest batches pull up ALL touched
+    # services with one merge dispatch per tree level, and save/load
+    # writes the pool once per registry instead of per tenant
+    print("\n== shared node-storage arena (one pool for every service) ==")
+    arena_reg = TenantRegistry(num_buckets=256, shared_arena=True)
+    for name in services:
+        arena_reg.ingest_many(name, svc_days[name])
+    arena_reg.merge_dispatches = 0
+    arena_reg.reset_host_row_copies()
+    answers2 = arena_reg.query_many(refresh, beta=64)
+    same = all(
+        np.array_equal(np.asarray(h0.sizes), np.asarray(h1.sizes))
+        for (h0, _), (h1, _) in zip(answers, answers2)
+    )
+    print(f"{len(services)} services in ONE arena "
+          f"({arena_reg.arena.allocated_floats():,} pooled floats, widths "
+          f"{arena_reg.arena.widths()}); refresh answered in "
+          f"{arena_reg.merge_dispatches} merge dispatch with "
+          f"{arena_reg.host_row_copies} host row copies "
+          f"(answers identical to per-tenant arrays: {same})")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "arena_registry.npz")
+        arena_reg.save(path)  # node pools written once, compacted
+        pool_keys = [
+            k for k in np.load(path).files if k.startswith("arena_")
+        ]
+        print(f"persisted: one shared pool ({pool_keys}) instead of "
+              f"{len(services)} per-tenant array dicts")
+    arena_reg.close()
 
     # the stream never ends, but memory must: a sliding window makes the
     # paper's "for a given time interval" first-class — each day ingested

@@ -20,6 +20,22 @@ nodes (the classic bottom-up cover), and a query merges only those:
 ingest is ``O(log W)`` pairwise merges; bulk (re)builds batch each level into
 a single vmapped jitted merge.
 
+Node storage — the shared arena
+-------------------------------
+Node summaries do not own their arrays: every node is a lightweight
+:class:`TreeNode` *handle* — a ``(arena, width, row)`` reference into a
+pooled :class:`~repro.core.arena.NodeArena` plane plus the error-bound
+bookkeeping — and its ``boundaries``/``sizes`` are views of the pooled
+rows.  One tree owns one arena by default; a multi-tenant registry can
+hand every same-config tenant a single shared arena
+(``TenantRegistry(shared_arena=True)``), which turns the cross-tenant
+merge-stack pack into a single device gather (:func:`pack_device_rows`)
+and lets a drained ingest batch pull up *all* touched trees with one
+merge dispatch per level (:func:`pull_up_trees`).  Rows are write-once
+and freed by handle garbage-collection, so an in-flight pack that holds
+node handles can never observe a reused row — see the arena module
+docstring for the slot-lifecycle contract.
+
 Composed error bound (paper Theorem 1, applied per level)
 ---------------------------------------------------------
 Theorem 1: merging ``k`` *exact* ``T``-bucket histograms of ``N`` total
@@ -56,7 +72,8 @@ instead of the uniform mode's ``W·T/2^l``).  Because a level-``l`` pair
 merge emits exactly as many buckets as its two children jointly carry
 boundaries, geometric nodes lose no resolution on the way up — the only
 per-level error is the left-collapse term ``2n/T_in`` of the level below.
-Exposed as ``HistogramStore(T_node="geometric")``.
+Exposed as ``HistogramStore(T_node="geometric")``.  In the arena layout
+each level resolution is its own plane — the per-level views of the pool.
 
 What is (and is not) bit-exact
 ------------------------------
@@ -81,10 +98,11 @@ gains a duplicate of ``A[p-1]``; for each cut target ``t_j``, either
 ``A[p-1] ≤ t_j`` (then ``cut_j`` shifts by exactly the one inserted slot and
 ``pos[cut_j]`` is unchanged) or ``A[p-1] > t_j`` (then ``cut_j`` indexes the
 untouched prefix).  First/last output boundaries are the global min/max,
-which zero-mass interior padding cannot displace.  Hence both the per-node
-``T`` padding and the per-query ``k`` padding (rows of zero-mass duplicates
-of a real boundary) are bit-exact, and the engine can pad node sets to the
-next power of two for a bounded jit-cache footprint.
+which zero-mass interior padding cannot displace.  Hence the per-node ``T``
+padding, the per-query ``k`` padding (rows of zero-mass duplicates of a real
+boundary — whether a repeated scalar or a full copy of a real row), and the
+arena's stored row padding are all bit-exact, and the engine can pad node
+sets to the next power of two for a bounded jit-cache footprint.
 
 Caching
 -------
@@ -96,13 +114,14 @@ memory without touching XLA at all.
 from __future__ import annotations
 
 import functools
+import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
 from typing import Sequence
 
 import jax
 import numpy as np
 
+from repro.core.arena import NodeArena
 from repro.core.histogram import Histogram, merge, next_pow2
 
 __all__ = [
@@ -111,23 +130,82 @@ __all__ = [
     "canonical_decomposition",
     "merge_stacks",
     "pack_node_rows",
+    "pack_device_rows",
+    "pull_up_trees",
     "selection_eps",
 ]
 
+COLLAPSE_MODES = ("canonical", "amortized")
 
-@dataclass(frozen=True)
+# Ingest-path merge observability (module-wide: the cross-tenant batched
+# pull-up issues ONE dispatch per level for a whole drained batch, so the
+# counter cannot live on any single tree).  Benchmarks read and reset these
+# to machine-check the "one dispatch per level across tenants" claim and
+# the amortized-collapse merge-work claim.
+_COUNTER_LOCK = threading.Lock()
+PULLUP_STATS = {"dispatches": 0, "pair_merges": 0}
+
+
+def reset_pullup_stats() -> dict[str, int]:
+    with _COUNTER_LOCK:
+        out = dict(PULLUP_STATS)
+        PULLUP_STATS["dispatches"] = 0
+        PULLUP_STATS["pair_merges"] = 0
+    return out
+
+
 class TreeNode:
-    """One tree node: a T-bucket summary plus its error-bound bookkeeping."""
+    """One tree node: an arena row handle plus error-bound bookkeeping.
 
-    boundaries: np.ndarray  # (T+1,) increasing
-    sizes: np.ndarray  # (T,)
-    n: float  # total summarized mass
-    eps: float  # accumulated Theorem-1 bound of this summary
-    leaves: int  # number of present leaf partitions beneath
+    ``boundaries``/``sizes`` are NumPy views of the pooled row (valid while
+    the handle is referenced — the arena frees the row when the last handle
+    is garbage-collected, which is what makes concurrent eviction safe
+    against in-flight packs).  ``src`` optionally remembers the caller's
+    original leaf arrays so the store's pointer-identity staleness scan
+    (``HistogramStore._sync_tree``) works without re-reading row data.
+    """
+
+    __slots__ = ("arena", "width", "row", "T", "n", "eps", "leaves", "src")
+
+    def __init__(
+        self,
+        arena: NodeArena,
+        width: int,
+        row: int,
+        T: int,
+        n: float,
+        eps: float,
+        leaves: int,
+        src: tuple | None = None,
+    ):
+        self.arena = arena
+        self.width = width
+        self.row = row
+        self.T = T
+        self.n = n
+        self.eps = eps
+        self.leaves = leaves
+        self.src = src
+
+    def __del__(self):  # pragma: no cover - exercised indirectly everywhere
+        arena = getattr(self, "arena", None)
+        if arena is not None:
+            try:
+                arena._dead.append((self.width, self.row))
+            except Exception:
+                pass  # interpreter shutdown
+
+    @property
+    def boundaries(self) -> np.ndarray:
+        return self.arena.view(self.width, self.row)[0][: self.T + 1]
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.arena.view(self.width, self.row)[1][: self.T]
 
     @property
     def num_buckets(self) -> int:
-        return self.sizes.shape[-1]
+        return self.T
 
     def to_histogram(self) -> Histogram:
         import jax.numpy as jnp
@@ -176,72 +254,296 @@ def merge_stacks(bounds: jax.Array, sizes: jax.Array, beta: int):
     return jax.vmap(lambda b, s: merge(Histogram(b, s), beta))(bounds, sizes)
 
 
-def _pad_summary(
-    b: np.ndarray, s: np.ndarray, T: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Pad a summary to ``T`` buckets with zero-mass copies of its last
-    boundary — the (bit-exact, see module docstring) merge_list padding."""
-    pad = T - s.shape[-1]
-    if pad == 0:
-        return b, s
+@jax.jit
+def _gather_rows(pool_b, pool_s, idx, mask):
+    """Device-side merge-stack assembly: ``(n_slots, W+1)`` pools + a
+    ``(Q, k_pad)`` slot index → ``(Q, k_pad, W+1)``/``(Q, k_pad, W)``.
+    Pad entries point at a real row with a zero mask, so they become the
+    bit-exact zero-mass-duplicate pad rows of the host pack."""
+    import jax.numpy as jnp
+
     return (
-        np.concatenate([b, np.repeat(b[-1:], pad)]),
-        np.concatenate([s, np.zeros((pad,), s.dtype)]),
+        jnp.take(pool_b, idx, axis=0),
+        jnp.take(pool_s, idx, axis=0) * mask[:, :, None],
     )
+
+
+def _scatter_rows(
+    bounds: np.ndarray,
+    sizes: np.ndarray,
+    entries: Sequence[tuple[tuple, TreeNode]],
+    T_pad: int,
+) -> None:
+    """Fill pre-zeroed ``(..., T_pad+1)``/``(..., T_pad)`` blocks from arena
+    rows with one fancy-index copy per (arena, plane) instead of one copy +
+    pad per node.  ``entries`` maps a block position (an index tuple) to a
+    node; rows stored narrower than ``T_pad`` get the zero-mass tail pad,
+    rows stored wider truncate (their tail is zero-mass padding already —
+    both directions are the bit-exact padding rule of the module docstring).
+    """
+    groups: dict[tuple[int, int], list[tuple[tuple, TreeNode]]] = {}
+    for pos, nd in entries:
+        groups.setdefault((id(nd.arena), nd.width), []).append((pos, nd))
+    for (_, width), items in groups.items():
+        arena = items[0][1].arena
+        bblock, sblock = arena.rows(width, [nd.row for _, nd in items])
+        pos_idx = tuple(
+            np.asarray([pos[d] for pos, _ in items])
+            for d in range(len(items[0][0]))
+        )
+        w = min(width, T_pad)
+        bounds[pos_idx + (slice(None, w + 1),)] = bblock[:, : w + 1]
+        if T_pad > width:
+            bounds[pos_idx + (slice(width + 1, None),)] = bblock[:, width:][
+                :, -1:
+            ]
+        sizes[pos_idx + (slice(None, w),)] = sblock[:, :w]
 
 
 def pack_node_rows(
     rows: Sequence[Sequence[TreeNode]],
+    *,
+    T_pad: int | None = None,
+    pad_row_copy: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Stack per-query node sets into one ``(Q, k_pad, T_pad)`` block.
 
-    ``k`` pads to the next power of two with rows of zero-mass copies of a
-    real boundary; ``T`` pads merge_list-style.  Both are bit-exact (module
+    ``k`` pads to the next power of two with rows of zero-mass duplicates of
+    a real boundary; ``T`` pads merge_list-style.  Both are bit-exact (module
     docstring).  Rows may come from *different* trees (the cross-tenant
-    registry path) — only the summary arrays matter.  An empty row packs to
-    an all-zero-mass constant row: its merge output is well-defined but
-    meaningless, so callers answering queries must filter empty selections
-    first (``HistogramStore.query_many(strict=False)`` returns the
-    documented ``(None, inf)`` placeholder instead of dispatching them).
+    registry path) — only the summary arrays matter.  The block is filled
+    with one stacked fancy-index copy per (arena, plane) rather than one
+    copy per node (the copies are still counted by the arenas'
+    ``host_row_copies`` — the device gather path exists precisely to make
+    that counter stay zero).
+
+    ``T_pad`` overrides the padded bucket width (default: the widest
+    selected node) — the registry's host path pads to the arena plane width
+    so its block is bit-identical to the device gather's.  ``pad_row_copy``
+    pads ``k`` with full zero-mass copies of the row's last real node
+    (matching the gather) instead of the scalar last-boundary fill; both
+    rules are bit-exact.
+
+    An empty row packs to an all-zero-mass constant row: its merge output
+    is well-defined but meaningless, so callers answering queries must
+    filter empty selections first (``HistogramStore.query_many``
+    (strict=False) returns the documented ``(None, inf)`` placeholder
+    instead of dispatching them).
     """
     k_max = max((len(r) for r in rows), default=0)
     if k_max == 0:
         raise ValueError("pack_node_rows: every node row is empty")
     k_pad = next_pow2(k_max)
-    T_pad = max(nd.num_buckets for r in rows for nd in r)
+    if T_pad is None:
+        T_pad = max(nd.num_buckets for r in rows for nd in r)
     Q = len(rows)
     bounds = np.zeros((Q, k_pad, T_pad + 1), np.float32)
     sizes = np.zeros((Q, k_pad, T_pad), np.float32)
+    entries = [
+        ((qi, ki), nd) for qi, r in enumerate(rows) for ki, nd in enumerate(r)
+    ]
+    _scatter_rows(bounds, sizes, entries, T_pad)
     for qi, r in enumerate(rows):
-        for ki, nd in enumerate(r):
-            b, s = _pad_summary(nd.boundaries, nd.sizes, T_pad)
-            bounds[qi, ki] = b
-            sizes[qi, ki] = s
-        if r:  # zero-mass pad rows at a real boundary value of this query
-            bounds[qi, len(r) :] = r[-1].boundaries[-1]
+        if r and len(r) < k_pad:
+            # zero-mass pad rows built from this query's last real row
+            # (already padded to T_pad in the block)
+            last = bounds[qi, len(r) - 1]
+            bounds[qi, len(r) :] = last if pad_row_copy else last[-1]
     return bounds, sizes
+
+
+def pack_device_rows(rows: Sequence[Sequence[TreeNode]]):
+    """Zero-host-copy merge-stack pack: one device gather over a shared
+    arena plane.
+
+    Requires every selected node to live in the same plane of the same
+    arena (true for any uniform-``T_node`` registry with a shared arena —
+    the default configuration); returns ``None`` otherwise so the caller
+    falls back to the host pack.  The produced block is bit-identical to
+    ``pack_node_rows(rows, T_pad=width, pad_row_copy=True)``: same rows,
+    same zero-mass pad rows, assembled device-side from the plane's
+    resident snapshot instead of copied row by row on the host.
+
+    The caller must keep holding the node handles until the merge output is
+    materialized — that reference is what pins the rows against concurrent
+    eviction + reuse (arena module docstring).
+    """
+    import jax.numpy as jnp
+
+    first: TreeNode | None = None
+    k_max = 0
+    for r in rows:
+        if len(r) > k_max:
+            k_max = len(r)
+        for nd in r:
+            if first is None:
+                first = nd
+            elif nd.arena is not first.arena or nd.width != first.width:
+                return None
+    if first is None:
+        raise ValueError("pack_device_rows: every node row is empty")
+    k_pad = next_pow2(k_max)
+    Q = len(rows)
+    idx = np.zeros((Q, k_pad), np.int32)
+    mask = np.zeros((Q, k_pad), np.float32)
+    for qi, r in enumerate(rows):
+        k = len(r)
+        if k:
+            idx[qi, :k] = [nd.row for nd in r]
+            idx[qi, k:] = r[-1].row
+            mask[qi, :k] = 1.0
+    pool_b, pool_s = first.arena.device(first.width)
+    return _gather_rows(pool_b, pool_s, jnp.asarray(idx), jnp.asarray(mask))
 
 
 def selection_eps(sel: Sequence[TreeNode]) -> float:
     """Composed ``ε_total`` of merging the canonical nodes ``sel`` (module
-    docstring): accumulated per-node bounds + one more Theorem-1 level."""
-    n = sum(nd.n for nd in sel)
-    T_in = min(nd.num_buckets for nd in sel)
-    return float(
-        sum(nd.eps for nd in sel) + 2.0 * n / T_in + 2.0 * len(sel)
-    )
+    docstring): accumulated per-node bounds + one more Theorem-1 level.
+    One fused pass — this runs per query on the serving path."""
+    n = 0.0
+    eps = 0.0
+    T_in = sel[0].T
+    for nd in sel:
+        n += nd.n
+        eps += nd.eps
+        if nd.T < T_in:
+            T_in = nd.T
+    return float(eps + 2.0 * n / T_in + 2.0 * len(sel))
+
+
+def _merge_pairs_multi(
+    entries: Sequence[tuple["IntervalTree", int, Sequence[int]]]
+) -> None:
+    """Merge sibling pairs across one or many trees with one batched
+    dispatch per output resolution, writing the parent nodes (with their
+    composed-ε bookkeeping) straight into the trees' arenas.
+
+    ``entries`` holds ``(tree, level, pair_indices)`` jobs; same-config
+    trees at the same level share an output resolution, so a whole drained
+    cross-tenant ingest batch costs **one merge dispatch per level** — not
+    one per tenant per level.  Node summaries are a pure function of the
+    child summaries, so batch composition cannot change a single output
+    bit (the determinism fact the retention tests pin).
+    """
+    jobs: dict[int, list] = {}
+    for tree, level, pairs in entries:
+        T_out = tree.node_T(level)
+        for i in pairs:
+            c0 = tree.nodes[(level - 1, 2 * i)]
+            c1 = tree.nodes[(level - 1, 2 * i + 1)]
+            jobs.setdefault(T_out, []).append((tree, level, i, c0, c1))
+    for T_out, work in jobs.items():
+        Q = len(work)
+        Q_pad = next_pow2(Q)
+        T_in = max(
+            max(c0.num_buckets, c1.num_buckets) for _, _, _, c0, c1 in work
+        )
+        bs = np.zeros((Q_pad, 2, T_in + 1), np.float32)
+        ss = np.zeros((Q_pad, 2, T_in), np.float32)
+        scatter = []
+        for q, (_, _, _, c0, c1) in enumerate(work):
+            scatter.append(((q, 0), c0))
+            scatter.append(((q, 1), c1))
+        for q in range(Q, Q_pad):  # pad the batch with the last real pair
+            scatter.append(((q, 0), work[-1][3]))
+            scatter.append(((q, 1), work[-1][4]))
+        _scatter_rows(bs, ss, scatter, T_in)
+        with _COUNTER_LOCK:
+            PULLUP_STATS["dispatches"] += 1
+            PULLUP_STATS["pair_merges"] += Q
+        bo, so = merge_stacks(bs, ss, T_out)
+        bo, so = np.asarray(bo), np.asarray(so)
+        # write merge outputs straight into arena rows: one block alloc per
+        # destination arena (a shared arena takes one for ALL tenants)
+        by_arena: dict[int, list[int]] = {}
+        for q, (tree, _, _, _, _) in enumerate(work):
+            by_arena.setdefault(id(tree.arena), []).append(q)
+        for qs in by_arena.values():
+            arena = work[qs[0]][0].arena
+            rows = arena.alloc_block(T_out, bo[qs], so[qs])
+            for q, row in zip(qs, rows):
+                tree, level, i, c0, c1 = work[q]
+                n = c0.n + c1.n
+                t_in = min(c0.num_buckets, c1.num_buckets)
+                tree.nodes[(level, i)] = TreeNode(
+                    arena,
+                    T_out,
+                    row,
+                    T_out,
+                    n,
+                    c0.eps + c1.eps + 2.0 * n / t_in + 4.0,
+                    c0.leaves + c1.leaves,
+                )
+
+
+def pull_up_trees(work: Sequence[tuple["IntervalTree", set[int]]]) -> None:
+    """Refresh the ancestor paths of dirty leaf slots across one or many
+    trees, level by level, batching every tree's pair merges at a level
+    into one dispatch (:func:`_merge_pairs_multi`).
+
+    The single-tree case is :meth:`IntervalTree._pull_up_many`; the
+    multi-tree case is the registry's cross-tenant batched apply (all
+    touched stores' locks held by the caller).  Does NOT bump versions —
+    callers invalidate once per batch.
+    """
+    states = [[tree, set(dirty)] for tree, dirty in work if dirty]
+    if not states:
+        return
+    for level in range(1, max(tree.levels for tree, _ in states) + 1):
+        entries = []
+        for state in states:
+            tree, parents = state
+            if level > tree.levels:
+                continue
+            parents = {s >> 1 for s in parents}
+            state[1] = parents
+            pairs = [
+                i
+                for i in sorted(parents)
+                if (level - 1, 2 * i) in tree.nodes
+                and (level - 1, 2 * i + 1) in tree.nodes
+            ]
+            pair_set = set(pairs)
+            for i in sorted(parents):
+                if i not in pair_set:
+                    tree._update(level, i)
+            if pairs:
+                entries.append((tree, level, pairs))
+        if entries:
+            _merge_pairs_multi(entries)
 
 
 class IntervalTree:
     """Power-of-two segment tree of pre-merged partition summaries."""
 
     def __init__(
-        self, T_node: int, cache_size: int = 128, *, geometric: bool = False
+        self,
+        T_node: int,
+        cache_size: int = 128,
+        *,
+        geometric: bool = False,
+        arena: NodeArena | None = None,
+        collapse: str = "canonical",
     ):
         if T_node < 1:
             raise ValueError("T_node must be >= 1")
+        if collapse not in COLLAPSE_MODES:
+            raise ValueError(
+                f"unknown collapse mode: {collapse!r} (use one of "
+                f"{COLLAPSE_MODES})"
+            )
         self.T_node = int(T_node)
         self.geometric = bool(geometric)
+        # pooled node storage: own arena by default, or a registry-shared
+        # one (core/arena.py) so same-config trees pack with one gather
+        self.arena = arena if arena is not None else NodeArena()
+        # eviction collapse policy: "canonical" keeps the post-eviction
+        # tree bit-identical to a fresh build over the survivors (O(W)
+        # merge work per window slide); "amortized" defers the re-root
+        # until the dead slot prefix exceeds half the capacity — O(log W)
+        # amortized merge work per ingest, answers still within eps_total
+        # but no longer bit-equal to a fresh rebuild (see _collapse)
+        self.collapse_mode = collapse
         self.levels = 0  # capacity = 2**levels leaf slots
         self.base: int | None = None  # partition id of slot 0
         self.nodes: dict[tuple[int, int], TreeNode] = {}
@@ -271,22 +573,25 @@ class IntervalTree:
         return sum(1 for (lvl, _) in self.nodes if lvl == 0)
 
     def node_floats(self) -> int:
-        """Total floats held by node summaries, counting shared arrays once.
+        """Total logical floats held by node summaries, counting shared
+        rows once.
 
-        Single-child internal nodes *share* their child's arrays (and tree
-        leaves share the caller's stored-summary rows), so the footprint is
-        deduplicated by array identity — this is the store's memory figure
-        that :class:`~repro.core.retention.MemoryBudget` and the registry's
-        cross-tenant budget act on.
+        Single-child internal nodes *share* their child's arena row, so
+        the footprint is deduplicated by row identity — this is the
+        store's memory figure that
+        :class:`~repro.core.retention.MemoryBudget` and the registry's
+        cross-tenant budget act on (logical, un-padded widths, so budget
+        calibrations are layout-independent; the *resident* pool size is
+        ``arena.allocated_floats()``/``capacity_floats()``).
         """
-        seen: set[int] = set()
+        seen: set[tuple[int, int]] = set()
         total = 0
         for nd in self.nodes.values():
-            key = id(nd.boundaries)
+            key = (nd.width, nd.row)
             if key in seen:
                 continue
             seen.add(key)
-            total += int(nd.boundaries.size) + int(nd.sizes.size)
+            total += 2 * nd.T + 1
         return total
 
     def _invalidate(self) -> None:
@@ -294,6 +599,28 @@ class IntervalTree:
         self._cache.clear()
 
     # ---------------------------------------------------------- maintenance
+    def _new_leaf(
+        self, b: np.ndarray, s: np.ndarray, src: tuple | None = None
+    ) -> TreeNode:
+        """Copy one leaf summary into the arena (plane = its own logical
+        width) and return its handle, remembering the source arrays for
+        the store's pointer-identity staleness scan.  ``src`` carries a
+        pre-existing identity token through rebuilds — losing it would
+        make the first post-rebuild query mark every leaf stale and
+        rebuild the whole tree a second time."""
+        T = s.shape[-1]
+        row = self.arena.alloc(T, b, s)
+        return TreeNode(
+            self.arena,
+            T,
+            row,
+            T,
+            float(s.sum()),
+            0.0,
+            1,
+            src=src if src is not None else (b, s),
+        )
+
     def set_leaf(self, partition_id: int, boundaries, sizes) -> None:
         """Insert/replace one leaf and refresh its ``O(log W)`` ancestors."""
         self.set_leaves({int(partition_id): (boundaries, sizes)})
@@ -312,19 +639,32 @@ class IntervalTree:
         """
         if not leaves:
             return
+        dirty = self._write_leaves(leaves)
+        if dirty is None:  # base-shift path rebuilt (and invalidated)
+            return
+        self._pull_up_many(dirty)
+        self._invalidate()
+
+    def _write_leaves(
+        self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]
+    ) -> set[int] | None:
+        """Write leaf rows + grow capacity; return the dirty slot set for
+        the caller's pull-up (the registry batches pull-ups across trees),
+        or ``None`` when a below-base id forced a full rebuild here."""
         pids = sorted(int(p) for p in leaves)
         if self.base is None:
             self.base = pids[0]
         if pids[0] < self.base:
-            # a partition id below base arrived: shift every slot (rare)
+            # a partition id below base arrived: shift every slot (rare);
+            # surviving leaves keep their src identity through the rebuild
             merged = {
-                self.base + slot: (nd.boundaries, nd.sizes)
+                self.base + slot: (nd.boundaries, nd.sizes, nd.src)
                 for (lvl, slot), nd in self.nodes.items()
                 if lvl == 0
             }
             merged.update({int(p): v for p, v in leaves.items()})
             self.rebuild(merged)
-            return
+            return None
         grew = False
         while pids[-1] - self.base >= self.capacity:
             self.levels += 1
@@ -334,22 +674,22 @@ class IntervalTree:
             slot = pid - self.base
             b = np.asarray(leaves[pid][0], np.float32)
             s = np.asarray(leaves[pid][1], np.float32)
-            self.nodes[(0, slot)] = TreeNode(b, s, float(s.sum()), 0.0, 1)
+            self.nodes[(0, slot)] = self._new_leaf(b, s)
             dirty.add(slot)
         if grew:
             # growth re-roots: the old root gains new ancestors on slot 0's
             # path (which the dirty-slot paths only share from some level up)
             dirty.add(0)
-        self._pull_up_many(dirty)
-        self._invalidate()
+        return dirty
 
     def adopt_leaf_arrays(self, partition_id: int, boundaries, sizes) -> bool:
-        """Re-point a leaf at equal-valued external arrays without recompute.
+        """Re-point a leaf's staleness token at equal-valued external arrays
+        without recompute.
 
-        Used after :meth:`from_state` so tree leaves share storage with the
-        caller's summary rows — pointer-identity staleness checks then pass
-        without re-merging anything.  Returns False (no-op) when the leaf is
-        absent or the arrays don't match the stored values.
+        Used after :meth:`from_state` so tree leaves are identity-linked to
+        the caller's summary rows — the pointer-identity staleness checks
+        then pass without re-merging anything.  Returns False (no-op) when
+        the leaf is absent or the arrays don't match the stored values.
         """
         if self.base is None:
             return False
@@ -364,9 +704,7 @@ class IntervalTree:
             or not np.array_equal(sizes, nd.sizes)
         ):
             return False
-        self.nodes[key] = TreeNode(
-            boundaries, sizes, nd.n, nd.eps, nd.leaves
-        )
+        nd.src = (boundaries, sizes)
         return True
 
     def _pull_up_many(self, dirty: set[int]) -> None:
@@ -374,21 +712,7 @@ class IntervalTree:
         level by level, batching each level's pair merges into one vmapped
         jitted dispatch (padded to a power-of-two batch for a bounded
         jit-cache footprint)."""
-        parents = set(dirty)
-        for level in range(1, self.levels + 1):
-            parents = {s >> 1 for s in parents}
-            pairs = [
-                i
-                for i in sorted(parents)
-                if (level - 1, 2 * i) in self.nodes
-                and (level - 1, 2 * i + 1) in self.nodes
-            ]
-            pair_set = set(pairs)
-            for i in sorted(parents):
-                if i not in pair_set:
-                    self._update(level, i)
-            if pairs:
-                self._merge_level(level, pairs)
+        pull_up_trees([(self, dirty)])
 
     def _update(self, level: int, idx: int) -> None:
         c0 = self.nodes.get((level - 1, 2 * idx))
@@ -397,52 +721,17 @@ class IntervalTree:
         if c0 is None and c1 is None:
             self.nodes.pop(key, None)
         elif c0 is None or c1 is None:
-            # single child: share its summary — no merge, no added error
+            # single child: share its summary (same handle, same arena
+            # row) — no merge, no added error
             self.nodes[key] = c0 if c1 is None else c1
         else:
             self._merge_level(level, [idx])
 
     def _merge_level(self, level: int, pairs: Sequence[int]) -> None:
         """Merge the sibling pairs under ``(level, i) for i in pairs`` with a
-        single batched dispatch, writing the parent nodes (with their
-        composed-ε bookkeeping)."""
-        kids = [
-            (self.nodes[(level - 1, 2 * i)], self.nodes[(level - 1, 2 * i + 1)])
-            for i in pairs
-        ]
-        Q = len(kids)
-        Q_pad = next_pow2(Q)
-        padded_kids = list(kids) + [kids[-1]] * (Q_pad - Q)
-        T_max = max(max(a.num_buckets, b.num_buckets) for a, b in kids)
-        bs = np.stack(
-            [
-                np.stack(
-                    [_pad_summary(c.boundaries, c.sizes, T_max)[0] for c in pair]
-                )
-                for pair in padded_kids
-            ]
-        )
-        ss = np.stack(
-            [
-                np.stack(
-                    [_pad_summary(c.boundaries, c.sizes, T_max)[1] for c in pair]
-                )
-                for pair in padded_kids
-            ]
-        )
-        bo, so = merge_stacks(bs, ss, self.node_T(level))
-        bo, so = np.asarray(bo), np.asarray(so)
-        for row, i in enumerate(pairs):
-            c0, c1 = kids[row]
-            n = c0.n + c1.n
-            T_in = min(c0.num_buckets, c1.num_buckets)
-            self.nodes[(level, i)] = TreeNode(
-                boundaries=bo[row],
-                sizes=so[row],
-                n=n,
-                eps=c0.eps + c1.eps + 2.0 * n / T_in + 4.0,
-                leaves=c0.leaves + c1.leaves,
-            )
+        single batched dispatch — the one-tree case of
+        :func:`_merge_pairs_multi`."""
+        _merge_pairs_multi([(self, level, pairs)])
 
     def evict_leaves(self, partition_ids) -> int:
         """Remove leaf summaries — :meth:`set_leaf`'s pull-up in reverse.
@@ -455,6 +744,8 @@ class IntervalTree:
         so the root re-anchors at the lowest surviving leaf (see
         :meth:`_collapse`).  One version bump per batch — every LRU-cached
         answer keyed on the old version can never serve evicted data.
+        Dropped rows return to the arena free list as soon as their last
+        handle dies (never while an in-flight pack still holds one).
 
         Returns the number of leaves actually removed (absent ids are
         ignored, so a policy may re-list already-evicted partitions).
@@ -487,7 +778,7 @@ class IntervalTree:
           ``(L, j)`` starting exactly at the lowest surviving slot, that
           subtree becomes the root by re-keying its nodes (zero merges;
           the single-child chain above it is dropped, freeing rows whose
-          arrays were shared anyway);
+          storage was shared anyway);
         * **rebase-rebuild** — when the survivors straddle an alignment
           boundary, they are re-based to slot 0 with one level-batched
           :meth:`rebuild`.  Under geometric ``T_node`` this is what
@@ -509,9 +800,21 @@ class IntervalTree:
         re-merges O(window) pairs per slide.  The level batching keeps it
         at O(log W) *dispatches* (the dominant cost in the serving
         regime, per-dispatch overhead being ~50-70 µs against tiny
-        per-pair merges); a future opt-in mode could defer collapse
-        behind a dead-prefix slack for amortized O(log W) merge work at
-        the price of rebuild bit-equality (see ROADMAP).
+        per-pair merges).
+
+        **Amortized mode** (``collapse="amortized"``): the re-root is
+        deferred while the dead slot prefix is smaller than half the
+        capacity — eviction then costs only the reverse pull-up of the
+        evicted paths (O(log W) merges), and the O(W) re-root runs once
+        per ~W/2 evictions, i.e. O(log W) *amortized* merge work per
+        ingest for a high-frequency sliding window.  The trade, stated in
+        the retention contract's terms: between re-roots the tree is
+        deeper than a fresh build over the survivors (up to one extra
+        level, plus the uncollapsed dead prefix), so answers are NOT
+        bit-equal to a fresh rebuild — they remain exactly correct
+        per-node merges whose reported ``eps_total`` still dominates the
+        measured error (property-tested), just composed over a slightly
+        deeper selection.
         """
         slots = sorted(s for (lvl, s) in self.nodes if lvl == 0)
         if not slots:
@@ -520,6 +823,11 @@ class IntervalTree:
             self.levels = 0
             return
         lo, hi = slots[0], slots[-1]
+        if self.collapse_mode == "amortized" and lo < (self.capacity >> 1):
+            # dead prefix still below the slack threshold: defer the
+            # re-root, just refresh the evicted slots' ancestor paths
+            self._pull_up_many(dirty)
+            return
         L = self.levels
         while L > 0 and (lo >> (L - 1)) == (hi >> (L - 1)):
             L -= 1
@@ -541,23 +849,32 @@ class IntervalTree:
         else:
             # straddling survivors: one level-batched rebase-rebuild from
             # the (untouched) leaf rows — every ancestor is recomputed, so
-            # the reverse pull-up would be wasted dispatches here
+            # the reverse pull-up would be wasted dispatches here.  The
+            # leaves carry their src identity so the store's staleness
+            # scan does not re-rebuild everything on the next query
             leaves = {
-                self.base + s: (nd.boundaries, nd.sizes)
+                self.base + s: (nd.boundaries, nd.sizes, nd.src)
                 for (lvl, s), nd in self.nodes.items()
                 if lvl == 0
             }
             self.base = None
             self.rebuild(leaves)
 
-    def rebuild(self, leaves: dict[int, tuple[np.ndarray, np.ndarray]]) -> None:
-        """Bulk (re)build from ``{partition_id: (boundaries, sizes)}``.
+    def rebuild(self, leaves: dict[int, tuple]) -> None:
+        """Bulk (re)build from ``{partition_id: (boundaries, sizes)}``
+        (an optional third tuple element carries a leaf's existing ``src``
+        identity token through the rebuild — the collapse/rebase paths
+        use it so post-rebuild staleness scans still pass).
 
         Level-by-level: all sibling pairs of a level go through *one*
         vmapped jitted merge, so a ``W``-partition build costs ``log2 W``
         XLA dispatches instead of ``W·log2 W`` (the incremental path's
         cost when used for bulk loads).
         """
+        # callers may pass views of the current nodes' rows (the collapse
+        # rebase path does) — keep the old handles alive until the new
+        # rows are written, so the arena cannot reuse their slots mid-copy
+        old_nodes = self.nodes  # noqa: F841  (lifetime anchor)
         self.nodes = {}
         self._invalidate()
         if not leaves:
@@ -570,11 +887,11 @@ class IntervalTree:
         span = pids[-1] - self.base + 1
         self.levels = (span - 1).bit_length() if span > 1 else 0
         for pid in pids:
-            b = np.asarray(leaves[pid][0], np.float32)
-            s = np.asarray(leaves[pid][1], np.float32)
-            self.nodes[(0, pid - self.base)] = TreeNode(
-                b, s, float(s.sum()), 0.0, 1
-            )
+            val = leaves[pid]
+            b = np.asarray(val[0], np.float32)
+            s = np.asarray(val[1], np.float32)
+            src = val[2] if len(val) > 2 else None
+            self.nodes[(0, pid - self.base)] = self._new_leaf(b, s, src)
         self._pull_up_many({pid - self.base for pid in pids})
 
     # -------------------------------------------------------------- queries
@@ -684,40 +1001,110 @@ class IntervalTree:
         return [answers[key] for key in keys]
 
     # ---------------------------------------------------------- persistence
-    def state(self) -> tuple[dict, dict[str, np.ndarray]]:
-        """(json-able meta, arrays) for npz persistence of the tree nodes."""
+    def state(
+        self, slot_map: dict[tuple[int, int], int] | None = None
+    ) -> tuple[dict, dict[str, np.ndarray]]:
+        """(json-able meta, arrays) for npz persistence of the tree nodes.
+
+        The arena layout persists the *pools*, compacted: ``ab_{width}`` /
+        ``as_{width}`` blocks holding only the live (referenced) rows, with
+        per-node ``[lvl, idx, n, eps, leaves, T, width, slot]`` records
+        pointing into them — free-list fragmentation never reaches disk,
+        and shared rows are written once.  With ``slot_map`` given (the
+        registry's shared-arena save), the caller already exported the
+        pools for *all* tenants at once and this tree emits only its node
+        records against that map.
+        """
+        own_export = slot_map is None
+        arrays: dict[str, np.ndarray] = {}
+        if own_export:
+            arrays, slot_map = self.arena.export(
+                (nd.width, nd.row) for nd in self.nodes.values()
+            )
         meta = {
             "T_node": self.T_node,
             "geometric": self.geometric,
+            "layout": "arena/v1",
+            "shared_pool": not own_export,
             "base": self.base,
             "levels": self.levels,
             "nodes": [
-                [lvl, idx, nd.n, nd.eps, nd.leaves]
+                [
+                    lvl,
+                    idx,
+                    nd.n,
+                    nd.eps,
+                    nd.leaves,
+                    nd.T,
+                    nd.width,
+                    slot_map[(nd.width, nd.row)],
+                ]
                 for (lvl, idx), nd in sorted(self.nodes.items())
             ],
         }
-        arrays = {}
-        for (lvl, idx), nd in self.nodes.items():
-            arrays[f"tb_{lvl}_{idx}"] = nd.boundaries
-            arrays[f"ts_{lvl}_{idx}"] = nd.sizes
         return meta, arrays
 
     @classmethod
-    def from_state(cls, meta: dict, arrays, cache_size: int = 128):
+    def from_state(
+        cls,
+        meta: dict,
+        arrays,
+        cache_size: int = 128,
+        *,
+        arena: NodeArena | None = None,
+        collapse: str = "canonical",
+    ):
         tree = cls(
             int(meta["T_node"]),
             cache_size=cache_size,
             geometric=bool(meta.get("geometric", False)),
+            arena=arena,
+            collapse=collapse,
         )
         tree.base = None if meta["base"] is None else int(meta["base"])
         tree.levels = int(meta["levels"])
-        for lvl, idx, n, eps, leaves in meta["nodes"]:
-            lvl, idx = int(lvl), int(idx)
-            tree.nodes[(lvl, idx)] = TreeNode(
-                boundaries=np.asarray(arrays[f"tb_{lvl}_{idx}"], np.float32),
-                sizes=np.asarray(arrays[f"ts_{lvl}_{idx}"], np.float32),
-                n=float(n),
-                eps=float(eps),
-                leaves=int(leaves),
+        if meta.get("layout") != "arena/v1":
+            # pre-arena summary files: one tb_/ts_ array pair per node
+            for lvl, idx, n, eps, leaves in meta["nodes"]:
+                lvl, idx = int(lvl), int(idx)
+                b = np.asarray(arrays[f"tb_{lvl}_{idx}"], np.float32)
+                s = np.asarray(arrays[f"ts_{lvl}_{idx}"], np.float32)
+                T = s.shape[-1]
+                row = tree.arena.alloc(T, b, s)
+                tree.nodes[(lvl, idx)] = TreeNode(
+                    tree.arena, T, row, T, float(n), float(eps), int(leaves)
+                )
+            return tree
+        pools: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        handles: dict[tuple[int, int], TreeNode] = {}
+        for lvl, idx, n, eps, leaves, T, width, slot in meta["nodes"]:
+            lvl, idx, T, width, slot = (
+                int(lvl),
+                int(idx),
+                int(T),
+                int(width),
+                int(slot),
             )
+            nd = handles.get((width, slot))
+            if nd is None:
+                if width not in pools:
+                    pools[width] = (
+                        np.asarray(arrays[f"ab_{width}"], np.float32),
+                        np.asarray(arrays[f"as_{width}"], np.float32),
+                    )
+                pb, ps = pools[width]
+                # exported rows are width-padded; alloc re-pads the logical
+                # prefix identically, so the live row is bit-identical
+                row = tree.arena.alloc(width, pb[slot, : T + 1], ps[slot, :T])
+                nd = TreeNode(
+                    tree.arena,
+                    width,
+                    row,
+                    T,
+                    float(n),
+                    float(eps),
+                    int(leaves),
+                )
+                handles[(width, slot)] = nd
+            tree.nodes[(lvl, idx)] = nd
         return tree

@@ -36,6 +36,18 @@ the partition ids to evict and never touches the store.  The sweeper
 nothing, so ``MemoryBudget`` may converge over a few estimate-driven passes
 while TTL/window converge in one.
 
+Memory metering and collapse modes
+----------------------------------
+``StoreStats.node_floats`` (what :class:`MemoryBudget` meters) counts
+*logical* summary floats per unique arena row — layout-independent, so
+budget calibrations survive the pooled-arena storage (core/arena.py); the
+resident pool size itself is ``NodeArena.allocated_floats`` /
+``capacity_floats``.  Under ``HistogramStore(collapse="amortized")`` the
+evicted dead prefix lingers until it exceeds half the tree capacity, so
+the footprint rides up to one extra tree level above the canonical mode's
+before the deferred re-root reclaims it — the sweeper's convergence loop
+is unaffected because ``victims`` only ever names present partitions.
+
 Where sweeps run
 ----------------
 Synchronous ingest sweeps inline after each apply; asynchronous ingest runs

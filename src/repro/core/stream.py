@@ -102,7 +102,8 @@ from repro.core.histogram import (
     quantile,
     theoretical_eps_max,
 )
-from repro.core.interval_tree import IntervalTree
+from repro.core.arena import NodeArena
+from repro.core.interval_tree import COLLAPSE_MODES, IntervalTree
 from repro.core.retention import RetentionPolicy, StoreStats, policy_from_spec
 from repro.core.workers import IngestPool, PoolStateView
 
@@ -151,6 +152,54 @@ class _PrefixedArrays:
     def __getitem__(self, key: str):
         return self._data[self._prefix + key]
 
+
+class _VersionedDict(dict):
+    """``summaries`` dict that counts its own mutations.
+
+    The documented summary-loss idiom mutates the dict directly
+    (``del store.summaries[pid]``, row replacement), which is why every
+    query used to re-scan its whole interval for tree/dict desync.  The
+    mutation counter turns that into an O(1) staleness token: the scan
+    (and the sorted-ids cache below) re-runs only when the counter moved
+    since it last verified — zero per-query cost on the hot serving path.
+    Mutating through ``dict.__setitem__`` directly on the instance is the
+    one way around the counter, and is out of contract.
+    """
+
+    __slots__ = ("mutations",)
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.mutations = 0
+
+    def __setitem__(self, key, value):
+        self.mutations += 1
+        super().__setitem__(key, value)
+
+    def __delitem__(self, key):
+        self.mutations += 1
+        super().__delitem__(key)
+
+    def update(self, *a, **k):
+        self.mutations += 1
+        super().update(*a, **k)
+
+    def pop(self, *a):
+        self.mutations += 1
+        return super().pop(*a)
+
+    def popitem(self):
+        self.mutations += 1
+        return super().popitem()
+
+    def clear(self):
+        self.mutations += 1
+        super().clear()
+
+    def setdefault(self, key, default=None):
+        self.mutations += 1
+        return super().setdefault(key, default)
+
 # Max rows per batched-summarizer dispatch.  Chunking the batch axis keeps
 # the power-of-two row padding waste ≤ ~12 % on large groups (padding 579
 # rows straight to 1024 would nearly double the sort work) while the set of
@@ -190,11 +239,23 @@ class HistogramStore(PoolStateView):
     queue_size: int = 1024  # bound of the pending-partition queue
     # retention policy (core/retention.py): None → append-only (unbounded)
     retention: RetentionPolicy | None = None
+    # eviction collapse policy: "canonical" keeps post-eviction trees
+    # bit-identical to a fresh build over the survivors; "amortized" defers
+    # the re-root behind a dead-prefix slack — O(log W) amortized merge
+    # work per ingest for high-frequency sliding windows, answers still
+    # within eps_total (IntervalTree._collapse documents the trade)
+    collapse: str = "canonical"
+    # pooled node storage (core/arena.py): None → the tree owns its own
+    # arena; a TenantRegistry(shared_arena=True) passes one shared arena
+    # to every tenant so cross-tenant packs become a single device gather
+    arena: NodeArena | None = None
     _tree: IntervalTree = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
         if isinstance(self.T_node, str) and self.T_node != "geometric":
             raise ValueError(f"unknown T_node mode: {self.T_node!r}")
+        if self.collapse not in COLLAPSE_MODES:
+            raise ValueError(f"unknown collapse mode: {self.collapse!r}")
         geometric = self.T_node == "geometric"
         self._tree = IntervalTree(
             self.num_buckets
@@ -202,11 +263,19 @@ class HistogramStore(PoolStateView):
             else self.T_node,
             cache_size=self.cache_size,
             geometric=geometric,
+            arena=self.arena,
+            collapse=self.collapse,
         )
         # distinct (k_pad, n_pad, T) summarizer dispatch shapes seen so far —
         # observability for the compile-stability tests and benchmarks
         self.summarize_shapes: set[tuple[int, int, int]] = set()
         self._lock = threading.RLock()  # guards summaries + tree + queries
+        # mutation-counted dict + staleness tokens: queries verify
+        # tree/dict sync once per (dict mutation, tree version) state
+        # instead of re-scanning their interval every time (_sync_tree)
+        self.summaries = _VersionedDict(self.summaries)
+        self._sync_token: tuple[int, int] | None = None
+        self._ids_cache: tuple[int, np.ndarray] | None = None
         # highest partition id ever ingested — the retention watermark
         # (persisted; survives the eviction of the partitions beneath it)
         self._watermark: int | None = (
@@ -379,6 +448,24 @@ class HistogramStore(PoolStateView):
                 {pid: (s.boundaries, s.sizes) for pid, s in summs.items()}
             )
 
+    def _apply_deferred(self, summs: dict[int, StoredSummary]):
+        """:meth:`_apply` minus the pull-up and version bump: write the
+        summaries + leaf rows now, return ``(tree, dirty_slots)`` so the
+        registry's shared-arena batched apply can pull up *all* touched
+        trees with one merge dispatch per level and invalidate each once.
+        Caller holds ``_lock`` (and keeps holding it through the pull-up);
+        ``dirty_slots`` is ``None`` when a below-base id forced an inline
+        rebuild (that path already left the tree consistent).
+        """
+        self.summaries.update(summs)
+        newest = max(summs)
+        if self._watermark is None or newest > self._watermark:
+            self._watermark = newest
+        dirty = self._tree._write_leaves(
+            {pid: (s.boundaries, s.sizes) for pid, s in summs.items()}
+        )
+        return self._tree, dirty
+
     def rebuild_tree(self) -> None:
         with self._lock:
             self._tree.rebuild(
@@ -503,36 +590,69 @@ class HistogramStore(PoolStateView):
         self._pool.close()
         self.flush()
 
+    def _present_ids(self, lo: int, hi: int) -> list[int]:
+        """Present partition ids in ``[lo, hi]`` — O(log n + matches) via a
+        sorted-ids cache keyed on the dict mutation counter, instead of an
+        O(interval) membership scan per query (callers hold ``_lock``)."""
+        summ = self.summaries
+        if not isinstance(summ, _VersionedDict):  # summaries dict replaced
+            return [i for i in range(lo, hi + 1) if i in summ]
+        cache = self._ids_cache
+        if cache is None or cache[0] != summ.mutations:
+            arr = np.fromiter(summ.keys(), np.int64, len(summ))
+            arr.sort()
+            cache = (summ.mutations, arr)
+            self._ids_cache = cache
+        arr = cache[1]
+        a = int(np.searchsorted(arr, lo, side="left"))
+        b = int(np.searchsorted(arr, hi, side="right"))
+        return arr[a:b].tolist()
+
     def _sync_tree(self, ids: list[int], lo: int, hi: int) -> list[tuple[int, int]]:
         """Re-sync after direct ``summaries`` dict mutation (the documented
         summary-loss idiom ``del store.summaries[pid]``, or outright row
-        replacement).  Every tree leaf shares its arrays with the stored
-        summary, so staleness detection is an O(interval) pointer-identity
-        scan — the price of supporting raw dict mutation on the hot path;
-        callers that only mutate through ingest* never trigger a rebuild.
-        Replaced leaves are re-pointed incrementally (O(log W) merges each);
-        deletions rebuild level-batched.  Returns the (post-sync) canonical
-        decomposition of ``[lo, hi]`` so hot callers (the cross-tenant
-        registry) don't decompose twice."""
+        replacement).  Every tree leaf remembers the stored summary arrays
+        it was copied from (``TreeNode.src``), and the dict counts its own
+        mutations, so the pointer-identity staleness scan runs **once per
+        (dict mutations, tree version) state**: the whole store is
+        verified (and repaired — replaced leaves re-point level-batched,
+        deletions rebuild), the token is cached, and every later query in
+        the same state goes straight to the canonical decomposition —
+        O(1) instead of O(interval) on the warm-miss serving path.
+        Returns the (post-sync) decomposition of ``[lo, hi]`` so hot
+        callers (the cross-tenant registry) don't decompose twice."""
         tree = self._tree
+        summ = self.summaries
+        versioned = isinstance(summ, _VersionedDict)
+        if versioned:
+            token = (summ.mutations, tree.version)
+            if token == self._sync_token:
+                return tree.decompose(lo, hi)
+        items = summ.items() if versioned else [(i, summ[i]) for i in ids]
         stale = []
-        for pid in ids:
+        for pid, s in items:
             node = None
             if tree.base is not None and 0 <= pid - tree.base < tree.capacity:
                 node = tree.nodes.get((0, pid - tree.base))
-            s = self.summaries[pid]
             if (
                 node is None
-                or node.boundaries is not s.boundaries
-                or node.sizes is not s.sizes
+                or node.src is None
+                or node.src[0] is not s.boundaries
+                or node.src[1] is not s.sizes
             ):
                 stale.append(pid)
-        for pid in stale:
-            s = self.summaries[pid]
-            tree.set_leaf(pid, s.boundaries, s.sizes)
+        if stale:
+            tree.set_leaves(
+                {pid: (summ[pid].boundaries, summ[pid].sizes) for pid in stale}
+            )
+        if versioned:
+            if tree.num_leaves() != len(summ):
+                self.rebuild_tree()  # leaves were deleted from the dict
+            self._sync_token = (summ.mutations, tree.version)
+            return tree.decompose(lo, hi)
         sel = tree.decompose(lo, hi)
         if sum(tree.nodes[k].leaves for k in sel) != len(ids):
-            self.rebuild_tree()  # leaves were deleted from the dict
+            self.rebuild_tree()
             sel = tree.decompose(lo, hi)
         return sel
 
@@ -557,7 +677,7 @@ class HistogramStore(PoolStateView):
         ingest: the answer is a consistent whole-batch snapshot.
         """
         with self._lock:
-            ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+            ids = self._present_ids(lo, hi)
             if strict and len(ids) != hi - lo + 1:
                 missing = sorted(set(range(lo, hi + 1)) - set(ids))
                 raise KeyError(f"missing partition summaries: {missing}")
@@ -600,7 +720,7 @@ class HistogramStore(PoolStateView):
             )
             live: list[int] = []
             for qi, (lo, hi) in enumerate(intervals):
-                ids = [i for i in range(lo, hi + 1) if i in self.summaries]
+                ids = self._present_ids(lo, hi)
                 if strict and len(ids) != hi - lo + 1:
                     missing = sorted(set(range(lo, hi + 1)) - set(ids))
                     raise KeyError(f"missing partition summaries: {missing}")
@@ -630,14 +750,19 @@ class HistogramStore(PoolStateView):
         return np.asarray(quantile(h, np.asarray(q)))
 
     # ---------------------------------------------------------- persistence
-    def _state(self, prefix: str = "") -> tuple[dict, dict[str, np.ndarray]]:
+    def _state(
+        self, prefix: str = "", tree_slot_map=None
+    ) -> tuple[dict, dict[str, np.ndarray]]:
         """(json-able meta, array payload) of summaries + tree nodes.
 
         Array keys are ``prefix``-namespaced so many stores can share one
-        npz (the ``TenantRegistry`` container format).  Callers must hold
+        npz (the ``TenantRegistry`` container format).  With
+        ``tree_slot_map`` (the registry's shared-arena save) the tree's
+        node records point into pools the registry exported once for all
+        tenants, and no tree arrays are emitted here.  Callers must hold
         or not need ``_lock``.
         """
-        tree_meta, tree_arrays = self._tree.state()
+        tree_meta, tree_arrays = self._tree.state(slot_map=tree_slot_map)
         meta = {
             "ids": sorted(self.summaries),
             "n": {str(p): s.n for p, s in self.summaries.items()},
@@ -654,8 +779,13 @@ class HistogramStore(PoolStateView):
             payload[f"{prefix}{key}"] = arr
         return meta, payload
 
-    def _restore(self, meta: dict, data, prefix: str = "") -> None:
-        """Rebuild summaries + tree from a :meth:`_state`-shaped payload."""
+    def _restore(self, meta: dict, data, prefix: str = "", tree_arrays=None) -> None:
+        """Rebuild summaries + tree from a :meth:`_state`-shaped payload.
+
+        ``tree_arrays`` overrides where the tree's pool arrays are read
+        from — the registry's shared-arena container stores them once,
+        outside every tenant's prefix.
+        """
         wm = meta.get("watermark")
         if wm is None and meta["ids"]:  # pre-watermark summary files
             wm = max(int(p) for p in meta["ids"])
@@ -672,8 +802,12 @@ class HistogramStore(PoolStateView):
         if "tree" in meta:  # restore pre-merged nodes — no re-merge on load
             self._tree = IntervalTree.from_state(
                 meta["tree"],
-                _PrefixedArrays(data, prefix),
+                tree_arrays
+                if tree_arrays is not None
+                else _PrefixedArrays(data, prefix),
                 cache_size=self.cache_size,
+                arena=self.arena,  # keep shared-arena stores shared
+                collapse=self.collapse,
             )
             # share leaf storage with the summary rows so _sync_tree's
             # pointer-identity staleness scan passes without re-merging
@@ -700,6 +834,7 @@ class HistogramStore(PoolStateView):
                 "retention": (
                     None if self.retention is None else self.retention.spec()
                 ),
+                "collapse": self.collapse,
                 **state_meta,
             }
         atomic_savez(path, meta, payload)
@@ -720,6 +855,7 @@ class HistogramStore(PoolStateView):
                 ),
                 cache_size=int(meta.get("cache_size", 128)),
                 retention=policy_from_spec(meta.get("retention")),
+                collapse=str(meta.get("collapse", "canonical")),
             )
             store._restore(meta, data)
         return store

@@ -209,6 +209,9 @@ class TelemetryHub:
     ages every metric's old windows out (e.g. ``SlidingWindow(256)`` keeps
     the last 256 step-windows per metric), ``budget`` caps total node
     floats across ALL metrics with fair per-metric quotas.
+    ``shared_arena=True`` pools every metric's tree nodes into one
+    registry-owned arena (core/arena.py) — dashboards then assemble their
+    cross-metric merge stacks with a single device gather.
     """
 
     T: int = 128
@@ -216,6 +219,7 @@ class TelemetryHub:
     registry: TenantRegistry = None
     retention: RetentionPolicy | None = None
     budget: int | None = None
+    shared_arena: bool = False
 
     def __post_init__(self) -> None:
         if self.registry is None:
@@ -223,6 +227,7 @@ class TelemetryHub:
                 num_buckets=self.T,
                 retention=self.retention,
                 budget=self.budget,
+                shared_arena=self.shared_arena,
             )
         elif self.retention is not None or self.budget is not None:
             # an explicit registry carries its own knobs — silently

@@ -66,19 +66,45 @@ Two bounded-memory layers compose (core/retention.py):
 Both planes ride the shared :class:`~repro.core.workers.IngestPool`
 (drain/poison-isolation/flush/close live in one place — this used to be
 near-duplicate lock-sensitive code in the store and the registry).
+
+Shared node-storage arena (``shared_arena=True``)
+-------------------------------------------------
+Every same-config tenant's tree nodes can pool into ONE registry-owned
+:class:`~repro.core.arena.NodeArena` (one device-resident ``(n_slots, T)``
+pool pair per row width).  Three hot paths change shape:
+
+* ``query_many`` assembles its cross-tenant merge stack with a **single
+  device gather** over the shared pool (zero host-side row copies — the
+  ``host_row_copies`` counter machine-checks it) instead of re-packing
+  canonical rows host-side per tenant;
+* a drained async-ingest batch pulls up **all** touched trees together —
+  one merge dispatch per level for the whole batch, not per tenant
+  (:func:`~repro.core.interval_tree.pull_up_trees`);
+* ``save``/``load`` persist the arena **once per registry** (compacted
+  pools + per-tenant slot records) instead of one array dict per tenant.
+
+Answers are bit-identical to the per-tenant-array layout (property-tested
+in tests/test_arena.py); benchmarks/arena.py → BENCH_arena.json is the
+A/B.  Eviction under concurrent queries stays snapshot-safe because arena
+rows are write-once and freed only when their last handle dies — an
+in-flight pack holding node handles pins its rows (core/arena.py).
 """
 from __future__ import annotations
 
 import json
 import threading
+from contextlib import ExitStack
 from typing import Sequence
 
 import numpy as np
 
+from repro.core.arena import NodeArena
 from repro.core.histogram import Histogram
 from repro.core.interval_tree import (
     merge_stacks,
+    pack_device_rows,
     pack_node_rows,
+    pull_up_trees,
     selection_eps,
 )
 from repro.core.retention import (
@@ -86,7 +112,12 @@ from repro.core.retention import (
     RetentionPolicy,
     policy_from_spec,
 )
-from repro.core.stream import HistogramStore, _validated, atomic_savez
+from repro.core.stream import (
+    HistogramStore,
+    _PrefixedArrays,
+    _validated,
+    atomic_savez,
+)
 from repro.core.workers import IngestPool, PartialBatchFailure, PoolStateView
 
 __all__ = ["TenantRegistry"]
@@ -108,6 +139,8 @@ class TenantRegistry(PoolStateView):
         workers: int = 1,
         retention: RetentionPolicy | None = None,
         budget: int | None = None,
+        shared_arena: bool = False,
+        collapse: str = "canonical",
     ):
         if budget is not None and budget < 1:
             raise ValueError("budget must be >= 1 node floats")
@@ -119,6 +152,12 @@ class TenantRegistry(PoolStateView):
         self.workers = int(workers)
         self.retention = retention  # per-tenant policy (shared config)
         self.budget = None if budget is None else int(budget)  # node floats
+        self.collapse = str(collapse)  # eviction collapse mode (shared)
+        # one registry-owned NodeArena for every tenant's tree nodes: the
+        # cross-tenant query_many pack becomes a single device gather over
+        # the shared pool, and a drained ingest batch pulls up ALL touched
+        # trees with one merge dispatch per level (core/arena.py)
+        self.arena: NodeArena | None = NodeArena() if shared_arena else None
         self._stores: dict[str, HistogramStore] = {}
         self._lock = threading.RLock()  # guards the tenant dict + caches
         # per-tenant node-float footprints, cached per store version so the
@@ -138,6 +177,26 @@ class TenantRegistry(PoolStateView):
         # cross-tenant merge dispatch observability (summarize_shapes-style)
         self.merge_dispatches = 0
         self.merge_shapes: set[tuple[int, int, int, int]] = set()
+
+    @property
+    def host_row_copies(self) -> int:
+        """Host-side node-row materializations across this registry's
+        arena(s) — the machine-checked zero-copy counter of the shared-
+        arena gather path (mirrors ``merge_dispatches``)."""
+        if self.arena is not None:
+            return self.arena.host_row_copies
+        with self._lock:
+            stores = list(self._stores.values())
+        return sum(s._tree.arena.host_row_copies for s in stores)
+
+    def reset_host_row_copies(self) -> None:
+        if self.arena is not None:
+            self.arena.host_row_copies = 0
+            return
+        with self._lock:
+            stores = list(self._stores.values())
+        for s in stores:
+            s._tree.arena.host_row_copies = 0
 
     # (PoolStateView provides _cv/_pending/_ingest_mutex onto the pool)
     @property
@@ -170,6 +229,8 @@ class TenantRegistry(PoolStateView):
                     T_node=self.T_node,
                     cache_size=self.cache_size,
                     retention=self.retention,
+                    collapse=self.collapse,
+                    arena=self.arena,
                 )
                 self._stores[name] = store
             return store
@@ -241,6 +302,9 @@ class TenantRegistry(PoolStateView):
             store = self.tenant(name)
             store._apply(store._summarize_batch(parts))
             return
+        if self.arena is not None:
+            self._apply_groups_batched(batch, groups)
+            return
         suspects: list[tuple[str, int, np.ndarray]] = []
         for name, parts in groups.items():
             store = self.tenant(name)
@@ -250,6 +314,62 @@ class TenantRegistry(PoolStateView):
                 suspects += [
                     item for item in batch if item[0] == name
                 ]
+        if suspects:
+            raise PartialBatchFailure(suspects)
+
+    def _apply_groups_batched(
+        self,
+        batch: list[tuple[str, int, np.ndarray]],
+        groups: dict[str, dict[int, np.ndarray]],
+    ) -> None:
+        """Shared-arena apply: one cross-tenant pull-up per drained batch.
+
+        Summarization runs per tenant first (failures narrow the pool's
+        retry to that tenant's items, like the sequential path), then every
+        successful group's leaves are written and ALL touched trees are
+        pulled up together — one merge dispatch per level for the whole
+        batch instead of per tenant (``pull_up_trees``).  The touched
+        stores' locks are held for the whole write+pull-up (acquired in
+        sorted-name order; per-tenant FIFO routing keeps two workers'
+        tenant sets disjoint, and no other path acquires two store locks),
+        so queries still see each tenant only in whole-batch states.
+        """
+        summarized: dict[str, tuple[HistogramStore, dict]] = {}
+        suspects: list[tuple[str, int, np.ndarray]] = []
+        for name, parts in groups.items():
+            store = self.tenant(name)
+            try:
+                summarized[name] = (store, store._summarize_batch(parts))
+            except BaseException:
+                suspects += [item for item in batch if item[0] == name]
+        names = sorted(summarized)
+        with ExitStack() as stack:
+            for name in names:
+                stack.enter_context(summarized[name][0]._lock)
+            applied: list[HistogramStore] = []
+            try:
+                work = []
+                for name in names:
+                    store, summs = summarized[name]
+                    tree, dirty = store._apply_deferred(summs)
+                    applied.append(store)
+                    if dirty:
+                        work.append((tree, dirty))
+                pull_up_trees(work)
+                for name in names:
+                    summarized[name][0]._tree._invalidate()
+            except BaseException:
+                # a mid-apply failure must not release the locks with any
+                # tenant's leaves written but ancestors stale — a query
+                # would verify and CACHE that state.  Rebuild each touched
+                # tree from its (already updated) summaries before
+                # re-raising; the pool's per-item retry then re-applies.
+                for store in applied:
+                    try:
+                        store.rebuild_tree()
+                    except BaseException:
+                        pass  # best effort; the original error surfaces
+                raise
         if suspects:
             raise PartialBatchFailure(suspects)
 
@@ -435,9 +555,7 @@ class TenantRegistry(PoolStateView):
             store = self[name]
             tree = store._tree
             with store._lock:
-                ids = [
-                    i for i in range(lo, hi + 1) if i in store.summaries
-                ]
+                ids = store._present_ids(lo, hi)
                 if strict and len(ids) != hi - lo + 1:
                     missing = sorted(set(range(lo, hi + 1)) - set(ids))
                     raise KeyError(
@@ -469,13 +587,28 @@ class TenantRegistry(PoolStateView):
                 miss_sels.append(sel)
                 miss_meta.append((store, key))
         if miss_sels:
-            # ONE cross-tenant merge dispatch for the whole batch; TreeNode
-            # summaries are immutable, so packing outside the store locks
-            # is safe
-            bounds, sizes = pack_node_rows(miss_sels)
+            # ONE cross-tenant merge dispatch for the whole batch.  Packing
+            # outside the store locks is safe: arena rows are write-once
+            # and the node handles held in miss_sels pin them against
+            # concurrent eviction + reuse (core/arena.py slot lifecycle).
+            packed = None
+            if self.arena is not None:
+                # shared arena: assemble the whole merge stack with a
+                # single device gather — zero host-side row copies
+                packed = pack_device_rows(miss_sels)
+            if packed is None:
+                # per-tenant arenas (or a mixed-plane selection, e.g.
+                # geometric T_node): host pack, one stacked copy per
+                # plane, padded to the plane width so the block is
+                # bit-identical to the gather path's
+                T_pad = max(nd.width for sel in miss_sels for nd in sel)
+                packed = pack_node_rows(
+                    miss_sels, T_pad=T_pad, pad_row_copy=True
+                )
+            bounds, sizes = packed
             with self._lock:  # counters are read by concurrent servers
                 self.merge_dispatches += 1
-                self.merge_shapes.add(bounds.shape + (int(beta),))
+                self.merge_shapes.add(tuple(bounds.shape) + (int(beta),))
             bo, so = merge_stacks(bounds, sizes, int(beta))
             # one device→host transfer; per-row unpacking is then free views
             bo, so = np.asarray(bo), np.asarray(so)
@@ -493,17 +626,44 @@ class TenantRegistry(PoolStateView):
 
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
-        """Atomic one-npz write of every tenant (summaries + tree nodes)."""
+        """Atomic one-npz write of every tenant (summaries + tree nodes).
+
+        With a shared arena the node pools are exported **once for the
+        whole registry** — compacted to the live rows of all tenants
+        (``arena_ab_{width}``/``arena_as_{width}``), with each tenant's
+        node records pointing into that one slot map — instead of one
+        array dict per tenant.
+        """
         with self._lock:
             names = sorted(self._stores)
             payload: dict[str, np.ndarray] = {}
             stores_meta: dict[str, dict] = {}
-            for i, name in enumerate(names):
-                store = self._stores[name]
-                with store._lock:
-                    meta_i, payload_i = store._state(prefix=f"t{i}_")
-                stores_meta[name] = meta_i
-                payload.update(payload_i)
+            with ExitStack() as stack:
+                stores = [self._stores[n] for n in names]
+                slot_map = None
+                if self.arena is not None:
+                    # hold every store lock so the export and each tree's
+                    # node records describe one consistent snapshot
+                    for store in stores:
+                        stack.enter_context(store._lock)
+                    arrays, slot_map = self.arena.export(
+                        (nd.width, nd.row)
+                        for store in stores
+                        for nd in store._tree.nodes.values()
+                    )
+                    payload.update(
+                        {f"arena_{k}": v for k, v in arrays.items()}
+                    )
+                for i, (name, store) in enumerate(zip(names, stores)):
+                    if self.arena is None:
+                        with store._lock:
+                            meta_i, payload_i = store._state(prefix=f"t{i}_")
+                    else:  # locks already held
+                        meta_i, payload_i = store._state(
+                            prefix=f"t{i}_", tree_slot_map=slot_map
+                        )
+                    stores_meta[name] = meta_i
+                    payload.update(payload_i)
             meta = {
                 "schema": _SCHEMA,
                 "num_buckets": self.num_buckets,
@@ -514,6 +674,8 @@ class TenantRegistry(PoolStateView):
                     None if self.retention is None else self.retention.spec()
                 ),
                 "budget": self.budget,
+                "shared_arena": self.arena is not None,
+                "collapse": self.collapse,
                 "tenants": names,
                 "stores": stores_meta,
             }
@@ -538,10 +700,20 @@ class TenantRegistry(PoolStateView):
                 cache_size=int(meta.get("cache_size", 128)),
                 retention=policy_from_spec(meta.get("retention")),
                 budget=meta.get("budget"),
+                shared_arena=bool(meta.get("shared_arena", False)),
+                collapse=str(meta.get("collapse", "canonical")),
+            )
+            shared_pools = (
+                _PrefixedArrays(data, "arena_") if reg.arena is not None else None
             )
             for i, name in enumerate(meta["tenants"]):
                 store = reg.tenant(name)
-                store._restore(meta["stores"][name], data, prefix=f"t{i}_")
+                store._restore(
+                    meta["stores"][name],
+                    data,
+                    prefix=f"t{i}_",
+                    tree_arrays=shared_pools,
+                )
         return reg
 
     # ------------------------------------------------------------- utility
@@ -556,4 +728,5 @@ class TenantRegistry(PoolStateView):
             "misses": misses,
             "merge_dispatches": self.merge_dispatches,
             "merge_shapes": len(self.merge_shapes),
+            "host_row_copies": self.host_row_copies,
         }

@@ -21,7 +21,12 @@ Contract (the async-ingest consistency model of core/stream.py):
   alone — a poison item cannot take down its co-batched neighbours — and
   each individual failure is recorded as ``wrap_error(item, exc)`` under
   the pool condition (pairs with ``drain()``'s swap-read: a failure
-  concurrent with a flush can neither vanish nor double-report).
+  concurrent with a flush can neither vanish nor double-report).  The
+  batch is the registry's cross-tenant unit of work: with a shared node
+  arena its ``apply_batch`` pulls up every tenant touched by the drained
+  batch with one merge dispatch per tree level (core/tenant.py
+  ``_apply_groups_batched``), which is why workers drain greedily instead
+  of applying item by item.
 * ``on_batch_end(batch)``, when given, runs on the worker after every
   applied batch and *before* the pending count drops — the retention
   sweeper's slot: ``flush()`` returning implies the sweep ran on

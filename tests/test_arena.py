@@ -1,0 +1,345 @@
+"""Shared node-storage arena (core/arena.py + the arena-backed tree).
+
+Four families of guarantees:
+
+* **slot mechanics** — free-list alloc + geometric growth, write-once
+  padded rows, GC-driven reclamation (a dropped handle's row returns to
+  the free list; a held handle pins its row against reuse), and the
+  machine-checked ``host_row_copies`` counter;
+* **bit-equality** — a ``TenantRegistry(shared_arena=True)`` answers every
+  ``query_many`` bit-identically to the per-tenant-array layout AND to the
+  per-store ``query`` path, property-tested over random ingest/evict/query
+  interleavings, uniform + geometric ``T_node``, tiny partitions included
+  (the acceptance criterion of the arena PR);
+* **zero-copy pack** — the shared-arena gather path serves a cold
+  cross-tenant batch with ONE merge dispatch and ZERO host-side row
+  copies, and a drained async batch pulls all touched trees up with one
+  dispatch per level (not per tenant);
+* **persistence** — a shared-arena registry saves its pools once
+  (compacted: free-list fragmentation never reaches disk) and reloads
+  bit-exact, geometric per-level planes included.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HistogramStore, NodeArena, TenantRegistry
+from repro.core import interval_tree as it_mod
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+T = 16
+BETA = 8
+
+
+def _close(*regs):
+    for reg in regs:
+        reg.close()
+
+
+# --------------------------------------------------------------- mechanics
+def test_arena_rows_are_padded_write_once_and_reclaimed_on_gc():
+    arena = NodeArena()
+    b = np.asarray([0.0, 1.0, 3.0], np.float32)
+    s = np.asarray([4.0, 2.0], np.float32)
+    row = arena.alloc(8, b, s)
+    rb, rs = arena.view(8, row)
+    np.testing.assert_array_equal(rb[:3], b)
+    np.testing.assert_array_equal(rb[3:], np.full(6, 3.0, np.float32))
+    np.testing.assert_array_equal(rs[:2], s)
+    np.testing.assert_array_equal(rs[2:], np.zeros(6, np.float32))
+    assert arena.live_rows() == 1
+    assert arena.allocated_floats() == 2 * 8 + 1
+    # a handle pins its row; dropping it reclaims the slot at the next alloc
+    nd = it_mod.TreeNode(arena, 8, row, 2, 6.0, 0.0, 1)
+    del nd
+    arena.alloc(8, b, s)
+    assert arena.live_rows() == 1  # the freed row was reused
+
+
+def test_arena_grows_geometrically_and_oversize_rejected():
+    arena = NodeArena()
+    rows = [
+        arena.alloc(4, np.arange(5, dtype=np.float32), np.ones(4, np.float32))
+        for _ in range(200)
+    ]
+    assert len(set(rows)) == 200 and arena.live_rows() == 200
+    cap = arena._planes[4].capacity
+    assert cap >= 200 and (cap & (cap - 1)) == 0  # pow2 growth steps
+    with pytest.raises(ValueError):
+        arena.alloc(4, np.arange(9, dtype=np.float32), np.ones(8, np.float32))
+
+
+def test_alloc_block_pads_rows_narrower_than_the_plane():
+    arena = NodeArena()
+    b = np.stack([np.arange(5, dtype=np.float32), np.arange(5, dtype=np.float32) + 7])
+    s = np.ones((2, 4), np.float32)
+    rows = arena.alloc_block(8, b, s)
+    for i, row in enumerate(rows):
+        rb, rs = arena.view(8, row)
+        np.testing.assert_array_equal(rb[:5], b[i])
+        np.testing.assert_array_equal(rb[5:], np.full(4, b[i, -1]))
+        np.testing.assert_array_equal(rs, np.concatenate([s[i], np.zeros(4)]))
+
+
+def test_rebase_rebuild_keeps_src_identity_no_double_rebuild():
+    """The collapse/rebase (and below-base) rebuilds must carry each
+    leaf's src token: losing it made the first query after every
+    straddling eviction mark ALL leaves stale and silently rebuild the
+    whole tree a second time on the serving path."""
+    rng = np.random.default_rng(13)
+    store = HistogramStore(num_buckets=T)
+    for d in range(8):
+        store.ingest(d, rng.normal(size=128).astype(np.float32))
+    store.evict([0])  # straddling survivors → rebase-rebuild path
+    v = store.version
+    it_mod.reset_pullup_stats()
+    store.query(1, 7, BETA)
+    stats = it_mod.reset_pullup_stats()
+    assert stats["pair_merges"] == 0, "query re-rebuilt the tree"
+    assert store.version == v
+    # and below-base re-ingest (the other rebuild path)
+    store.ingest(-3, rng.normal(size=128).astype(np.float32))
+    v = store.version
+    it_mod.reset_pullup_stats()
+    store.query(-3, 7, BETA, strict=False)
+    assert it_mod.reset_pullup_stats()["pair_merges"] == 0
+    assert store.version == v
+
+
+def test_export_compacts_and_dedups_shared_rows():
+    arena = NodeArena()
+    r0 = arena.alloc(4, np.arange(5, dtype=np.float32), np.ones(4, np.float32))
+    r1 = arena.alloc(4, np.arange(5, dtype=np.float32) + 9, 2 * np.ones(4, np.float32))
+    arrays, slot_map = arena.export([(4, r1), (4, r0), (4, r1)])
+    assert arrays["ab_4"].shape == (2, 5) and arrays["as_4"].shape == (2, 4)
+    assert slot_map == {(4, r1): 0, (4, r0): 1}
+    np.testing.assert_array_equal(arrays["as_4"][0], 2 * np.ones(4, np.float32))
+
+
+# ------------------------------------------------------------ bit-equality
+def _rand_parts(rng, pids, tiny_ok):
+    parts = {}
+    for pid in pids:
+        if tiny_ok and rng.integers(0, 4) == 0:
+            n = int(rng.integers(2, T))  # tiny: summarized at T = n
+        else:
+            n = int(rng.integers(1, 4)) * 64
+        parts[int(pid)] = rng.normal(size=n).astype(np.float32)
+    return parts
+
+
+@st.composite
+def interleaving(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    t_node = draw(st.sampled_from([None, "geometric"]))
+    tiny_ok = draw(st.booleans())
+    n_tenants = draw(st.sampled_from([2, 3, 5]))
+    n_ops = draw(st.integers(3, 7))
+    return seed, t_node, tiny_ok, n_tenants, n_ops
+
+
+@given(interleaving())
+def test_shared_arena_bitexact_vs_per_tenant_arrays(args):
+    """THE acceptance property: over random ingest/evict/query
+    interleavings, every shared-arena answer is bit-identical to the
+    per-tenant layout's, which is itself bit-identical to the per-store
+    query path."""
+    seed, t_node, tiny_ok, n_tenants, n_ops = args
+    rng = np.random.default_rng(seed)
+    shared = TenantRegistry(num_buckets=T, T_node=t_node, shared_arena=True)
+    legacy = TenantRegistry(num_buckets=T, T_node=t_node)
+    names = [f"svc{i}" for i in range(n_tenants)]
+    present = {n: set() for n in names}
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        name = names[int(rng.integers(0, n_tenants))]
+        if op == 0 or not present[name]:  # ingest a run of partitions
+            lo = int(rng.integers(0, 12))
+            pids = range(lo, lo + int(rng.integers(1, 5)))
+            parts = _rand_parts(rng, pids, tiny_ok)
+            shared.ingest_many(name, parts)
+            legacy.ingest_many(name, parts)
+            present[name].update(parts)
+        elif op == 1:  # evict the oldest few
+            k = int(rng.integers(1, len(present[name]) + 1))
+            victims = sorted(present[name])[:k]
+            assert shared[name].evict(victims) == legacy[name].evict(victims)
+            present[name] -= set(victims)
+        # cross-tenant query batch over random windows (some empty)
+        qs = []
+        for n in names:
+            if not present[n]:
+                continue
+            ids = sorted(present[n])
+            lo = int(rng.integers(ids[0], ids[-1] + 1))
+            hi = int(rng.integers(lo, ids[-1] + 1))
+            qs.append((n, lo, hi))
+        if not qs:
+            continue
+        ans_s = shared.query_many(qs, BETA, strict=False)
+        ans_l = legacy.query_many(qs, BETA, strict=False)
+        for (name, lo, hi), (hs, es), (hl, el) in zip(qs, ans_s, ans_l):
+            assert (hs is None) == (hl is None)
+            if hs is None:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(hs.boundaries), np.asarray(hl.boundaries)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(hs.sizes), np.asarray(hl.sizes)
+            )
+            assert es == el
+            # and vs the single-store query path (its own pack shape)
+            hq, eq = shared[name].query(lo, hi, BETA, strict=False)
+            np.testing.assert_array_equal(
+                np.asarray(hs.sizes), np.asarray(hq.sizes)
+            )
+            assert es == eq
+    _close(shared, legacy)
+
+
+# --------------------------------------------------------- zero-copy pack
+def test_gather_path_one_dispatch_zero_host_row_copies():
+    rng = np.random.default_rng(3)
+    reg = TenantRegistry(num_buckets=T, shared_arena=True)
+    for ti in range(12):
+        reg.ingest_many(
+            f"svc{ti}",
+            {d: rng.normal(size=256).astype(np.float32) for d in range(6)},
+        )
+    qs = [(f"svc{ti}", 0, 5) for ti in range(12)]
+    reg.query_many(qs, BETA)  # warm compile
+    for name in reg.names():
+        reg[name]._tree._cache.clear()
+    reg.merge_dispatches = 0
+    reg.reset_host_row_copies()
+    reg.query_many(qs, BETA)
+    assert reg.merge_dispatches == 1
+    assert reg.host_row_copies == 0
+    assert reg.cache_stats()["host_row_copies"] == 0
+    # the per-tenant layout pays host copies for the same batch
+    legacy = TenantRegistry(num_buckets=T)
+    for ti in range(12):
+        legacy.ingest_many(
+            f"svc{ti}",
+            {d: rng.normal(size=256).astype(np.float32) for d in range(6)},
+        )
+    legacy.reset_host_row_copies()
+    legacy.query_many(qs, BETA)
+    assert legacy.host_row_copies > 0
+    _close(reg, legacy)
+
+
+def test_async_batch_pulls_up_all_tenants_with_one_dispatch_per_level():
+    """Cross-tenant batched pull-ups: a drained multi-tenant batch costs
+    one merge dispatch per level (uniform T_node → one shape class), not
+    one per tenant per level — and the resulting stores answer
+    bit-identically to synchronous per-tenant ingest."""
+    rng = np.random.default_rng(4)
+    parts = {
+        f"svc{ti}": {d: rng.normal(size=128).astype(np.float32) for d in range(8)}
+        for ti in range(6)
+    }
+    sync = TenantRegistry(num_buckets=T, shared_arena=True)
+    for name, p in parts.items():
+        sync.ingest_many(name, p)
+    reg = TenantRegistry(num_buckets=T, shared_arena=True)
+    # force ONE drained batch spanning every tenant: enqueue while the
+    # worker is blocked behind the first item's summarization is racy, so
+    # instead drive the pool callback directly with a known batch
+    batch = [
+        (name, pid, v) for name, p in parts.items() for pid, v in p.items()
+    ]
+    it_mod.reset_pullup_stats()
+    reg._apply_worker_batch(batch)
+    stats = it_mod.reset_pullup_stats()
+    # 8 leaves/tenant → 3 levels; one dispatch per level for ALL 6 tenants
+    assert stats["dispatches"] == 3, stats
+    assert stats["pair_merges"] == 6 * (4 + 2 + 1)
+    qs = [(name, 0, 7) for name in parts]
+    for (hs, es), (hl, el) in zip(
+        reg.query_many(qs, BETA), sync.query_many(qs, BETA)
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(hs.sizes), np.asarray(hl.sizes)
+        )
+        assert es == el
+    _close(reg, sync)
+
+
+# ------------------------------------------------------------- persistence
+@pytest.mark.parametrize("t_node", [None, "geometric"])
+def test_shared_arena_registry_roundtrip_bit_exact(tmp_path, t_node):
+    """Save/load of a shared-arena registry: pools written once, free-list
+    fragmentation compacted away, slots remapped, geometric per-level
+    planes preserved — answers bit-exact vs pre-save."""
+    rng = np.random.default_rng(5)
+    reg = TenantRegistry(num_buckets=T, T_node=t_node, shared_arena=True)
+    for ti in range(5):
+        reg.ingest_many(
+            f"svc{ti}",
+            {d: rng.normal(size=200).astype(np.float32) for d in range(9)},
+        )
+        # fragment the free list: evict then re-ingest a few days
+        reg[f"svc{ti}"].evict([0, 1])
+        reg.ingest_many(
+            f"svc{ti}",
+            {d: rng.normal(size=40 + 64 * ti).astype(np.float32) for d in (0, 1)},
+        )
+    qs = [(f"svc{ti}", lo, hi) for ti in range(5) for lo, hi in [(0, 8), (2, 6), (4, 4)]]
+    before = reg.query_many(qs, BETA)
+    path = str(tmp_path / "reg.npz")
+    reg.save(path)
+    with np.load(path, allow_pickle=False) as data:
+        pool_keys = [k for k in data.files if k.startswith("arena_ab_")]
+        assert pool_keys, "shared pools must be saved once, registry-level"
+        # compaction: exported rows == unique live rows across all tenants
+        exported = sum(data[k].shape[0] for k in pool_keys)
+        live = len(
+            {
+                (nd.width, nd.row)
+                for name in reg.names()
+                for nd in reg[name]._tree.nodes.values()
+            }
+        )
+        assert exported == live
+        assert not any("tb_" in k for k in data.files)  # no per-node arrays
+    loaded = TenantRegistry.load(path)
+    assert loaded.arena is not None
+    for name in reg.names():
+        assert loaded[name]._tree.nodes.keys() == reg[name]._tree.nodes.keys()
+        assert loaded[name]._tree.arena is loaded.arena
+    after = loaded.query_many(qs, BETA)
+    for (hb, eb), (ha, ea) in zip(before, after):
+        np.testing.assert_array_equal(
+            np.asarray(hb.boundaries), np.asarray(ha.boundaries)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(hb.sizes), np.asarray(ha.sizes)
+        )
+        assert eb == ea
+    # geometric levels keep doubling after reload (plane config survived)
+    if t_node == "geometric":
+        assert loaded[reg.names()[0]]._tree.node_T(3) == T << 3
+    _close(reg, loaded)
+
+
+def test_standalone_store_roundtrip_uses_arena_layout(tmp_path):
+    rng = np.random.default_rng(6)
+    store = HistogramStore(num_buckets=T)
+    for d in range(7):
+        store.ingest(d, rng.normal(size=150).astype(np.float32))
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    with np.load(path, allow_pickle=False) as data:
+        assert any(k.startswith("ab_") for k in data.files)
+    loaded = HistogramStore.load(path)
+    h0, e0 = store.query(1, 6, BETA)
+    h1, e1 = loaded.query(1, 6, BETA)
+    np.testing.assert_array_equal(np.asarray(h0.sizes), np.asarray(h1.sizes))
+    assert e0 == e1
+    assert os.path.exists(path)

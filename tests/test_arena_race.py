@@ -1,0 +1,141 @@
+"""Concurrent cross-tenant ``query_many`` vs retention/budget eviction.
+
+The registry packs its merge stack OUTSIDE the per-store locks (that is
+the point — one gather serves every tenant), so an eviction sweep can land
+*mid-pack*: between a store's node selection and the merge dispatch.  The
+snapshot contract says each answer must reflect a consistent whole-batch
+state of its tenant — never a torn mix, and never a freed-and-reused arena
+row (the arena's write-once rows + handle-lifetime reclamation are what
+guarantee the latter; see core/arena.py).
+
+The pin, in the style of test_store_bugfixes' error races: every partition
+carries a distinct known mass and all mutations (atomic evict-oldest /
+re-ingest batches, plus registry budget sweeps which also evict
+oldest-first) move each tenant through *suffix* states only — so the total
+mass of any legal snapshot lives in a small precomputed set.  A torn pack
+or a recycled row would produce an off-set mass.  Run against both the
+shared-arena gather path and the per-tenant host-pack path.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import TenantRegistry
+
+T = 16
+W = 10
+BETA = 8
+TENANTS = [f"svc{i}" for i in range(4)]
+
+
+def _masses(parts):
+    """All legal snapshot masses of one tenant: suffix states only."""
+    ids = sorted(parts)
+    sizes = [parts[p].size for p in ids]
+    return {float(sum(sizes[j:])) for j in range(len(ids))}
+
+
+@pytest.mark.parametrize("shared", [True, False])
+def test_query_many_races_eviction_and_budget_sweeps(shared):
+    rng = np.random.default_rng(11)
+    parts = {
+        name: {
+            pid: rng.normal(size=150 + 17 * pid).astype(np.float32)
+            for pid in range(W)
+        }
+        for name in TENANTS
+    }
+    full_floats = None
+    reg = TenantRegistry(num_buckets=T, shared_arena=shared)
+    for name in TENANTS:
+        reg.ingest_many(name, parts[name])
+    full_floats = sum(reg.node_floats().values())
+    reg.budget = int(full_floats * 0.9)  # sweeps occasionally bite
+    legal = {name: _masses(parts[name]) for name in TENANTS}
+    queries = [(name, 0, W - 1) for name in TENANTS]
+
+    errors: list[BaseException] = []
+    observed: list[tuple[str, float]] = []
+    stop = threading.Event()
+
+    def querier():
+        try:
+            local = []
+            while not stop.is_set():
+                for (name, _, _), (h, eps) in zip(
+                    queries, reg.query_many(queries, BETA, strict=False)
+                ):
+                    assert h is not None  # newest is never evicted
+                    local.append(
+                        (name, float(np.asarray(h.sizes, np.float64).sum()))
+                    )
+            observed.extend(local)
+        except BaseException as e:  # surfaces in the main thread
+            errors.append(e)
+            stop.set()
+
+    def mutator():
+        try:
+            mrng = np.random.default_rng(12)
+            for _ in range(60):
+                name = TENANTS[int(mrng.integers(0, len(TENANTS)))]
+                store = reg[name]
+                ids = store.ids()
+                if len(ids) > 1:
+                    k = int(mrng.integers(1, len(ids)))
+                    store.evict(ids[:k])  # oldest prefix, atomic
+                # restore to the full window (atomic batch, may re-grow
+                # below base → rebuild, maximum slot-reuse pressure)
+                missing = {
+                    pid: parts[name][pid]
+                    for pid in range(W)
+                    if pid not in store.summaries
+                }
+                if missing:
+                    reg.ingest_many(name, missing)
+                if mrng.integers(0, 3) == 0:
+                    reg.enforce_budget()  # eviction mid-pack, cross-tenant
+        except BaseException as e:
+            errors.append(e)
+        finally:
+            stop.set()
+
+    threads = [threading.Thread(target=querier) for _ in range(2)]
+    threads.append(threading.Thread(target=mutator))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert observed, "queriers never completed a batch"
+    for name, mass in observed:
+        gap = min(abs(mass - m) for m in legal[name])
+        assert gap < 0.5, (
+            f"{name}: observed mass {mass} matches no legal snapshot "
+            f"(torn pack or recycled arena row)"
+        )
+
+    # quiesced: restore every tenant and compare against a fresh registry —
+    # canonical collapse + base-shift rebuilds make this bit-exact
+    reg.budget = None  # stop the sweeper from re-evicting the restores
+    for name in TENANTS:
+        missing = {
+            pid: parts[name][pid]
+            for pid in range(W)
+            if pid not in reg[name].summaries
+        }
+        if missing:
+            reg.ingest_many(name, missing)
+    fresh = TenantRegistry(num_buckets=T, shared_arena=shared)
+    for name in TENANTS:
+        fresh.ingest_many(name, parts[name])
+    for (h0, e0), (h1, e1) in zip(
+        reg.query_many(queries, BETA), fresh.query_many(queries, BETA)
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(h0.sizes), np.asarray(h1.sizes)
+        )
+        assert e0 == e1
+    reg.close()
+    fresh.close()
