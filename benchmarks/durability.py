@@ -1,0 +1,279 @@
+"""Durable ingest: WAL overhead + crash-recovery fidelity.
+
+Two questions, machine-checked (the acceptance criteria of the durable-
+ingest subsystem, see the "Write-ahead log" design note in
+core/workers.py):
+
+  * **What does durability cost?**  The same partition stream is
+    ingested through a plain store and a ``wal_dir=`` store (batched
+    ``ingest_many`` — the WAL's intended group-commit mode: one fsync
+    per batch, not per partition).  Reported as ``overhead_ratio``; CI
+    asserts it stays ≤ 1.5×.
+  * **Does recovery actually lose nothing?**  Three crash scenarios —
+    right after a save (nothing to replay), between async submit and
+    flush (everything still queued), and a torn trailing record — each
+    recovered and compared against a never-crashed replica fed the same
+    acked partitions: ``recovered_bit_identical`` (query_many answers
+    bit-equal) and ``acked_loss_count`` (acked partitions missing after
+    recovery; torn records a disk lost are dropped *and counted as
+    detected*, not as silent loss).
+
+Results print as CSV rows and are written to ``BENCH_durability.json``
+(schema ``bench_durability/v1``; CI smoke-checks it at tiny sizes via
+``--smoke``).
+
+Run standalone: ``PYTHONPATH=src python benchmarks/durability.py``
+or as a section of ``python -m benchmarks.run --only durability``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import HistogramStore, TenantRegistry
+
+SCHEMA = "bench_durability/v1"
+
+T = 32
+BETA = 16
+
+
+def _batches(parts: dict[int, np.ndarray], size: int):
+    pids = sorted(parts)
+    for i in range(0, len(pids), size):
+        yield {pid: parts[pid] for pid in pids[i : i + size]}
+
+
+def _ingest_seconds(store, parts, batch: int, reps: int) -> float:
+    """Best-of-``reps`` wall time to ingest the whole stream in batches
+    (fresh pids per rep keep the stores append-only and the jit shapes
+    warm)."""
+    out = []
+    n = len(parts)
+    for r in range(reps):
+        shifted = {pid + r * 10 * n: v for pid, v in parts.items()}
+        t0 = time.perf_counter()
+        for b in _batches(shifted, batch):
+            store.ingest_many(b)
+        out.append(time.perf_counter() - t0)
+    return float(min(out))
+
+
+def _bit_identical(reg_a, reg_b, panels) -> bool:
+    for (ha, ea), (hb, eb) in zip(
+        reg_a.query_many(panels, BETA, strict=False),
+        reg_b.query_many(panels, BETA, strict=False),
+    ):
+        if ha is None or hb is None:
+            return False
+        if not np.array_equal(np.asarray(ha.boundaries), np.asarray(hb.boundaries)):
+            return False
+        if not np.array_equal(np.asarray(ha.sizes), np.asarray(hb.sizes)):
+            return False
+        if ea != eb:
+            return False
+    return True
+
+
+def main(
+    emit,
+    *,
+    partitions: int = 64,
+    values: int = 8192,
+    batch: int = 8,
+    reps: int = 3,
+    out_path: str = "BENCH_durability.json",
+) -> dict:
+    rng = np.random.default_rng(0)
+    parts = {
+        pid: rng.lognormal(-1.8, 0.55, size=values).astype(np.float32)
+        for pid in range(partitions)
+    }
+    base = tempfile.mkdtemp(prefix="bench-durability-")
+    try:
+        # ---- ingest overhead: WAL vs no WAL (batched group commit) ----
+        warm = HistogramStore(num_buckets=T)
+        warm.ingest_many(next(_batches(parts, batch)))  # jit warm-up
+
+        plain = HistogramStore(num_buckets=T)
+        nowal_seconds = _ingest_seconds(plain, parts, batch, reps)
+
+        wal_store = HistogramStore(
+            num_buckets=T, wal_dir=os.path.join(base, "wal-overhead")
+        )
+        wal_seconds = _ingest_seconds(wal_store, parts, batch, reps)
+        wstats = wal_store.wal_stats()
+        overhead_ratio = wal_seconds / nowal_seconds
+
+        # ---- recovery scenarios vs a never-crashed replica ----
+        data = {
+            (t, pid): parts[pid][: min(values, 2048)]
+            for t in ("svc-a", "svc-b")
+            for pid in range(min(partitions, 16))
+        }
+        n_pids = min(partitions, 16)
+        panels = [("svc-a", 0, n_pids - 1), ("svc-b", 0, n_pids - 1)]
+        ref = TenantRegistry(num_buckets=T)
+        for (t, pid), v in data.items():
+            ref.ingest(t, pid, v)
+
+        scenarios = {}
+        t_recover = 0.0
+
+        # 1. crash right after a save: the snapshot alone must suffice
+        d1 = os.path.join(base, "s1")
+        reg = TenantRegistry(num_buckets=T, wal_dir=os.path.join(d1, "wal"))
+        for (t, pid), v in data.items():
+            reg.ingest(t, pid, v)
+        reg.save(os.path.join(d1, "reg.npz"))
+        del reg
+        t0 = time.perf_counter()
+        rec = TenantRegistry.recover(
+            os.path.join(d1, "reg.npz"), os.path.join(d1, "wal"), num_buckets=T
+        )
+        t_recover += time.perf_counter() - t0
+        scenarios["after_save"] = {
+            "bit_identical": _bit_identical(rec, ref, panels),
+            "acked_loss": sum(
+                n_pids - len(rec[t].ids()) for t in ("svc-a", "svc-b")
+            ),
+            "replayed": rec.last_recovery["replayed"],
+        }
+        rec.close()
+
+        # 2. crash between async submit and flush: WAL-only restore
+        d2 = os.path.join(base, "s2")
+        reg = TenantRegistry(num_buckets=T, wal_dir=os.path.join(d2, "wal"))
+        for (t, pid), v in data.items():
+            reg.ingest_async(t, pid, v)  # acked ⇒ fsynced; never flushed
+        del reg
+        t0 = time.perf_counter()
+        rec = TenantRegistry.recover(
+            os.path.join(d2, "reg.npz"), os.path.join(d2, "wal"), num_buckets=T
+        )
+        t_recover += time.perf_counter() - t0
+        scenarios["before_flush"] = {
+            "bit_identical": _bit_identical(rec, ref, panels),
+            "acked_loss": sum(
+                n_pids - len(rec[t].ids()) for t in ("svc-a", "svc-b")
+            ),
+            "replayed": rec.last_recovery["replayed"],
+        }
+        rec.close()
+
+        # 3. torn trailing record: dropped AND detected, prefix intact
+        d3 = os.path.join(base, "s3")
+        reg = TenantRegistry(num_buckets=T, wal_dir=os.path.join(d3, "wal"))
+        for (t, pid), v in data.items():
+            reg.ingest(t, pid, v)
+        reg.ingest("svc-a", n_pids, data[("svc-a", 0)])  # the torn victim
+        del reg
+        segs = sorted(
+            f
+            for f in os.listdir(os.path.join(d3, "wal"))
+            if f.startswith("wal-")
+        )
+        last = os.path.join(d3, "wal", segs[-1])
+        with open(last, "r+b") as f:
+            f.truncate(os.path.getsize(last) - 9)
+        t0 = time.perf_counter()
+        rec = TenantRegistry.recover(
+            os.path.join(d3, "reg.npz"), os.path.join(d3, "wal"), num_buckets=T
+        )
+        t_recover += time.perf_counter() - t0
+        scenarios["torn_tail"] = {
+            "bit_identical": _bit_identical(rec, ref, panels),
+            "acked_loss": sum(
+                n_pids - len(rec[t].ids()) for t in ("svc-a", "svc-b")
+            ),
+            "torn_detected": rec.last_recovery["torn_records_dropped"] == 1,
+        }
+        rec.close()
+        ref.close()
+
+        recovered_bit_identical = all(
+            s["bit_identical"] for s in scenarios.values()
+        )
+        acked_loss_count = sum(s["acked_loss"] for s in scenarios.values())
+
+        result = {
+            "schema": SCHEMA,
+            "partitions": partitions,
+            "values_per_partition": values,
+            "batch": batch,
+            "T": T,
+            "beta": BETA,
+            "ingest": {
+                "nowal_seconds": nowal_seconds,
+                "wal_seconds": wal_seconds,
+                "overhead_ratio": overhead_ratio,
+                "fsyncs": wstats["fsyncs"],
+                "fsync_ms_mean": (
+                    1e3 * wstats["fsync_seconds_total"] / max(1, wstats["fsyncs"])
+                ),
+                "wal_bytes_written": wstats["bytes_written"],
+            },
+            "recovery": {
+                "scenarios": scenarios,
+                "recovery_seconds_total": t_recover,
+            },
+            "recovered_bit_identical": recovered_bit_identical,
+            "acked_loss_count": acked_loss_count,
+            "torn_detected": scenarios["torn_tail"]["torn_detected"],
+        }
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+
+        emit(
+            "durability_ingest_overhead",
+            overhead_ratio,
+            f"WAL {wal_seconds*1e3:.0f} ms vs plain {nowal_seconds*1e3:.0f} "
+            f"ms for {partitions}×{values} f32 (batch {batch}: "
+            f"{wstats['fsyncs']} group-commit fsyncs)",
+        )
+        emit(
+            "durability_recovered_bit_identical",
+            1.0 if recovered_bit_identical else 0.0,
+            "after-save / before-flush / torn-tail all ≡ never-crashed "
+            f"replica (acked loss {acked_loss_count})",
+        )
+        emit(
+            "durability_recovery_seconds",
+            t_recover,
+            f"3 recoveries, {scenarios['before_flush']['replayed']} records "
+            "replayed in the worst one",
+        )
+        emit("durability_json", 0.0, f"written to {out_path}")
+        return result
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes for CI: validates the pipeline + JSON schema only",
+    )
+    ap.add_argument("--out", default="BENCH_durability.json")
+    ap.add_argument("--partitions", type=int, default=64)
+    args = ap.parse_args()
+    kw = dict(out_path=args.out, partitions=args.partitions)
+    if args.smoke:
+        # values large enough that one group-commit fsync per batch
+        # amortizes — the 1.5× overhead gate is meaningful, not noise
+        kw.update(partitions=12, values=8192, batch=6, reps=3)
+    print("name,value,derived")
+    main(
+        lambda name, v, derived="": print(
+            f"{name},{v:.3f},{derived}", flush=True
+        ),
+        **kw,
+    )

@@ -18,6 +18,9 @@
                         pack vs per-tenant host pack, batched pull-up
                         dispatches, amortized window slides
                         (writes BENCH_arena.json)
+  * durability        — write-ahead-log ingest overhead vs no-WAL +
+                        crash-recovery fidelity across three kill points
+                        (writes BENCH_durability.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -26,6 +29,7 @@ import sys
 from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
 from benchmarks import ingest_throughput, interval_query, multi_tenant
 from benchmarks import arena as arena_bench
+from benchmarks import durability as durability_bench
 from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
 
@@ -50,6 +54,7 @@ def main() -> None:
         "tenant": multi_tenant.main,
         "retention": retention_bench.main,
         "arena": arena_bench.main,
+        "durability": durability_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

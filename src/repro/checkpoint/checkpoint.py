@@ -105,30 +105,34 @@ def restore_checkpoint(
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
+    # NpzFile holds the archive fd until closed — rebuild() materializes
+    # every leaf, so context-manage instead of leaking one fd per restore
+    with np.load(os.path.join(path, "arrays.npz")) as data:
 
-    def rebuild(template, prefix, shard_tree):
-        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-        shard_flat = (
-            jax.tree_util.tree_flatten(shard_tree)[0]
-            if shard_tree is not None
-            else [None] * len(flat)
-        )
-        leaves = []
-        for (keypath, leaf), sh in zip(flat, shard_flat):
-            arr = data[f"{prefix}{SEP}{jax.tree_util.keystr(keypath)}"]
-            arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
-            leaves.append(
-                jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+        def rebuild(template, prefix, shard_tree):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+            shard_flat = (
+                jax.tree_util.tree_flatten(shard_tree)[0]
+                if shard_tree is not None
+                else [None] * len(flat)
             )
-        return jax.tree_util.tree_unflatten(treedef, leaves)
+            leaves = []
+            for (keypath, leaf), sh in zip(flat, shard_flat):
+                arr = data[f"{prefix}{SEP}{jax.tree_util.keystr(keypath)}"]
+                arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+                leaves.append(
+                    jax.device_put(arr, sh)
+                    if sh is not None
+                    else jax.numpy.asarray(arr)
+                )
+            return jax.tree_util.tree_unflatten(treedef, leaves)
 
-    params = rebuild(params_template, "p", shardings)
-    opt = (
-        rebuild(opt_template, "o", opt_shardings)
-        if opt_template is not None
-        else None
-    )
+        params = rebuild(params_template, "p", shardings)
+        opt = (
+            rebuild(opt_template, "o", opt_shardings)
+            if opt_template is not None
+            else None
+        )
     return params, opt, step
 
 

@@ -59,6 +59,19 @@ The drain/poison-isolation/flush/close machinery itself is the shared
 implementation for this store's single worker and the multi-tenant
 registry's pool alike.
 
+Durable ingest (``wal_dir=...``)
+--------------------------------
+The queue above is in-memory: without a log, a crash between ``ingest``
+and ``save`` silently loses acked partitions.  With ``wal_dir`` every
+ingest — sync or async — appends a checksummed record to a segmented
+write-ahead log and fsyncs (group commit) **before the call returns**;
+``save`` captures the log's applied watermark, persists it, and
+truncates fully-covered segments; ``load(path, wal_dir=...)`` /
+``recover(path, wal_dir, ...)`` replay the uncovered suffix with
+idempotent pid dedup reconciled against the retention watermark.  Record
+layout, fsync-batching policy, truncation-on-save invariant, and the
+idempotent-replay contract are documented in core/workers.py.
+
 Watermark persistence format
 ----------------------------
 Retention ages partitions against the **watermark** — the highest
@@ -105,7 +118,7 @@ from repro.core.histogram import (
 from repro.core.arena import NodeArena
 from repro.core.interval_tree import COLLAPSE_MODES, IntervalTree
 from repro.core.retention import RetentionPolicy, StoreStats, policy_from_spec
-from repro.core.workers import IngestPool, PoolStateView
+from repro.core.workers import IngestPool, PoolStateView, WriteAheadLog
 
 __all__ = ["StoredSummary", "HistogramStore", "atomic_savez"]
 
@@ -119,20 +132,33 @@ def _validated(values) -> np.ndarray:
 
 
 def atomic_savez(path: str, meta: dict, payload: dict[str, np.ndarray]) -> None:
-    """Crash-safe npz write: mkstemp + fd write + atomic rename.
+    """Crash-safe npz write: mkstemp + fd write + fsync + atomic rename.
 
     Writing through the open fd keeps np.savez from appending its implicit
     ``.npz`` suffix (no stray twin files); the rename makes readers see
-    either the old file or the complete new one.  Shared by
-    ``HistogramStore.save`` and the multi-tenant registry's one-file-for-
-    all-tenants save (core/tenant.py).
+    either the old file or the complete new one.  Two fsyncs make that
+    hold across power loss, not just process death: the temp file's fd is
+    fsynced *before* ``os.replace`` (otherwise the rename can land while
+    the data blocks are still dirty, leaving a zero-length "atomically
+    saved" file), and the containing directory's fd is fsynced *after*
+    (otherwise the rename itself may not be durable and the file simply
+    vanishes).  Shared by ``HistogramStore.save`` and the multi-tenant
+    registry's one-file-for-all-tenants save (core/tenant.py).
     """
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".npz")
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".npz")
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, meta=json.dumps(meta), **payload)
+            f.flush()
+            os.fsync(f.fileno())  # data durable before the rename
         os.replace(tmp, path)
+        dfd = os.open(dirname, os.O_RDONLY)
+        try:
+            os.fsync(dfd)  # the rename durable too
+        finally:
+            os.close(dfd)
     except BaseException:
         try:
             os.unlink(tmp)
@@ -249,6 +275,15 @@ class HistogramStore(PoolStateView):
     # arena; a TenantRegistry(shared_arena=True) passes one shared arena
     # to every tenant so cross-tenant packs become a single device gather
     arena: NodeArena | None = None
+    # durable ingest (core/workers.py WriteAheadLog): a directory path
+    # makes every ingest — sync or async — append + fsync a log record
+    # before it acks, so an acked partition survives a crash between
+    # ingest and save.  ``save`` truncates log segments covered by the
+    # snapshot; ``load(path, wal_dir=...)`` / ``recover`` replay the
+    # uncovered suffix with idempotent pid dedup.  The constructor never
+    # replays leftover segments itself (replay needs the snapshot's
+    # summaries/watermark as its dedup baseline) — use ``recover``.
+    wal_dir: str | None = None
     _tree: IntervalTree = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
@@ -281,6 +316,13 @@ class HistogramStore(PoolStateView):
         self._watermark: int | None = (
             max(self.summaries) if self.summaries else None
         )
+        # stats of the last WAL replay (recover/load), None until then
+        self.last_recovery: dict | None = None
+        # durable-ingest log (None → in-memory-only queue, the historical
+        # contract); single-store records carry no tenant route
+        self._wal: WriteAheadLog | None = (
+            WriteAheadLog(self.wal_dir) if self.wal_dir is not None else None
+        )
         # the background ingest plane: shared drain/poison-isolation/flush
         # machinery (core/workers.py); threads start lazily on first enqueue.
         # on_batch_end runs the retention sweeper on the worker between
@@ -292,6 +334,8 @@ class HistogramStore(PoolStateView):
             queue_size=self.queue_size,
             name="histstore-ingest",
             on_batch_end=self._sweep_after_batch,
+            wal=self._wal,
+            wal_record=lambda item: (None, item[0], item[1]),
         )
         for pid, s in self.summaries.items():
             self._tree.set_leaf(pid, s.boundaries, s.sizes)
@@ -390,8 +434,12 @@ class HistogramStore(PoolStateView):
         if self.async_ingest:
             self.ingest_async(partition_id, values)
             return None
-        summ = self._summarize(partition_id, values)
+        v = _validated(values)
+        lsns = self._wal_log_sync({int(partition_id): v})
+        summ = self._summarize(partition_id, v)
         self._put(summ)
+        if self._wal is not None:
+            self._wal.mark_applied(lsns)
         return summ
 
     def ingest_summary(self, partition_id: int, hist: Histogram) -> None:
@@ -420,15 +468,19 @@ class HistogramStore(PoolStateView):
         The worker drains the whole batch into one grouped summarization;
         call :meth:`flush` for visibility.
         """
+        validated = {
+            int(pid): _validated(values) for pid, values in partitions.items()
+        }
         if self.async_ingest:
-            validated = {
-                int(pid): _validated(values)
-                for pid, values in partitions.items()
-            }
             for pid, v in validated.items():
                 self._enqueue(pid, v)
             return
-        self._apply(self._summarize_batch(dict(partitions)))
+        # sync durable path: the whole batch is appended with ONE group-
+        # commit fsync (the WAL's fsync-batching policy), then applied
+        lsns = self._wal_log_sync(validated)
+        self._apply(self._summarize_batch(validated))
+        if self._wal is not None:
+            self._wal.mark_applied(lsns)
         self._maybe_sweep()
 
     def _put(self, summ: StoredSummary) -> None:
@@ -548,8 +600,72 @@ class HistogramStore(PoolStateView):
         self._enqueue(int(partition_id), _validated(values))
 
     def _enqueue(self, pid: int, values: np.ndarray) -> None:
-        """Post-validation enqueue body shared with async ``ingest_many``."""
+        """Post-validation enqueue body shared with async ``ingest_many``.
+        With a WAL the pool appends + fsyncs the record before returning."""
         self._pool.submit((pid, values))
+
+    # ------------------------------------------------------------ WAL plane
+    def _wal_log_sync(self, parts: dict[int, np.ndarray]) -> list[int]:
+        """Append a synchronous-ingest batch to the WAL with one group-
+        commit fsync; returns the LSNs to ``mark_applied`` after the
+        apply.  No-op (empty list) without a WAL."""
+        if self._wal is None or not parts:
+            return []
+        lsns = [self._wal.append(None, pid, v) for pid, v in parts.items()]
+        self._wal.commit(lsns[-1])
+        return lsns
+
+    def wal_stats(self) -> dict | None:
+        """WAL depth / fsync-latency / footprint counters (telemetry),
+        or ``None`` when the store runs without a log."""
+        return None if self._wal is None else self._wal.stats()
+
+    def _replay_wal(self, covered_lsn: int) -> int:
+        """Re-ingest the WAL suffix not covered by the loaded snapshot.
+
+        The idempotent-replay contract (core/workers.py docstring):
+        records with ``lsn <= covered_lsn`` are covered by the snapshot's
+        state; above that, a pid already present was applied after the
+        stable capture but still made the snapshot (skip), and a pid ≤
+        the watermark was applied and later evicted by retention (skip —
+        replay must not resurrect expired partitions).  Everything else
+        is re-summarized and applied in one batch.  Returns the number of
+        partitions replayed and records recovery stats on
+        ``self.last_recovery``.
+        """
+        records = self._wal.recovered_records()
+        fresh: dict[int, np.ndarray] = {}
+        for rec in records:
+            if rec.lsn <= covered_lsn:
+                continue
+            if rec.pid in self.summaries:
+                continue
+            if self._watermark is not None and rec.pid <= self._watermark:
+                continue
+            fresh[rec.pid] = rec.values  # duplicate pids: last append wins
+        if fresh:
+            self._apply(self._summarize_batch(fresh))
+            self._maybe_sweep()
+        # scanned records are now reflected in memory (or deliberately
+        # skipped) — eligible for truncation at the next save
+        self._wal.mark_applied(rec.lsn for rec in records)
+        self.last_recovery = {
+            "records_scanned": len(records),
+            "replayed": len(fresh),
+            "skipped_covered": len(records) - len(fresh),
+            "torn_records_dropped": self._wal.torn_records_dropped,
+        }
+        return len(fresh)
+
+    def _attach_wal(self, wal_dir: str, covered_lsn: int | None) -> None:
+        """Open (or adopt) the log at ``wal_dir``, replay its uncovered
+        suffix, and route future submits through it."""
+        self.wal_dir = str(wal_dir)
+        self._wal = WriteAheadLog(self.wal_dir)
+        self._wal.ensure_position(covered_lsn)
+        self._pool.wal = self._wal
+        self._pool.wal_record = lambda item: (None, item[0], item[1])
+        self._replay_wal(-1 if covered_lsn is None else int(covered_lsn))
 
     def _apply_worker_batch(self, batch: list[tuple[int, np.ndarray]]) -> None:
         """IngestPool apply callback: one grouped summarization + one
@@ -817,13 +933,22 @@ class HistogramStore(PoolStateView):
             self.rebuild_tree()
 
     def save(self, path: str) -> None:
-        """Atomic write (tmpfile + rename) — summary files survive crashes.
+        """Atomic write (tmpfile + fsync + rename) — summary files survive
+        crashes.
 
         Persists the pre-merged tree nodes next to the leaf summaries (so a
         reloaded store serves interval queries without re-merging anything)
         plus the store configuration (``T_node``, ``engine``,
         ``cache_size``) so a reload reconstructs the same Merger.
+
+        With a WAL, this is the checkpoint half of the truncation-on-save
+        invariant: the log's ``stable_lsn`` is captured *before* the state
+        is read (everything ≤ it was applied before the snapshot, hence
+        covered), persisted as ``meta["wal_stable_lsn"]``, and — only
+        after the atomic rename succeeded — every log segment fully
+        covered by the snapshot is deleted.
         """
+        stable = None if self._wal is None else self._wal.stable_lsn
         with self._lock:
             state_meta, payload = self._state()
             meta = {
@@ -835,12 +960,18 @@ class HistogramStore(PoolStateView):
                     None if self.retention is None else self.retention.spec()
                 ),
                 "collapse": self.collapse,
+                "wal_stable_lsn": stable,
                 **state_meta,
             }
         atomic_savez(path, meta, payload)
+        if self._wal is not None:
+            self._wal.truncate(stable)
 
     @classmethod
-    def load(cls, path: str) -> "HistogramStore":
+    def load(cls, path: str, wal_dir: str | None = None) -> "HistogramStore":
+        """Restore from a summary file; with ``wal_dir``, also replay the
+        log suffix the snapshot doesn't cover (crash-consistent restore —
+        see :meth:`recover` for the missing-snapshot case)."""
         # context-managed NpzFile: every array is materialized inside the
         # block, so the fd closes here instead of leaking for the store's
         # lifetime (an NpzFile holds its file handle open until closed)
@@ -858,6 +989,26 @@ class HistogramStore(PoolStateView):
                 collapse=str(meta.get("collapse", "canonical")),
             )
             store._restore(meta, data)
+        if wal_dir is not None:
+            store._attach_wal(wal_dir, meta.get("wal_stable_lsn"))
+        return store
+
+    @classmethod
+    def recover(
+        cls, path: str, wal_dir: str, **store_kwargs
+    ) -> "HistogramStore":
+        """Crash-consistent startup: snapshot + WAL → the acked state.
+
+        If ``path`` exists it is loaded and the WAL's uncovered suffix
+        replayed on top (``load``); if the crash happened before the
+        first save, the store is rebuilt from the WAL alone using
+        ``store_kwargs`` as its configuration.  Either way, every acked
+        ingest is present and the store keeps logging to ``wal_dir``.
+        """
+        if os.path.exists(path):
+            return cls.load(path, wal_dir=wal_dir)
+        store = cls(**store_kwargs)
+        store._attach_wal(wal_dir, None)
         return store
 
     # ------------------------------------------------------------- utility

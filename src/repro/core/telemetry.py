@@ -220,6 +220,10 @@ class TelemetryHub:
     retention: RetentionPolicy | None = None
     budget: int | None = None
     shared_arena: bool = False
+    # durable ingest: a directory path gives the hub's registry a
+    # write-ahead log — recorded windows survive a trainer crash between
+    # record() and checkpoint() (core/workers.py WAL design note)
+    wal_dir: str | None = None
 
     def __post_init__(self) -> None:
         if self.registry is None:
@@ -228,13 +232,19 @@ class TelemetryHub:
                 retention=self.retention,
                 budget=self.budget,
                 shared_arena=self.shared_arena,
+                wal_dir=self.wal_dir,
             )
-        elif self.retention is not None or self.budget is not None:
+        elif (
+            self.retention is not None
+            or self.budget is not None
+            or self.wal_dir is not None
+        ):
             # an explicit registry carries its own knobs — silently
-            # ignoring these would unbound the memory they promise to cap
+            # ignoring these would unbound the memory (or void the
+            # durability) they promise
             raise ValueError(
-                "pass retention/budget to the explicit TenantRegistry, "
-                "not to TelemetryHub"
+                "pass retention/budget/wal_dir to the explicit "
+                "TenantRegistry, not to TelemetryHub"
             )
 
     def record(self, metric: str, partition_id: int, values) -> None:
@@ -252,6 +262,12 @@ class TelemetryHub:
 
     def metrics(self) -> list[str]:
         return self.registry.names()
+
+    def wal_stats(self) -> dict | None:
+        """Durable-ingest telemetry: WAL depth (records appended but not
+        yet applied), fsync count/latency, and byte/segment footprint —
+        ``None`` when the hub's registry runs without a log."""
+        return self.registry.wal_stats()
 
     def quantile(
         self, metric: str, lo: int, hi: int, q, beta: int | None = None

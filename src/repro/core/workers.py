@@ -36,16 +36,406 @@ Contract (the async-ingest consistency model of core/stream.py):
   returns (swapping out) the accumulated error records; ``close()`` stops
   the workers after a final drain of each queue.  Nothing is
   timing-dependent: synchronization is by lock/condition only.
+
+Write-ahead log: the durable-ingest contract
+--------------------------------------------
+The queue above is in-memory: a crash between ``submit`` and the next
+flush silently loses partitions the persisted npz never saw.  With a
+:class:`WriteAheadLog` attached (``IngestPool(wal=..., wal_record=...)``,
+built by ``HistogramStore(wal_dir=...)`` / ``TenantRegistry(wal_dir=...)``)
+every submitted partition is appended to a segmented on-disk log and
+**fsynced before the submit call returns** — an acked partition can
+always be replayed, so ``save``/``load`` become real checkpoint/restore
+(``HistogramStore.recover`` / ``TenantRegistry.recover``).
+
+**Record layout** (little-endian, one record per submitted partition)::
+
+    magic  b"WAL1"                      4 bytes
+    lsn    u64   log sequence number    8 bytes (monotonic, dense)
+    crc32  u32   over header+payload    4 bytes
+    hlen   u32   header length          4 bytes
+    header utf-8 json                   hlen bytes
+           {"tenant": str|null, "pid": int, "dtype": str,
+            "shape": [...], "nbytes": int}
+    payload raw little-endian array bytes   nbytes bytes
+
+Records live in segment files ``wal-<first_lsn>.log``; a segment is
+rotated once it exceeds ``segment_bytes`` (the outgoing segment is
+fsynced at rotation, so a later group commit never needs to revisit it).
+A new process always appends to a **fresh** segment — a torn tail from a
+crash is never appended over.
+
+**Fsync batching (group commit).** ``append`` buffers the record and
+assigns its LSN; ``commit(lsn)`` returns once every append up to ``lsn``
+is durable.  Concurrent committers share one ``os.fsync``: whoever takes
+the commit lock first syncs *everything appended so far* and later
+committers find their LSN already covered — acks are never issued before
+durability, but N concurrent submits cost ~1 fsync, and batch ingest
+(``ingest_many``) appends the whole batch then commits once.
+
+**Truncation-on-save invariant.** The log tracks the contiguous
+*applied* prefix (``stable_lsn``): a record is marked applied when its
+batch leaves the worker (or when the synchronous ingest path applied
+it).  ``save`` captures ``stable_lsn`` **before** reading the store
+state — every record ≤ that LSN was applied before the snapshot was
+taken, hence is covered by it — persists it as ``meta["wal_stable_lsn"]``
+and, after the atomic rename succeeds, deletes every closed segment
+whose records are all ≤ the captured LSN.  Log lifecycle is therefore
+tied to checkpoints: the log holds exactly the suffix not yet covered by
+a snapshot (plus the tail of the active segment).
+
+**Idempotent-replay contract.** Recovery scans the segments in LSN
+order, stopping at the first torn/corrupt record *of each segment* (a
+torn tail is a record whose ack never returned — dropping it is
+correct), then re-ingests records above the snapshot's
+``wal_stable_lsn`` with **pid dedup reconciled against the persisted
+watermark**: a pid already present is skipped (it was applied after the
+stable capture but still made the snapshot), and a pid ≤ the tenant's
+watermark is skipped (it was applied and later evicted by retention —
+replay must not resurrect expired partitions).  Replay is idempotent:
+recovering twice, or recovering a log whose records were all applied,
+changes nothing.  Partition ids are assumed monotone per tenant
+(they are the time axis), which is what makes the watermark rule sound.
+A *poisoned* record (one whose apply permanently fails) is still marked
+applied once its retry completes — the WAL guards against crashes, not
+bad data: poison failures surface on ``flush()`` exactly once and are
+not replayed forever.  ``ingest_summary`` bypasses the WAL (there are no
+raw values to log); durability there remains snapshot-only.
 """
 from __future__ import annotations
 
+import binascii
+import json
+import os
 import queue
+import struct
 import threading
-from typing import Callable
+import time
+from typing import Callable, NamedTuple
 
-__all__ = ["IngestPool", "PartialBatchFailure", "PoolStateView"]
+import numpy as np
+
+__all__ = [
+    "IngestPool",
+    "PartialBatchFailure",
+    "PoolStateView",
+    "WalRecord",
+    "WriteAheadLog",
+]
 
 _SENTINEL = object()  # shuts down one pool worker
+
+_WAL_MAGIC = b"WAL1"
+_WAL_PREFIX = struct.Struct("<4sQII")  # magic, lsn, crc32, header_len
+
+
+class WalRecord(NamedTuple):
+    """One durably-logged partition: ``lsn`` orders it, ``tenant`` routes
+    it (``None`` for a standalone store), ``pid``/``values`` replay it."""
+
+    lsn: int
+    tenant: str | None
+    pid: int
+    values: np.ndarray
+
+
+class WriteAheadLog:
+    """Segmented on-disk write-ahead log (format: module docstring).
+
+    Thread-safe: ``append`` serializes under the log lock, ``commit`` is
+    a group-commit fsync, ``mark_applied`` advances the contiguous
+    applied prefix that drives truncation.  Opening a directory with
+    existing segments scans them once (recovered records are kept for
+    :meth:`recovered_records`) and positions the next LSN after the last
+    valid record; new appends go to a fresh segment.
+    """
+
+    def __init__(
+        self, dir: str, *, segment_bytes: int = 4 << 20, fsync: bool = True
+    ):
+        self.dir = str(dir)
+        self.segment_bytes = int(segment_bytes)
+        self.fsync_enabled = bool(fsync)
+        os.makedirs(self.dir, exist_ok=True)
+        self._lock = threading.Lock()  # append/rotate/bookkeeping
+        self._commit_lock = threading.Lock()  # group-commit fsync
+        self._fd = None  # active segment file object (lazy)
+        self._active_path: str | None = None
+        # telemetry counters (core/telemetry.py surfaces these)
+        self.appends = 0
+        self.fsyncs = 0
+        self.fsync_seconds = 0.0
+        self.last_fsync_seconds = 0.0
+        self.bytes_written = 0
+        self.torn_records_dropped = 0
+        # closed segments: path -> (first_lsn, last_valid_lsn)
+        self._segments: dict[str, tuple[int, int]] = {}
+        self._recovered: list[WalRecord] = []
+        first = None
+        last = 0
+        for path, first_lsn, records, torn in self._scan():
+            self._recovered.extend(records)
+            self.torn_records_dropped += torn
+            last_valid = records[-1].lsn if records else first_lsn - 1
+            self._segments[path] = (first_lsn, last_valid)
+            if first is None:
+                first = first_lsn
+            last = max(last, last_valid)
+        self._next_lsn = last + 1
+        self._written_lsn = last  # highest appended (durable: on disk)
+        self._synced_lsn = last
+        # contiguous applied prefix: everything ≤ _stable was applied
+        # in-memory (→ covered by the next snapshot).  Records found on
+        # disk start *unapplied*; replay marks them.
+        self._stable = (first - 1) if first is not None else 0
+        self._applied: set[int] = set()
+
+    # ------------------------------------------------------------- append
+    def append(self, tenant: str | None, pid: int, values) -> int:
+        """Buffer one record into the active segment; returns its LSN.
+        Durability requires a subsequent :meth:`commit`."""
+        v = np.ascontiguousarray(values)
+        header = json.dumps(
+            {
+                "tenant": tenant,
+                "pid": int(pid),
+                "dtype": str(v.dtype),
+                "shape": list(v.shape),
+                "nbytes": int(v.nbytes),
+            }
+        ).encode()
+        payload = v.tobytes()
+        crc = binascii.crc32(payload, binascii.crc32(header))
+        with self._lock:
+            lsn = self._next_lsn
+            self._next_lsn += 1
+            if self._fd is None or self._fd.tell() >= self.segment_bytes:
+                self._roll(lsn)
+            buf = _WAL_PREFIX.pack(_WAL_MAGIC, lsn, crc, len(header))
+            self._fd.write(buf + header + payload)
+            self._fd.flush()  # into the OS — commit() makes it durable
+            self.appends += 1
+            self.bytes_written += len(buf) + len(header) + len(payload)
+            self._written_lsn = lsn
+        return lsn
+
+    def commit(self, upto: int | None = None) -> None:
+        """Group commit: return once every append ≤ ``upto`` (default: all
+        appends so far) is fsynced.  Concurrent committers share one
+        fsync — the first through the lock syncs for everyone."""
+        with self._lock:
+            if upto is None:
+                upto = self._written_lsn
+        if not self.fsync_enabled:
+            with self._lock:
+                self._synced_lsn = max(self._synced_lsn, upto)
+            return
+        with self._commit_lock:
+            if self._synced_lsn >= upto:
+                return  # a concurrent committer's fsync covered us
+            with self._lock:
+                fd, latest = self._fd, self._written_lsn
+            if fd is None:
+                return
+            t0 = time.perf_counter()
+            os.fsync(fd.fileno())
+            dt = time.perf_counter() - t0
+            self.fsyncs += 1
+            self.fsync_seconds += dt
+            self.last_fsync_seconds = dt
+            # rotation fsyncs the outgoing segment, so syncing the active
+            # fd covers every append ≤ latest
+            self._synced_lsn = latest
+
+    def log(self, tenant: str | None, pid: int, values) -> int:
+        """:meth:`append` + :meth:`commit` — durable before return."""
+        lsn = self.append(tenant, pid, values)
+        self.commit(lsn)
+        return lsn
+
+    def _roll(self, first_lsn: int) -> None:
+        """Rotate to a fresh segment (callers hold ``_lock``)."""
+        if self._fd is not None:
+            self._fd.flush()
+            if self.fsync_enabled:
+                os.fsync(self._fd.fileno())
+            self._fd.close()
+            # every record in the outgoing segment is ≤ written_lsn and
+            # now durable; it becomes a closed, truncatable segment
+            self._segments[self._active_path] = (
+                self._segments[self._active_path][0],
+                self._written_lsn,
+            )
+            self._synced_lsn = max(self._synced_lsn, self._written_lsn)
+        self._active_path = os.path.join(self.dir, f"wal-{first_lsn:020d}.log")
+        self._fd = open(self._active_path, "wb")
+        self._segments[self._active_path] = (first_lsn, first_lsn - 1)
+
+    # ----------------------------------------------------- applied prefix
+    def mark_applied(self, lsns) -> None:
+        """Record that these LSNs were applied in-memory; advances the
+        contiguous ``stable_lsn`` prefix that save-truncation uses."""
+        with self._lock:
+            for lsn in lsns:
+                if lsn is not None:
+                    self._applied.add(int(lsn))
+            while self._stable + 1 in self._applied:
+                self._applied.discard(self._stable + 1)
+                self._stable += 1
+
+    def ensure_position(self, last_lsn: int | None) -> None:
+        """Advance the LSN horizon to at least ``last_lsn`` (idempotent).
+
+        Recovery calls this with the snapshot's ``wal_stable_lsn``: if
+        the log directory was emptied out-of-band (truncation itself
+        always keeps the highest segment as an anchor) the next append
+        must not reuse an LSN the snapshot already claims to cover —
+        replay would silently skip it."""
+        if last_lsn is None:
+            return
+        last_lsn = int(last_lsn)
+        with self._lock:
+            if self._next_lsn <= last_lsn:
+                self._next_lsn = last_lsn + 1
+                self._written_lsn = max(self._written_lsn, last_lsn)
+                self._synced_lsn = max(self._synced_lsn, last_lsn)
+                self._stable = max(self._stable, last_lsn)
+
+    @property
+    def stable_lsn(self) -> int:
+        """Highest LSN of the contiguous applied prefix: every record ≤
+        this was applied before *now*, so a snapshot whose state is read
+        after this property returns covers all of them."""
+        with self._lock:
+            return self._stable
+
+    # ------------------------------------------------------------ replay
+    def recovered_records(self) -> list[WalRecord]:
+        """The records found on disk when this log was opened, LSN order."""
+        return list(self._recovered)
+
+    def _scan(self):
+        """Yield ``(path, first_lsn, [WalRecord], torn_count)`` per segment
+        in LSN order, stopping each segment at its first invalid record
+        (torn tail ⇒ the ack for that record never returned)."""
+        try:
+            names = sorted(
+                n
+                for n in os.listdir(self.dir)
+                if n.startswith("wal-") and n.endswith(".log")
+            )
+        except FileNotFoundError:
+            return
+        for name in names:
+            path = os.path.join(self.dir, name)
+            try:
+                first_lsn = int(name[len("wal-") : -len(".log")])
+            except ValueError:
+                continue  # not a segment file
+            records, torn = self._scan_segment(path)
+            yield path, first_lsn, records, torn
+
+    @staticmethod
+    def _scan_segment(path: str) -> tuple[list[WalRecord], int]:
+        records: list[WalRecord] = []
+        with open(path, "rb") as f:
+            data = f.read()
+        at = 0
+        while at < len(data):
+            if at + _WAL_PREFIX.size > len(data):
+                return records, 1  # torn prefix
+            magic, lsn, crc, hlen = _WAL_PREFIX.unpack_from(data, at)
+            if magic != _WAL_MAGIC:
+                return records, 1
+            body_at = at + _WAL_PREFIX.size
+            if body_at + hlen > len(data):
+                return records, 1  # torn header
+            try:
+                header = json.loads(data[body_at : body_at + hlen])
+                nbytes = int(header["nbytes"])
+            except (ValueError, KeyError, UnicodeDecodeError):
+                return records, 1
+            pay_at = body_at + hlen
+            if pay_at + nbytes > len(data):
+                return records, 1  # torn payload
+            blob = data[body_at : pay_at + nbytes]
+            if binascii.crc32(blob) != crc:
+                return records, 1  # corrupt record
+            values = np.frombuffer(
+                data[pay_at : pay_at + nbytes], dtype=header["dtype"]
+            ).reshape(header["shape"])
+            records.append(
+                WalRecord(
+                    lsn=int(lsn),
+                    tenant=header["tenant"],
+                    pid=int(header["pid"]),
+                    values=np.array(values),  # writable copy
+                )
+            )
+            at = pay_at + nbytes
+        return records, 0
+
+    # -------------------------------------------------------- truncation
+    def truncate(self, stable: int | None = None) -> list[str]:
+        """Delete every *closed* segment whose records are all ≤ ``stable``
+        (default: the current applied prefix) — the save-side half of the
+        truncation-on-save invariant.  Returns the deleted paths.
+
+        The segment with the highest first-LSN always survives (as does
+        the active one): it anchors the LSN horizon, so a process that
+        reopens a fully-truncated log can never hand out LSNs the last
+        snapshot's ``wal_stable_lsn`` already claims to cover.
+        """
+        stable = self.stable_lsn if stable is None else int(stable)
+        removed = []
+        with self._lock:
+            horizon = max(
+                (first for first, _last in self._segments.values()),
+                default=None,
+            )
+            for path, (first, last_valid) in list(self._segments.items()):
+                if (
+                    path == self._active_path
+                    or first == horizon
+                    or last_valid > stable
+                ):
+                    continue
+                try:
+                    os.unlink(path)
+                except OSError:
+                    continue  # already gone — harmless
+                del self._segments[path]
+                removed.append(path)
+        return removed
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Telemetry snapshot: depth (appended-but-not-yet-applied
+        records), fsync latency/counts, segment/byte footprint."""
+        with self._lock:
+            return {
+                "appends": self.appends,
+                "fsyncs": self.fsyncs,
+                "fsync_seconds_total": self.fsync_seconds,
+                "last_fsync_seconds": self.last_fsync_seconds,
+                "bytes_written": self.bytes_written,
+                "segments": len(self._segments),
+                "depth": self._written_lsn - self._stable,
+                "written_lsn": self._written_lsn,
+                "synced_lsn": self._synced_lsn,
+                "stable_lsn": self._stable,
+                "records_recovered": len(self._recovered),
+                "torn_records_dropped": self.torn_records_dropped,
+            }
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fd is not None:
+                self._fd.flush()
+                if self.fsync_enabled:
+                    os.fsync(self._fd.fileno())
+                self._fd.close()
+                self._fd = None
 
 
 class PartialBatchFailure(Exception):
@@ -103,12 +493,21 @@ class IngestPool:
         queue_size: int = 1024,
         name: str = "ingest",
         on_batch_end: Callable[[list], None] | None = None,
+        wal: "WriteAheadLog | None" = None,
+        wal_record: Callable[[object], tuple] | None = None,
     ):
         if workers < 1:
             raise ValueError("workers must be >= 1")
+        if wal is not None and wal_record is None:
+            raise ValueError("wal requires a wal_record extractor")
         self.apply_batch = apply_batch
         self.wrap_error = wrap_error
         self.on_batch_end = on_batch_end
+        # durable-ingest plane (module docstring): every submit is
+        # appended + group-commit-fsynced before it acks; wal_record maps
+        # a queue item to its (tenant_route, pid, raw_values) log fields
+        self.wal = wal
+        self.wal_record = wal_record
         self.workers = int(workers)
         self.queue_size = int(queue_size)
         self.name = name
@@ -129,12 +528,26 @@ class IngestPool:
     # --------------------------------------------------------------- submit
     def submit(self, item, route: int = 0) -> None:
         """Enqueue one item (blocking only when the bounded queue is full).
-        Items sharing ``route % workers`` are processed FIFO."""
+        Items sharing ``route % workers`` are processed FIFO.
+
+        With a WAL attached, the item is appended to the log before it is
+        enqueued and fsynced (group commit) before this call returns — an
+        acked submit is always replayable after a crash.  The fsync runs
+        *outside* ``ingest_mutex`` so concurrent submitters batch into
+        one fsync; a worker may apply the item before the fsync lands,
+        which is harmless (if the process dies first, the ack never
+        happened and the in-memory apply died with it).
+        """
+        lsn = None
         with self.ingest_mutex:
             self._ensure_workers()
+            if self.wal is not None:
+                lsn = self.wal.append(*self.wal_record(item))
             with self.cv:
                 self.pending += 1
-            self._queues[route % self.workers].put(item)
+            self._queues[route % self.workers].put((item, lsn))
+        if self.wal is not None:
+            self.wal.commit(lsn)  # durable before the ack
 
     def _ensure_workers(self) -> None:
         with self._state_lock:
@@ -161,10 +574,10 @@ class IngestPool:
     # ---------------------------------------------------------------- drain
     def _drain_loop(self, q: queue.Queue) -> None:
         while True:
-            item = q.get()
-            if item is _SENTINEL:
+            entry = q.get()
+            if entry is _SENTINEL:
                 return
-            batch = [item]
+            batch = [entry]  # [(item, lsn)] — lsn None without a WAL
             stop = False
             while True:  # drain whatever else is already queued — one flush
                 try:
@@ -180,19 +593,25 @@ class IngestPool:
                 return
 
     def _run_batch(self, batch: list) -> None:
+        items = [item for item, _lsn in batch]
         try:
             try:
-                self.apply_batch(batch)
+                self.apply_batch(items)
             except PartialBatchFailure as pf:
                 suspects = pf.items
             except BaseException:
-                suspects = batch
+                suspects = items
             else:
                 suspects = ()
             # isolate the poison rows: retry the suspect items one at a
             # time so a single bad item cannot drop the valid items
             # drained into the same batch (errors surface on the owner's
-            # flush())
+            # flush()).  The retries run HERE, inside the batch, before
+            # the pending count drops — close()'s shutdown sentinel (and
+            # drain()'s pending wait) therefore cannot overtake an
+            # in-flight retry and drop the still-pending non-poisoned
+            # items (pinned by tests/test_durability.py's deterministic
+            # close-vs-retry interleaving).
             for item in suspects:
                 try:
                     self.apply_batch([item])
@@ -201,11 +620,17 @@ class IngestPool:
                         self.errors.append(self.wrap_error(item, e))
             if self.on_batch_end is not None:
                 try:
-                    self.on_batch_end(batch)
+                    self.on_batch_end(items)
                 except BaseException as e:
                     with self.cv:
                         self.errors.append(self.wrap_error(None, e))
         finally:
+            if self.wal is not None:
+                # the whole batch — poison included — is done with the
+                # worker: advance the applied prefix so truncation-on-save
+                # can reclaim its segments (the WAL guards against
+                # crashes, not bad data; poison errors surfaced above)
+                self.wal.mark_applied(lsn for _item, lsn in batch)
             with self.cv:
                 self.pending -= len(batch)
                 self.cv.notify_all()

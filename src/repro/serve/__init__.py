@@ -1,1 +1,1 @@
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, HistogramService, ServeConfig

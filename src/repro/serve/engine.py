@@ -5,10 +5,17 @@ token-by-token jitted ``decode_step`` with stop handling.  The histogram
 integration is quantization calibration: per-tensor activation clip ranges
 come from merged equi-depth summaries (``calibrate()``), giving int8 scale
 factors with a bounded-rank-error quantile instead of an ad-hoc max.
+
+:class:`HistogramService` is the always-on metrics sidecar of such an
+engine: a crash-recoverable multi-tenant histogram server (the paper's
+query plane as a service) whose startup replays the write-ahead log
+against the last snapshot, so acked latency/throughput windows survive a
+process kill (core/workers.py, "Write-ahead log" design note).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Sequence
 
 import jax
@@ -17,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.histogram import Histogram, build_exact, merge_list, quantile
+from repro.core.tenant import TenantRegistry
 from repro.models.model import decode_step, forward_hidden, init_cache, prefill
 
 
@@ -119,3 +127,74 @@ class Engine:
             "rank_error_bound": 2.0 * n_total / T,
             "n_calibration_values": n_total,
         }
+
+
+class HistogramService:
+    """Crash-recoverable histogram server wrapping one data directory.
+
+    The directory holds the two durability artifacts — ``registry.npz``
+    (the last atomic snapshot) and ``wal/`` (the write-ahead log) — and
+    startup is *recovery-aware*: ``TenantRegistry.recover`` loads the
+    snapshot if present, replays the WAL suffix above its
+    ``wal_stable_lsn`` (pid-dedup + watermark reconciliation), and routes
+    all future ingest through the log.  A serving deployment therefore
+    never loses an acked metric window: kill -9 between ``record`` and
+    ``checkpoint`` replays on the next start, and ``checkpoint()``
+    truncates the log down to the uncovered suffix.
+
+    >>> svc = HistogramService(data_dir, num_buckets=128)
+    >>> svc.recovery            # {'records_scanned': ..., 'replayed': ...}
+    >>> svc.record("latency_ms", window_id, samples)
+    >>> svc.quantile("latency_ms", lo, hi, 0.95)
+    >>> svc.checkpoint()        # atomic snapshot + WAL truncation
+    """
+
+    def __init__(self, data_dir: str, **registry_kwargs):
+        self.data_dir = str(data_dir)
+        os.makedirs(self.data_dir, exist_ok=True)
+        self.snapshot_path = os.path.join(self.data_dir, "registry.npz")
+        self.wal_dir = os.path.join(self.data_dir, "wal")
+        self.registry = TenantRegistry.recover(
+            self.snapshot_path, self.wal_dir, **registry_kwargs
+        )
+        #: replay stats from this startup (records scanned/replayed,
+        #: torn records dropped) — surface these in the serving logs
+        self.recovery = self.registry.last_recovery
+
+    # ---- ingest plane ----------------------------------------------------
+    def record(self, metric: str, window_id: int, values) -> None:
+        """Durably ingest one window of raw samples (fsynced before
+        return; see the WAL design note in core/workers.py)."""
+        self.registry.ingest(metric, window_id, values)
+
+    def record_async(self, metric: str, window_id: int, values) -> None:
+        """Durable enqueue: the WAL append+fsync happens before this
+        returns, summarization happens on the worker pool."""
+        self.registry.ingest_async(metric, window_id, values)
+
+    def flush(self) -> None:
+        self.registry.flush()
+
+    # ---- query plane -----------------------------------------------------
+    def quantile(self, metric: str, lo: int, hi: int, q, beta=None):
+        return self.registry[metric].quantile_query(lo, hi, q, beta)
+
+    def query_many(self, panels, beta: int = 64, strict: bool = False):
+        return self.registry.query_many(panels, beta, strict=strict)
+
+    def metrics(self) -> list[str]:
+        return self.registry.names()
+
+    # ---- durability plane ------------------------------------------------
+    def checkpoint(self) -> str:
+        """Atomic snapshot (tempfile + fsync + rename + dir fsync) then
+        WAL truncation of the covered prefix.  Returns the path."""
+        self.registry.flush()
+        self.registry.save(self.snapshot_path)
+        return self.snapshot_path
+
+    def wal_stats(self) -> dict | None:
+        return self.registry.wal_stats()
+
+    def close(self) -> None:
+        self.registry.close()

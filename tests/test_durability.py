@@ -1,0 +1,580 @@
+"""Durable-ingest suite: WAL unit tests, crash-consistent recovery, the
+fsync discipline of ``atomic_savez``, NpzFile fd hygiene, and the
+close-vs-poison-retry interleaving of ``IngestPool``.
+
+All crash simulations are in-process: "crash" means dropping the live
+object without ``flush``/``save``/``close`` (the in-memory state dies,
+the fsynced log survives), and torn writes are literal ``truncate()``s
+of the last segment file.  Nothing here sleeps; the interleaving test is
+sequenced entirely by events.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    HistogramStore,
+    IngestPool,
+    SlidingWindow,
+    TenantRegistry,
+    WriteAheadLog,
+)
+from repro.core.stream import atomic_savez
+from repro.core.workers import PartialBatchFailure
+from repro.serve import HistogramService
+
+T = 8
+BETA = 16
+
+
+def _vals(rng, n=32):
+    return rng.normal(size=n).astype(np.float32)
+
+
+def _assert_same_answer(a, b):
+    (ha, ea), (hb, eb) = a, b
+    assert np.array_equal(np.asarray(ha.boundaries), np.asarray(hb.boundaries))
+    assert np.array_equal(np.asarray(ha.sizes), np.asarray(hb.sizes))
+    assert ea == eb
+
+
+# --------------------------------------------------------------------------
+# WriteAheadLog unit tests
+# --------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_across_reopen(tmp_path):
+    rng = np.random.default_rng(0)
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir)
+    recs = {pid: _vals(rng, 16 + pid) for pid in range(5)}
+    lsns = [wal.log("tenant-a" if pid % 2 else None, pid, v)
+            for pid, v in recs.items()]
+    assert lsns == [1, 2, 3, 4, 5]  # dense, monotone
+    wal.close()
+
+    re = WriteAheadLog(wal_dir)
+    got = re.recovered_records()
+    assert [r.lsn for r in got] == lsns
+    assert [r.pid for r in got] == list(recs)
+    assert [r.tenant for r in got] == [None, "tenant-a", None, "tenant-a", None]
+    for r in got:
+        assert np.array_equal(r.values, recs[r.pid])
+        assert r.values.flags.writeable  # safe to hand to the summarizer
+    # a reopened log resumes LSNs after the recovered tail
+    assert re.log(None, 99, _vals(rng)) == 6
+    re.close()
+
+
+def test_wal_rotation_and_fresh_segment_per_process(tmp_path):
+    rng = np.random.default_rng(1)
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir, segment_bytes=256)  # tiny: force rolls
+    for pid in range(6):
+        wal.log(None, pid, _vals(rng, 24))
+    segs = sorted(p for p in os.listdir(wal_dir) if p.startswith("wal-"))
+    assert len(segs) > 1  # rotated
+    wal.close()
+    # a new process appends to a FRESH segment, never over a torn tail
+    re = WriteAheadLog(wal_dir, segment_bytes=256)
+    re.log(None, 6, _vals(rng, 24))
+    segs2 = sorted(p for p in os.listdir(wal_dir) if p.startswith("wal-"))
+    assert len(segs2) == len(segs) + 1
+    assert [r.pid for r in WriteAheadLog(wal_dir).recovered_records()] == list(
+        range(7)
+    )
+
+
+def test_wal_torn_tail_dropped_valid_prefix_survives(tmp_path):
+    rng = np.random.default_rng(2)
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir)
+    for pid in range(3):
+        wal.log(None, pid, _vals(rng))
+    wal.close()
+    seg = sorted(tmp_path.glob("wal/wal-*.log"))[-1]
+    sz = seg.stat().st_size
+    with open(seg, "r+b") as f:
+        f.truncate(sz - 11)  # cut into the last record's payload
+
+    re = WriteAheadLog(wal_dir)
+    assert [r.pid for r in re.recovered_records()] == [0, 1]
+    assert re.torn_records_dropped == 1
+    # LSNs resume after the last VALID record — the torn lsn is reused,
+    # which is correct: its ack never returned
+    assert re.log(None, 9, _vals(rng)) == 3
+
+
+def test_wal_corrupt_record_stops_segment_scan(tmp_path):
+    rng = np.random.default_rng(3)
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir)
+    for pid in range(3):
+        wal.log(None, pid, _vals(rng))
+    wal.close()
+    seg = sorted(tmp_path.glob("wal/wal-*.log"))[-1]
+    blob = bytearray(seg.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF  # flip a payload byte mid-file
+    seg.write_bytes(bytes(blob))
+
+    re = WriteAheadLog(wal_dir)
+    got = [r.pid for r in re.recovered_records()]
+    assert got == [0] or got == [0, 1]  # prefix before the corruption
+    assert re.torn_records_dropped == 1
+
+
+def test_wal_mark_applied_contiguous_prefix():
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        wal = WriteAheadLog(d)
+        rng = np.random.default_rng(4)
+        for pid in range(4):
+            wal.log(None, pid, _vals(rng))
+        assert wal.stable_lsn == 0
+        wal.mark_applied([2, 3])  # out of order: prefix must NOT advance
+        assert wal.stable_lsn == 0
+        wal.mark_applied([1])
+        assert wal.stable_lsn == 3  # 1 joined → 1..3 contiguous
+        wal.mark_applied([4])
+        assert wal.stable_lsn == 4
+        assert wal.stats()["depth"] == 0
+        wal.close()
+
+
+def test_wal_truncate_keeps_horizon_segment(tmp_path):
+    rng = np.random.default_rng(5)
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir, segment_bytes=256)
+    for pid in range(6):
+        wal.log(None, pid, _vals(rng, 24))
+    wal.mark_applied(range(1, 7))
+    wal.close()
+
+    re = WriteAheadLog(wal_dir, segment_bytes=256)
+    re.mark_applied(range(1, 7))
+    removed = re.truncate()
+    assert removed  # covered segments reclaimed...
+    left = sorted(tmp_path.glob("wal/wal-*.log"))
+    assert len(left) >= 1  # ...but the highest one is the LSN anchor
+    re.close()
+    # the anchor is what lets a NEW process resume instead of reusing
+    # LSNs a snapshot already claims to cover
+    re2 = WriteAheadLog(wal_dir, segment_bytes=256)
+    assert re2.log(None, 6, _vals(rng, 24)) == 7
+
+
+def test_wal_ensure_position_guards_emptied_dir(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    wal.ensure_position(41)
+    assert wal.log(None, 0, np.zeros(4, np.float32)) == 42
+    wal.ensure_position(10)  # idempotent: never regresses
+    assert wal.log(None, 1, np.zeros(4, np.float32)) == 43
+    wal.close()
+
+
+def test_wal_group_commit_batches_fsyncs(tmp_path, monkeypatch):
+    calls = []
+    real_fsync = os.fsync
+
+    def recording_fsync(fd):
+        calls.append(fd)
+        real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", recording_fsync)
+    rng = np.random.default_rng(6)
+    store = HistogramStore(num_buckets=T, wal_dir=str(tmp_path / "wal"))
+    store.ingest_many({pid: _vals(rng) for pid in range(8)})
+    stats = store.wal_stats()
+    assert stats["appends"] == 8
+    assert stats["fsyncs"] == 1  # one group commit for the whole batch
+    assert stats["synced_lsn"] == 8  # ...and it covered every append
+    assert len(calls) == 1
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# satellite 1: atomic_savez fsync discipline
+# --------------------------------------------------------------------------
+
+
+def test_atomic_savez_fsyncs_file_then_dir(tmp_path, monkeypatch):
+    import stat as stat_mod
+
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+
+    def recording_fsync(fd):
+        kind = "dir" if stat_mod.S_ISDIR(os.fstat(fd).st_mode) else "file"
+        events.append(("fsync", kind))
+        real_fsync(fd)
+
+    def recording_replace(src, dst):
+        events.append(("replace", None))
+        real_replace(src, dst)
+
+    monkeypatch.setattr(os, "fsync", recording_fsync)
+    monkeypatch.setattr(os, "replace", recording_replace)
+
+    path = str(tmp_path / "out.npz")
+    atomic_savez(path, {"k": 1}, {"a": np.arange(4, dtype=np.float32)})
+    assert os.path.exists(path)
+    # data blocks durable BEFORE the rename, the rename itself AFTER
+    assert events == [
+        ("fsync", "file"),
+        ("replace", None),
+        ("fsync", "dir"),
+    ]
+
+
+# --------------------------------------------------------------------------
+# satellite 2: no NpzFile fd leaks across load cycles
+# --------------------------------------------------------------------------
+
+
+def _open_fd_count() -> int:
+    return len(os.listdir("/proc/self/fd"))
+
+
+@pytest.mark.skipif(
+    not os.path.isdir("/proc/self/fd"), reason="needs procfs"
+)
+def test_registry_load_cycles_do_not_leak_fds(tmp_path):
+    rng = np.random.default_rng(7)
+    path = str(tmp_path / "reg.npz")
+    reg = TenantRegistry(num_buckets=T)
+    for name in ("a", "b"):
+        reg.ingest_many(name, {pid: _vals(rng) for pid in range(3)})
+    reg.save(path)
+    reg.close()
+
+    TenantRegistry.load(path).close()  # warm any lazy module state
+    before = _open_fd_count()
+    for _ in range(100):
+        TenantRegistry.load(path).close()
+    after = _open_fd_count()
+    # an NpzFile leak costs 1 fd per cycle → +100; allow transient slack
+    assert after - before <= 3, f"fd leak: {before} -> {after}"
+
+
+@pytest.mark.skipif(
+    not os.path.isdir("/proc/self/fd"), reason="needs procfs"
+)
+def test_recover_cycles_do_not_leak_fds(tmp_path):
+    rng = np.random.default_rng(8)
+    path = str(tmp_path / "reg.npz")
+    wal_dir = str(tmp_path / "wal")
+    reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+    reg.ingest("a", 0, _vals(rng))
+    reg.save(path)
+    reg.close()
+
+    TenantRegistry.recover(path, wal_dir, num_buckets=T).close()
+    before = _open_fd_count()
+    for _ in range(50):
+        TenantRegistry.recover(path, wal_dir, num_buckets=T).close()
+    after = _open_fd_count()
+    assert after - before <= 3, f"fd leak: {before} -> {after}"
+
+
+# --------------------------------------------------------------------------
+# satellite 3: close() cannot overtake an in-flight poison retry
+# --------------------------------------------------------------------------
+
+
+def test_close_racing_partial_batch_retry_drops_nothing():
+    """Deterministic interleaving (events only, no sleeps):
+
+    1. a blocker item holds the worker while poison+good pile up behind it,
+       so they drain into ONE batch;
+    2. the batch apply raises ``PartialBatchFailure([poison])``;
+    3. the poison retry BLOCKS until ``close()`` has been called from
+       another thread — the shutdown sentinel is now queued behind the
+       in-flight batch;
+    4. the retry fails, the batch finishes, close() joins.
+
+    The non-poisoned item must have applied exactly once, the poison
+    error must surface, and nothing may strand in ``pending``.
+    """
+    applied = []
+    batch_entered = threading.Event()
+    blocker_release = threading.Event()
+    retry_entered = threading.Event()
+    close_called = threading.Event()
+
+    def apply_batch(items):
+        if items == ["blocker"]:
+            batch_entered.set()
+            assert blocker_release.wait(10)
+            applied.append("blocker")
+            return
+        if len(items) > 1:  # the drained batch [poison, good]
+            applied.extend(i for i in items if i != "poison")
+            raise PartialBatchFailure([i for i in items if i == "poison"])
+        # the isolated poison retry: hold until close() is in flight
+        retry_entered.set()
+        assert close_called.wait(10)
+        raise RuntimeError("still poison")
+
+    pool = IngestPool(
+        apply_batch=apply_batch,
+        wrap_error=lambda item, exc: (item, exc),
+        workers=1,
+    )
+    pool.submit("blocker")
+    assert batch_entered.wait(10)  # worker is busy: the rest will co-batch
+    pool.submit("poison")
+    pool.submit("good")
+    blocker_release.set()
+    assert retry_entered.wait(10)  # worker is inside the poison retry
+
+    closer = threading.Thread(
+        target=lambda: (close_called.set(), pool.close())
+    )
+    closer.start()
+    closer.join(10)
+    assert not closer.is_alive()
+
+    assert applied == ["blocker", "good"]  # good applied exactly once
+    assert pool.pending == 0  # nothing stranded
+    errs = pool.errors
+    assert len(errs) == 1 and errs[0][0] == "poison"
+
+
+def test_poison_batch_still_advances_wal_stable_prefix(tmp_path):
+    """A poisoned record is marked applied once its retry completes — the
+    WAL guards against crashes, not bad data (design note invariant)."""
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+
+    def apply_batch(items):
+        if any(pid == 1 for pid, _v in items):
+            raise PartialBatchFailure(
+                [(pid, v) for pid, v in items if pid == 1]
+            )
+
+    pool = IngestPool(
+        apply_batch=apply_batch,
+        wrap_error=lambda item, exc: (item, exc),
+        workers=1,
+        wal=wal,
+        wal_record=lambda item: (None, item[0], item[1]),
+    )
+    for pid in range(3):
+        pool.submit((pid, np.zeros(4, np.float32)))
+    errs = pool.drain()
+    assert [item[0] for item, _e in errs] == [1]
+    assert wal.stable_lsn == 3  # poison lsn did not wedge the prefix
+    pool.close()
+    wal.close()
+
+
+# --------------------------------------------------------------------------
+# crash-consistent recovery: store and registry
+# --------------------------------------------------------------------------
+
+
+def test_store_crash_before_flush_recovers_bit_identical(tmp_path):
+    rng = np.random.default_rng(9)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "store.npz")
+    data = {pid: _vals(rng, 64) for pid in range(6)}
+
+    st = HistogramStore(num_buckets=T, wal_dir=wal_dir)
+    for pid, v in data.items():
+        st.ingest_async(pid, v)  # every ack is fsynced...
+    del st  # ...then the process dies before flush/save
+
+    rec = HistogramStore.recover(snap, wal_dir, num_buckets=T)
+    assert rec.last_recovery["replayed"] == 6
+    ref = HistogramStore(num_buckets=T)
+    for pid, v in data.items():
+        ref.ingest(pid, v)
+    _assert_same_answer(rec.query(0, 5, BETA), ref.query(0, 5, BETA))
+    rec.close()
+    ref.close()
+
+
+def test_save_truncates_and_reload_replays_nothing(tmp_path):
+    rng = np.random.default_rng(10)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "store.npz")
+    st = HistogramStore(num_buckets=T, wal_dir=wal_dir)
+    st.ingest_many({pid: _vals(rng) for pid in range(4)})
+    st.save(snap)
+    assert st.wal_stats()["stable_lsn"] == 4
+    st.close()
+
+    re = HistogramStore.load(snap, wal_dir=wal_dir)
+    assert re.last_recovery["replayed"] == 0  # snapshot covers the log
+    assert re.ids() == [0, 1, 2, 3]
+    re.close()
+
+
+def test_lsn_horizon_survives_full_truncation(tmp_path):
+    """Regression: save() truncating EVERY segment must not let a new
+    process restart LSNs below the snapshot's ``wal_stable_lsn`` — the
+    next acked ingest would be silently skipped on recovery."""
+    rng = np.random.default_rng(11)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "store.npz")
+    st = HistogramStore(num_buckets=T, wal_dir=wal_dir)
+    st.ingest_many({pid: _vals(rng) for pid in range(4)})
+    st.save(snap)  # truncation point: the whole log is covered
+    st.close()
+
+    st2 = HistogramStore.load(snap, wal_dir=wal_dir)
+    st2.ingest(4, _vals(rng))  # must get an lsn ABOVE wal_stable_lsn
+    del st2  # crash
+
+    rec = HistogramStore.recover(snap, wal_dir, num_buckets=T)
+    assert rec.ids() == [0, 1, 2, 3, 4]
+    rec.close()
+
+
+def test_replay_is_idempotent(tmp_path):
+    rng = np.random.default_rng(12)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "store.npz")
+    st = HistogramStore(num_buckets=T, wal_dir=wal_dir)
+    st.ingest_many({pid: _vals(rng) for pid in range(5)})
+    del st
+
+    rec1 = HistogramStore.recover(snap, wal_dir, num_buckets=T)
+    a1 = rec1.query(0, 4, BETA)
+    del rec1  # crash again without saving
+    rec2 = HistogramStore.recover(snap, wal_dir, num_buckets=T)
+    assert rec2.ids() == [0, 1, 2, 3, 4]
+    _assert_same_answer(rec2.query(0, 4, BETA), a1)
+    rec2.close()
+
+
+def test_replay_respects_watermark_and_dedups_pids(tmp_path):
+    """Reconciliation rules: a logged pid ≤ the snapshot watermark was
+    evicted by retention (never resurrect); a duplicate pid takes the
+    LAST append; a pid already present in the snapshot is skipped."""
+    rng = np.random.default_rng(13)
+    snap = str(tmp_path / "store.npz")
+    wal_dir = str(tmp_path / "wal")
+
+    st = HistogramStore(num_buckets=T, retention=SlidingWindow(2))
+    st.ingest_many({pid: _vals(rng) for pid in range(4)})
+    assert st.ids() == [2, 3]  # 0,1 aged out → watermark 1
+    st.save(snap)
+    st.close()
+
+    wal = WriteAheadLog(wal_dir)
+    wal.log(None, 0, _vals(rng))  # ≤ watermark: must NOT resurrect
+    wal.log(None, 3, _vals(rng))  # already present: skipped
+    stale = _vals(rng)
+    final = _vals(rng)
+    wal.log(None, 5, stale)
+    wal.log(None, 5, final)  # duplicate pid: last append wins
+    wal.close()
+
+    rec = HistogramStore.load(snap, wal_dir=wal_dir)
+    # pid 0 not resurrected, pid 3 not double-applied, pid 5 replayed;
+    # SlidingWindow(2) swept after replay: exactly the 2 newest remain
+    assert rec.ids() == [3, 5]
+    ref = HistogramStore(num_buckets=T)
+    ref.ingest(5, final)
+    _assert_same_answer(rec.query(5, 5, BETA), ref.query(5, 5, BETA))
+    rec.close()
+    ref.close()
+
+
+def test_registry_recovery_bit_matches_reference(tmp_path):
+    rng = np.random.default_rng(14)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "reg.npz")
+    data = {
+        (t, pid): _vals(rng, 48) for t in ("a", "b") for pid in range(4)
+    }
+
+    reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+    for (t, pid), v in data.items():
+        reg.ingest_async(t, pid, v)
+    del reg  # crash with everything still in flight
+
+    rec = TenantRegistry.recover(snap, wal_dir, num_buckets=T)
+    ref = TenantRegistry(num_buckets=T)
+    for (t, pid), v in data.items():
+        ref.ingest(t, pid, v)
+    panels = [("a", 0, 3), ("b", 1, 2), ("a", 2, 3)]
+    for got, want in zip(
+        rec.query_many(panels, BETA), ref.query_many(panels, BETA)
+    ):
+        _assert_same_answer(got, want)
+    rec.close()
+    ref.close()
+
+
+def test_registry_torn_tail_drops_only_last_record(tmp_path):
+    rng = np.random.default_rng(15)
+    wal_dir = str(tmp_path / "wal")
+    snap = str(tmp_path / "reg.npz")
+    reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+    for pid in range(3):
+        reg.ingest("t", pid, _vals(rng, 40))
+    del reg
+    seg = sorted((tmp_path / "wal").glob("wal-*.log"))[-1]
+    with open(seg, "r+b") as f:
+        f.truncate(seg.stat().st_size - 13)
+
+    rec = TenantRegistry.recover(snap, wal_dir, num_buckets=T)
+    assert rec.last_recovery["torn_records_dropped"] == 1
+    assert rec["t"].ids() == [0, 1]
+    rec.close()
+
+
+def test_store_wal_record_without_tenant_rejected_by_registry(tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    wal = WriteAheadLog(wal_dir)
+    wal.log(None, 0, np.zeros(8, np.float32))  # a store's record
+    wal.close()
+    with pytest.raises(ValueError, match="tenant"):
+        TenantRegistry.recover(
+            str(tmp_path / "none.npz"), wal_dir, num_buckets=T
+        )
+
+
+# --------------------------------------------------------------------------
+# recovery-aware serving startup
+# --------------------------------------------------------------------------
+
+
+def test_histogram_service_recovers_after_kill(tmp_path):
+    rng = np.random.default_rng(16)
+    data_dir = str(tmp_path / "svc")
+    svc = HistogramService(data_dir, num_buckets=T)
+    assert svc.recovery["records_scanned"] == 0  # cold start
+    for w in range(3):
+        svc.record("latency_ms", w, _vals(rng, 64))
+    svc.checkpoint()
+    svc.record("latency_ms", 3, _vals(rng, 64))  # acked after snapshot
+    del svc  # kill -9
+
+    svc2 = HistogramService(data_dir, num_buckets=T)
+    assert svc2.recovery["replayed"] == 1  # just the uncovered suffix
+    assert svc2.registry["latency_ms"].ids() == [0, 1, 2, 3]
+    q = svc2.quantile("latency_ms", 0, 3, 0.95)
+    assert np.isfinite(float(np.asarray(q)))
+    assert svc2.wal_stats()["depth"] == 0
+    svc2.close()
+
+
+def test_telemetry_hub_wal_passthrough(tmp_path):
+    from repro.core.telemetry import TelemetryHub
+
+    hub = TelemetryHub(T=T, wal_dir=str(tmp_path / "wal"))
+    hub.record("m", 0, np.ones(16, np.float32))
+    stats = hub.wal_stats()
+    assert stats is not None and stats["appends"] == 1
+    hub.close()
+    with pytest.raises(ValueError):
+        TelemetryHub(
+            T=T,
+            registry=TenantRegistry(num_buckets=T),
+            wal_dir=str(tmp_path / "wal2"),
+        )
