@@ -1,0 +1,358 @@
+"""Chaos plane: disarmed-failpoint overhead + fault-schedule drill.
+
+Two questions, machine-checked (the acceptance criteria of the
+failpoint/self-healing subsystem, see core/faults.py):
+
+  * **What does the chaos plane cost when nothing is armed?**  Whole-
+    pipeline A/B timing cannot resolve a nanoseconds-per-site effect
+    under jit-dispatch noise, so the overhead is bounded analytically
+    from two low-noise measurements: the per-call cost of a disarmed
+    ``faults.hit`` (tight-loop, min-of-reps) and the number of failpoint
+    hits each workload actually performs (counted with a delegating
+    wrapper).  ``overhead_ratio = 1 + hits × per_call / workload_time``
+    — an upper bound, since it charges the full call cost on top of the
+    measured end-to-end time.  CI asserts ``overhead_ok``: both the
+    ingest and query ratios stay ≤ 1.01 (the ≤ 1 % design rule).
+  * **Does the plane actually heal?**  A fixed-seed fault drill — ENOSPC
+    and torn WAL appends, flaky fsyncs, worker crashes, poisoned
+    applies, failed merge dispatches — runs a multi-tenant script, then
+    crashes and recovers.  Reported: ``degraded_rate`` (queries served
+    degraded instead of failing while the merge failpoint was armed),
+    ``recovery_seconds``, ``acked_loss`` (must be 0), and
+    ``non_degraded_bit_identical`` (every fresh answer under chaos and
+    every recovered partition bit-matches a fault-free replica).
+
+Results print as CSV rows and are written to ``BENCH_faults.json``
+(schema ``bench_faults/v1``; CI smoke-checks it at tiny sizes via
+``--smoke``).
+
+Run standalone: ``PYTHONPATH=src python benchmarks/faults.py``
+or as a section of ``python -m benchmarks.run --only faults``.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import IngestBackpressure, TenantRegistry, faults
+
+SCHEMA = "bench_faults/v1"
+
+T = 32
+BETA = 16
+
+
+def _hit_ns_per_call(reps: int, n: int = 200_000) -> float:
+    """Min-of-reps per-call cost of a disarmed faults.hit — the one
+    module-global boolean read every production site pays."""
+    hit = faults.hit
+    best = float("inf")
+    for _ in range(reps + 1):  # first rep doubles as warm-up
+        t0 = time.perf_counter()
+        for _ in range(n):
+            hit("bench.disarmed")
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best * 1e9
+
+
+@contextlib.contextmanager
+def _counting_hit(counter: list):
+    """Count how many failpoint sites a workload actually crosses,
+    delegating to the real (disarmed) hit."""
+    real = faults.hit
+
+    def counting(name, default=None, **ctx):
+        counter[0] += 1
+        return real(name, default, **ctx)
+
+    faults.hit = counting
+    try:
+        yield
+    finally:
+        faults.hit = real
+
+
+def _time_min(fn, reps: int) -> float:
+    fn()  # warm-up: jit caches, allocator
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _ingest_once(parts):
+    """Sync-ingest the stream partition by partition (one tenant.apply
+    failpoint site per call)."""
+    reg = TenantRegistry(num_buckets=T)
+    for pid, v in parts.items():
+        reg.ingest("m", pid, v)
+    reg.close()
+
+
+def _query_once(reg, panels):
+    """Cold dashboard batch: caches invalidated so the rep pays the
+    merge dispatch — and its tenant.merge failpoint site."""
+    for name in reg.names():
+        with reg[name]._lock:
+            reg[name]._tree._invalidate()
+    reg.query_many(panels, BETA, strict=False)
+
+
+def _chaos_drill(base: str, seed: int, n_ops: int) -> dict:
+    """Fixed-seed fault schedule over ingest/query/checkpoint, then
+    crash + recover.  Mirrors tests/test_chaos_props.py, sized for a
+    benchmark row."""
+    rng = np.random.default_rng(seed)
+    tenants = ["svc-a", "svc-b"]
+    snap = os.path.join(base, "reg.npz")
+    wal_dir = os.path.join(base, "wal")
+    reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+    oracle: dict[tuple[str, int], np.ndarray] = {}
+    must: set[tuple[str, int]] = set()
+    next_pid = {t: 0 for t in tenants}
+    queries = degraded = 0
+    observed = []  # (tenant, ids, (hist, eps)) answered fresh under chaos
+
+    def draw_item():
+        t = tenants[int(rng.integers(0, len(tenants)))]
+        next_pid[t] += int(rng.integers(1, 3))
+        v = rng.normal(size=256).astype(np.float32)
+        oracle[(t, next_pid[t])] = v
+        return t, next_pid[t], v
+
+    with contextlib.ExitStack() as stack:
+        for name, kw in [
+            ("wal.append", dict(exc=OSError(28, "ENOSPC"), prob=0.08)),
+            ("wal.append.torn", dict(action=lambda **c: 9, prob=0.06)),
+            ("wal.fsync", dict(exc=OSError(5, "EIO"), prob=0.08)),
+            ("pool.batch", dict(prob=0.10)),
+            ("tenant.apply", dict(prob=0.08)),
+            ("tenant.merge", dict(prob=0.25)),
+        ]:
+            stack.enter_context(faults.inject(name, seed=seed, **kw))
+        for i in range(n_ops):
+            op = rng.integers(0, 10)
+            if op < 4:
+                t, pid, v = draw_item()
+                try:
+                    reg.ingest(t, pid, v)
+                    must.add((t, pid))
+                except (faults.FaultError, OSError):
+                    pass
+            elif op < 7:
+                t, pid, v = draw_item()
+                try:
+                    reg.ingest_async(t, pid, v)
+                    must.add((t, pid))
+                except IngestBackpressure:
+                    pass
+            elif op < 8:
+                for t, pid, _e in reg._pool.drain():
+                    must.discard((t, pid))
+                reg.save(snap)
+            else:
+                for t in tenants:
+                    if t in reg and reg[t].ids():
+                        ids = reg[t].ids()
+                        [ans] = reg.query_many(
+                            [(t, min(ids), max(ids))],
+                            BETA,
+                            strict=False,
+                            degraded_ok=True,
+                        )
+                        queries += 1
+                        if getattr(ans, "degraded", False):
+                            degraded += 1
+        for t, pid, _e in reg._pool.drain():
+            must.discard((t, pid))
+        for t in tenants:
+            if t in reg and reg[t].ids():
+                ids = reg[t].ids()
+                [ans] = reg.query_many(
+                    [(t, min(ids), max(ids))],
+                    BETA,
+                    strict=False,
+                    degraded_ok=True,
+                )
+                queries += 1
+                if getattr(ans, "degraded", False):
+                    degraded += 1
+                else:
+                    observed.append((t, list(ids), ans))
+    del reg  # crash: snapshot + log survive, memory does not
+
+    t0 = time.perf_counter()
+    rec = TenantRegistry.recover(snap, wal_dir, salvage=True, num_buckets=T)
+    recovery_seconds = time.perf_counter() - t0
+
+    acked_loss = sum(
+        1
+        for t, pid in must
+        if t not in rec or pid not in rec[t].summaries
+    )
+    bit_identical = True
+    for t, ids, (hist, eps) in observed:  # fresh answers under chaos
+        ref = TenantRegistry(num_buckets=T)
+        ref.ingest_many(t, {pid: oracle[(t, pid)] for pid in ids})
+        [(wh, we)] = ref.query_many(
+            [(t, min(ids), max(ids))], BETA, strict=False
+        )
+        bit_identical &= (
+            np.array_equal(np.asarray(hist.boundaries), np.asarray(wh.boundaries))
+            and np.array_equal(np.asarray(hist.sizes), np.asarray(wh.sizes))
+            and eps == we
+        )
+        ref.close()
+    for t in rec.names():  # recovered state vs fault-free replica
+        ids = rec[t].ids()
+        if not ids:
+            continue
+        ref = TenantRegistry(num_buckets=T)
+        ref.ingest_many(t, {pid: oracle[(t, pid)] for pid in ids})
+        a = rec.query_many([(t, min(ids), max(ids))], BETA, strict=False)[0]
+        b = ref.query_many([(t, min(ids), max(ids))], BETA, strict=False)[0]
+        bit_identical &= (
+            np.array_equal(np.asarray(a[0].boundaries), np.asarray(b[0].boundaries))
+            and np.array_equal(np.asarray(a[0].sizes), np.asarray(b[0].sizes))
+            and a[1] == b[1]
+        )
+        ref.close()
+    rec.close()
+    return {
+        "ops": n_ops,
+        "queries": queries,
+        "degraded_answers": degraded,
+        "degraded_rate": degraded / max(1, queries),
+        "acked": len(must),
+        "acked_loss": acked_loss,
+        "recovery_seconds": recovery_seconds,
+        "non_degraded_bit_identical": bool(bit_identical),
+    }
+
+
+def main(
+    emit,
+    *,
+    partitions: int = 48,
+    values: int = 4096,
+    reps: int = 5,
+    chaos_ops: int = 48,
+    out_path: str = "BENCH_faults.json",
+) -> dict:
+    rng = np.random.default_rng(0)
+    parts = {
+        pid: rng.lognormal(-1.8, 0.55, size=values).astype(np.float32)
+        for pid in range(partitions)
+    }
+    base = tempfile.mkdtemp(prefix="bench-faults-")
+    try:
+        # ---- disarmed overhead: per-site cost × sites crossed ----
+        hit_ns = _hit_ns_per_call(reps)
+
+        ingest_hits = [0]
+        with _counting_hit(ingest_hits):
+            _ingest_once(parts)
+        ingest_seconds = _time_min(lambda: _ingest_once(parts), reps)
+        ingest_ratio = 1.0 + ingest_hits[0] * hit_ns * 1e-9 / ingest_seconds
+
+        qreg = TenantRegistry(num_buckets=T)
+        half = max(1, partitions // 2)
+        qreg.ingest_many("m", {p: parts[p] for p in range(half)})
+        qreg.ingest_many("n", {p: parts[p] for p in range(half, partitions)})
+        panels = [("m", 0, half - 1), ("n", half, partitions - 1)]
+        query_hits = [0]
+        with _counting_hit(query_hits):
+            _query_once(qreg, panels)
+        query_seconds = _time_min(lambda: _query_once(qreg, panels), reps)
+        qreg.close()
+        query_ratio = 1.0 + query_hits[0] * hit_ns * 1e-9 / query_seconds
+        overhead_ok = ingest_ratio <= 1.01 and query_ratio <= 1.01
+
+        # ---- fixed-seed chaos drill ----
+        chaos = _chaos_drill(os.path.join(base, "chaos"), 7, chaos_ops)
+
+        result = {
+            "schema": SCHEMA,
+            "partitions": partitions,
+            "values_per_partition": values,
+            "T": T,
+            "beta": BETA,
+            "overhead": {
+                "hit_ns_per_call": hit_ns,
+                "ingest_seconds": ingest_seconds,
+                "ingest_failpoint_hits": ingest_hits[0],
+                "ingest_overhead_ratio": ingest_ratio,
+                "query_seconds": query_seconds,
+                "query_failpoint_hits": query_hits[0],
+                "query_overhead_ratio": query_ratio,
+            },
+            "overhead_ok": overhead_ok,
+            "chaos": chaos,
+            "acked_loss": chaos["acked_loss"],
+            "non_degraded_bit_identical": chaos["non_degraded_bit_identical"],
+        }
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+
+        emit(
+            "faults_disarmed_overhead_ingest",
+            ingest_ratio,
+            f"{ingest_hits[0]} sites × {hit_ns:.0f} ns over "
+            f"{partitions}×{values} f32 sync ingest "
+            f"(gate ≤ 1.01: {'ok' if ingest_ratio <= 1.01 else 'FAIL'})",
+        )
+        emit(
+            "faults_disarmed_overhead_query",
+            query_ratio,
+            f"{query_hits[0]} sites × {hit_ns:.0f} ns over a cold "
+            "2-tenant dashboard "
+            f"(gate ≤ 1.01: {'ok' if query_ratio <= 1.01 else 'FAIL'})",
+        )
+        emit(
+            "faults_chaos_degraded_rate",
+            chaos["degraded_rate"],
+            f"{chaos['degraded_answers']}/{chaos['queries']} answers "
+            "served degraded under the armed schedule "
+            f"(acked loss {chaos['acked_loss']})",
+        )
+        emit(
+            "faults_chaos_recovery_seconds",
+            chaos["recovery_seconds"],
+            f"{chaos['acked']} acked records, bit-identical="
+            f"{chaos['non_degraded_bit_identical']}",
+        )
+        emit("faults_json", 0.0, f"written to {out_path}")
+        return result
+    finally:
+        faults.reset()
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes for CI: validates the pipeline + JSON schema only",
+    )
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    kw = dict(out_path=args.out)
+    if args.smoke:
+        kw.update(partitions=12, values=2048, reps=3, chaos_ops=24)
+    print("name,value,derived")
+    main(
+        lambda name, v, derived="": print(
+            f"{name},{v:.3f},{derived}", flush=True
+        ),
+        **kw,
+    )

@@ -21,6 +21,10 @@
   * durability        — write-ahead-log ingest overhead vs no-WAL +
                         crash-recovery fidelity across three kill points
                         (writes BENCH_durability.json)
+  * faults            — disarmed-failpoint overhead bound (≤ 1 % gate on
+                        ingest + query) + fixed-seed chaos drill: degraded
+                        rate, recovery time, zero acked loss
+                        (writes BENCH_faults.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -30,6 +34,7 @@ from benchmarks import core_micro, error_vs_T, error_vs_days, table2_runtimes
 from benchmarks import ingest_throughput, interval_query, multi_tenant
 from benchmarks import arena as arena_bench
 from benchmarks import durability as durability_bench
+from benchmarks import faults as faults_bench
 from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
 
@@ -55,6 +60,7 @@ def main() -> None:
         "retention": retention_bench.main,
         "arena": arena_bench.main,
         "durability": durability_bench.main,
+        "faults": faults_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -268,6 +268,76 @@ def main() -> None:
               f"→ days {days[0]}-{days[-1]} all present "
               f"(acked loss: {6 - len(days)})")
         crashed.close()
+
+    # failures aren't an exception, they're the workload: the serving
+    # plane is threaded with named failpoints (core/faults.py) so chaos
+    # drills run in-process.  Arm a fault schedule and the plane degrades
+    # instead of failing — stale answers are served flagged, with an
+    # honestly widened ε; a per-tenant circuit breaker quarantines a
+    # poisoned service (probing it back after cooldown) while the rest
+    # keep serving; the integrity scrubber rebuilds bit-rotted summaries
+    # from the WAL.  health() is the one pane of glass over all of it.
+    print("\n== chaos drill (failpoints, degraded serving, self-healing) ==")
+    import dataclasses
+
+    from repro.core import BreakerPolicy, TenantQuarantined, faults
+
+    with tempfile.TemporaryDirectory() as d:
+        chaos = TenantRegistry(
+            num_buckets=256,
+            wal_dir=os.path.join(d, "wal"),
+            breaker=BreakerPolicy(threshold=2, cooldown=30.0),
+        )
+        week = {dy: svc_days["svc-00"][dy] for dy in range(6)}
+        chaos.ingest_many("frontend", week)
+        # degraded_ok opts this dashboard into stale-but-flagged serving:
+        # fresh answers also record the membership snapshot that later
+        # bounds how far a stale answer can have drifted
+        [fresh] = chaos.query_many([("frontend", 0, 6)], 64,
+                                   strict=False, degraded_ok=True)
+
+        # the merge path goes down mid-refresh: the cached last-known-good
+        # answer is served, flagged, its ε widened by the drift since
+        chaos.ingest("frontend", 6, svc_days["svc-00"][6])
+        with faults.inject("tenant.merge"):
+            [ans] = chaos.query_many([("frontend", 0, 6)], 64,
+                                     strict=False, degraded_ok=True)
+        drift = len(svc_days["svc-00"][6])
+        print(f"merge dispatch down → served last-known-good "
+              f"(degraded={ans.degraded}, ε {fresh[1]:.0f} → {ans[1]:.0f}: "
+              f"widened by the {drift:,} records of drift)")
+
+        # a poisoned tenant trips its breaker and is quarantined at the
+        # door; healthy tenants never notice
+        with faults.inject("tenant.apply",
+                           match=lambda ctx: ctx.get("tenant") == "mobile"):
+            rejected = quarantined = 0
+            for day in range(3):
+                try:
+                    chaos.ingest("mobile", day, week[day])
+                except faults.FaultError:
+                    rejected += 1
+                except TenantQuarantined:
+                    quarantined += 1
+        chaos.ingest("frontend", 7, week[0])  # unaffected
+        print(f"poisoned tenant: {rejected} failures tripped the breaker, "
+              f"{quarantined} later ingest rejected at the door; "
+              f"healthy tenants unaffected")
+
+        # bit-rot on disk pages: the scrubber catches the bad checksum and
+        # rebuilds the partition from its WAL records
+        s = chaos["frontend"].summaries[3]
+        bad = np.array(s.sizes)
+        bad[0] += 1.0
+        chaos["frontend"].summaries[3] = dataclasses.replace(s, sizes=bad)
+        rep = chaos.scrub(repair=True)
+        health = chaos.health()
+        print(f"scrubber: {rep['checked']} summaries checked, corrupt "
+              f"{rep['corrupt']} → repaired {rep['repaired']} by WAL "
+              f"replay; health: status={health['status']}, "
+              f"quarantined={health['quarantined']}, "
+              f"degraded_served={health['degraded_served']}")
+        chaos.close()
     print("\nlog_analytics OK")
 
 

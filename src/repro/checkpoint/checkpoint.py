@@ -23,6 +23,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core import faults
+
 SEP = "|"
 
 
@@ -42,6 +44,7 @@ def save_checkpoint(
     extra: dict | None = None,
 ) -> str:
     """Atomic save: write to tmp dir, fsync, rename, repoint LATEST."""
+    faults.hit("checkpoint.save", step=step)
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
@@ -104,6 +107,7 @@ def restore_checkpoint(
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    faults.hit("checkpoint.restore", step=step)
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     # NpzFile holds the archive fd until closed — rebuild() materializes
     # every leaf, so context-manage instead of leaking one fd per restore

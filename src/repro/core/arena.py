@@ -92,6 +92,8 @@ import threading
 
 import numpy as np
 
+from repro.core import faults
+
 __all__ = ["NodeArena"]
 
 _MIN_CAPACITY = 64
@@ -188,6 +190,7 @@ class NodeArena:
         T = s.shape[0]
         if T > width:
             raise ValueError(f"summary of {T} buckets exceeds plane width {width}")
+        faults.hit("arena.alloc", width=width)
         with self._lock:
             self._reap()
             plane = self._plane(width)
@@ -210,6 +213,7 @@ class NodeArena:
         k, T = s.shape
         if T > width:
             raise ValueError(f"summaries of {T} buckets exceed plane width {width}")
+        faults.hit("arena.alloc", width=width, k=k)
         with self._lock:
             self._reap()
             plane = self._plane(width)
@@ -237,6 +241,7 @@ class NodeArena:
         machine-checked benchmark value and the host-pack fallback runs
         outside the store locks)."""
         idx = np.asarray(idx, np.int64)
+        faults.hit("arena.rows", width=width)
         with self._lock:
             plane = self._planes[width]
             self.host_row_copies += int(idx.size)
@@ -247,6 +252,7 @@ class NodeArena:
         rebuilt only when the plane version moved since the last call."""
         import jax.numpy as jnp
 
+        faults.hit("arena.gather", width=width)
         with self._lock:
             plane = self._planes[width]
             if plane._device_version != plane.version:

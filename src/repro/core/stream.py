@@ -115,9 +115,11 @@ from repro.core.histogram import (
     quantile,
     theoretical_eps_max,
 )
+from repro.core import faults
 from repro.core.arena import NodeArena
 from repro.core.interval_tree import COLLAPSE_MODES, IntervalTree
 from repro.core.retention import RetentionPolicy, StoreStats, policy_from_spec
+from repro.core.scrub import checksum_array, payload_checksums
 from repro.core.workers import IngestPool, PoolStateView, WriteAheadLog
 
 __all__ = ["StoredSummary", "HistogramStore", "atomic_savez"]
@@ -144,7 +146,14 @@ def atomic_savez(path: str, meta: dict, payload: dict[str, np.ndarray]) -> None:
     (otherwise the rename itself may not be durable and the file simply
     vanishes).  Shared by ``HistogramStore.save`` and the multi-tenant
     registry's one-file-for-all-tenants save (core/tenant.py).
+
+    Every payload array's CRC32 is embedded as ``meta["payload_crc"]``
+    so the integrity scrubber (core/scrub.py) can prove a snapshot is
+    still the bytes that were written — atomicity protects against torn
+    writes, the checksums against the bit-rot that atomicity can't see.
     """
+    faults.hit("snapshot.save", path=path)
+    meta = {**meta, "payload_crc": payload_checksums(payload)}
     dirname = os.path.dirname(path) or "."
     os.makedirs(dirname, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".npz")
@@ -153,6 +162,11 @@ def atomic_savez(path: str, meta: dict, payload: dict[str, np.ndarray]) -> None:
             np.savez(f, meta=json.dumps(meta), **payload)
             f.flush()
             os.fsync(f.fileno())  # data durable before the rename
+        rot = faults.hit("snapshot.save.corrupt", path=path)
+        if rot is not None:  # injected bit-rot that survives the rename
+            with open(tmp, "r+b") as f:
+                f.seek(int(rot))
+                f.write(b"\xde\xad\xbe\xef")
         os.replace(tmp, path)
         dfd = os.open(dirname, os.O_RDONLY)
         try:
@@ -235,18 +249,38 @@ _BATCH_ROWS = 256
 
 @dataclass(frozen=True)
 class StoredSummary:
-    """One partition's summary — a row of the paper's summary file."""
+    """One partition's summary — a row of the paper's summary file.
+
+    ``crc`` is the CRC32 of the summary arrays at summarize time — the
+    in-memory integrity baseline the scrubber (core/scrub.py) verifies
+    rows and arena planes against.  ``None`` marks a summary injected
+    through a legacy path that never checksummed (unverifiable, not
+    corrupt).
+    """
 
     partition_id: int
     n: int
     boundaries: np.ndarray
     sizes: np.ndarray
+    crc: int | None = None
 
     def to_histogram(self) -> Histogram:
         return Histogram(
             boundaries=jax.numpy.asarray(self.boundaries),
             sizes=jax.numpy.asarray(self.sizes),
         )
+
+
+def _make_summary(pid: int, n: int, boundaries, sizes) -> StoredSummary:
+    """StoredSummary with its integrity CRC stamped over the exact arrays
+    being stored (scrub_store recomputes over the same attributes)."""
+    return StoredSummary(
+        partition_id=int(pid),
+        n=int(n),
+        boundaries=boundaries,
+        sizes=sizes,
+        crc=checksum_array(boundaries, sizes),
+    )
 
 
 @dataclass
@@ -388,11 +422,8 @@ class HistogramStore(PoolStateView):
                 )
         for pid, v in small:
             h = build_exact(jax.numpy.asarray(v), v.shape[0])
-            out[pid] = StoredSummary(
-                partition_id=pid,
-                n=int(v.shape[0]),
-                boundaries=np.asarray(h.boundaries),
-                sizes=np.asarray(h.sizes),
+            out[pid] = _make_summary(
+                pid, v.shape[0], np.asarray(h.boundaries), np.asarray(h.sizes)
             )
         for n_pad, all_rows in sorted(groups.items()):
             for at in range(0, len(all_rows), _BATCH_ROWS):
@@ -412,12 +443,7 @@ class HistogramStore(PoolStateView):
                 )
                 bs, ss = np.asarray(h.boundaries), np.asarray(h.sizes)
                 for row, (pid, _, n) in enumerate(rows):
-                    out[pid] = StoredSummary(
-                        partition_id=pid,
-                        n=int(n),
-                        boundaries=bs[row],
-                        sizes=ss[row],
-                    )
+                    out[pid] = _make_summary(pid, n, bs[row], ss[row])
         return out
 
     def _summarize(self, partition_id: int, values) -> StoredSummary:
@@ -446,11 +472,11 @@ class HistogramStore(PoolStateView):
         """Store an externally-built summary (e.g. from the distributed or
         Pallas tile path) — the framework does not care who summarized."""
         self._put(
-            StoredSummary(
-                partition_id=int(partition_id),
-                n=int(np.asarray(hist.sizes).sum()),
-                boundaries=np.asarray(hist.boundaries),
-                sizes=np.asarray(hist.sizes),
+            _make_summary(
+                int(partition_id),
+                int(np.asarray(hist.sizes).sum()),
+                np.asarray(hist.boundaries),
+                np.asarray(hist.sizes),
             )
         )
 
@@ -909,11 +935,11 @@ class HistogramStore(PoolStateView):
         for pid in meta["ids"]:
             b = data[f"{prefix}b_{pid}"]
             s = data[f"{prefix}s_{pid}"]
-            self.summaries[int(pid)] = StoredSummary(
-                partition_id=int(pid),
-                n=int(meta.get("n", {}).get(str(pid), s.sum())),
-                boundaries=b,
-                sizes=s,
+            # re-stamp the integrity CRC over the loaded bytes: the
+            # snapshot's own payload_crc map was (or can be) verified by
+            # the scrubber; from here on these arrays are the baseline
+            self.summaries[int(pid)] = _make_summary(
+                int(pid), meta.get("n", {}).get(str(pid), s.sum()), b, s
             )
         if "tree" in meta:  # restore pre-merged nodes — no re-merge on load
             self._tree = IntervalTree.from_state(
@@ -972,6 +998,7 @@ class HistogramStore(PoolStateView):
         """Restore from a summary file; with ``wal_dir``, also replay the
         log suffix the snapshot doesn't cover (crash-consistent restore —
         see :meth:`recover` for the missing-snapshot case)."""
+        faults.hit("snapshot.load", path=path)
         # context-managed NpzFile: every array is materialized inside the
         # block, so the fd closes here instead of leaking for the store's
         # lifetime (an NpzFile holds its file handle open until closed)

@@ -269,6 +269,12 @@ class TelemetryHub:
         ``None`` when the hub's registry runs without a log."""
         return self.registry.wal_stats()
 
+    def health(self) -> dict:
+        """Serving-plane health aggregate: breaker/quarantine states,
+        degraded-answer and backpressure counters, WAL/pool stats, last
+        recovery/scrub reports (``TenantRegistry.health``)."""
+        return self.registry.health()
+
     def quantile(
         self, metric: str, lo: int, hi: int, q, beta: int | None = None
     ) -> np.ndarray:

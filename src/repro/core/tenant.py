@@ -104,13 +104,22 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from contextlib import ExitStack
 from typing import Sequence
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.arena import NodeArena
 from repro.core.histogram import Histogram
+from repro.core.resilience import (
+    Answer,
+    BreakerPolicy,
+    CircuitBreaker,
+    TenantQuarantined,
+)
+from repro.core.scrub import scrub_registry, verify_snapshot
 from repro.core.interval_tree import (
     merge_stacks,
     pack_device_rows,
@@ -158,6 +167,7 @@ class TenantRegistry(PoolStateView):
         shared_arena: bool = False,
         collapse: str = "canonical",
         wal_dir: str | None = None,
+        breaker: BreakerPolicy | None = None,
     ):
         if budget is not None and budget < 1:
             raise ValueError("budget must be >= 1 node floats")
@@ -207,6 +217,26 @@ class TenantRegistry(PoolStateView):
         # cross-tenant merge dispatch observability (summarize_shapes-style)
         self.merge_dispatches = 0
         self.merge_shapes: set[tuple[int, int, int, int]] = set()
+        # ----- self-healing plane (core/resilience.py) -----
+        # per-tenant circuit breakers: None → quarantine disabled (the
+        # historical contract); a BreakerPolicy (assignable post-load too)
+        # trips a tenant whose ingests keep failing, rejecting further
+        # submits at the door (TenantQuarantined) until a cooldown probe
+        # succeeds — a poisoned tenant cannot keep riding into shared
+        # batches.  Breakers are runtime config and are NOT persisted.
+        self.breaker_policy = breaker
+        self._breakers: dict[str, CircuitBreaker] = {}
+        # last-known-good answers for degraded serving, keyed
+        # (tenant, lo, hi, beta) → (hist, eps, {pid: n}, store version);
+        # recorded only by degraded_ok=True query_many calls (the serving
+        # plane), so direct strict callers pay nothing
+        self._last_good: dict[tuple, tuple] = {}
+        self._last_good_cap = 4096
+        self._clock = time.monotonic  # injectable for deadline tests
+        self.degraded_served = 0  # Answer(degraded=True) responses handed out
+        self.pack_fallbacks = 0  # shared-arena gathers that fell to host pack
+        self.last_scrub: dict | None = None  # scrub() report (core/scrub.py)
+        self.last_salvage: dict | None = None  # recover(salvage=True) report
 
     @property
     def host_row_copies(self) -> int:
@@ -284,6 +314,77 @@ class TenantRegistry(PoolStateView):
         with self._lock:
             return sorted(self._stores)
 
+    # --------------------------------------------------------- self-healing
+    def _breaker(self, name: str) -> CircuitBreaker | None:
+        """This tenant's circuit breaker (lazily created; None when the
+        registry runs without a ``breaker`` policy)."""
+        if self.breaker_policy is None:
+            return None
+        with self._lock:
+            b = self._breakers.get(name)
+            if b is None:
+                b = CircuitBreaker(self.breaker_policy)
+                self._breakers[name] = b
+            return b
+
+    def _breaker_check(self, name: str) -> None:
+        """Reject a submit for a quarantined tenant at the door."""
+        b = self._breaker(name)
+        if b is not None and not b.allow():
+            raise TenantQuarantined(name, b.state)
+
+    def _breaker_ok(self, name: str) -> None:
+        b = self._breaker(name)
+        if b is not None:
+            b.record_success()
+
+    def _breaker_fail(self, name: str) -> None:
+        """Count one ingest failure against the tenant — whatever the
+        cause (poison data, apply fault): ``threshold`` consecutive ones
+        trip the breaker and quarantine the tenant."""
+        b = self._breaker(name)
+        if b is not None:
+            b.record_failure()
+
+    def scrub(self, *, repair: bool = False) -> dict:
+        """Run the integrity scrubber over every tenant (core/scrub.py);
+        with ``repair=True`` corrupted tenants are routed through
+        WAL-replay rebuild.  The report also lands on ``last_scrub``
+        (surfaced by :meth:`health`)."""
+        return scrub_registry(self, repair=repair)
+
+    def health(self) -> dict:
+        """One-call serving-plane health: breaker/quarantine states,
+        degraded-answer and backpressure counters, WAL and pool stats,
+        and the latest recovery/scrub reports.  ``status`` is
+        ``"degraded"`` when any tenant is quarantined, unflushed ingest
+        errors are pending, or the last scrub saw corruption."""
+        with self._lock:
+            breakers = {n: b.snapshot() for n, b in self._breakers.items()}
+            last_scrub = self.last_scrub
+        quarantined = sorted(
+            n for n, b in breakers.items() if b["state"] != "closed"
+        )
+        pool = self._pool.stats()
+        degraded = bool(
+            quarantined
+            or pool["errors_pending"]
+            or (last_scrub is not None and last_scrub["corrupt"])
+        )
+        return {
+            "status": "degraded" if degraded else "ok",
+            "tenants": len(self),
+            "quarantined": quarantined,
+            "breakers": breakers,
+            "degraded_served": self.degraded_served,
+            "pack_fallbacks": self.pack_fallbacks,
+            "pool": pool,
+            "wal": self.wal_stats(),
+            "last_recovery": self.last_recovery,
+            "last_scrub": last_scrub,
+            "last_salvage": self.last_salvage,
+        }
+
     # ----------------------------------------------------------- Summarizer
     def _wal_log_sync(
         self, tenant: str, parts: dict[int, np.ndarray]
@@ -305,10 +406,22 @@ class TenantRegistry(PoolStateView):
         return None if self._wal is None else self._wal.stats()
 
     def ingest(self, tenant: str, partition_id: int, values):
-        """Synchronous single-partition ingest into the named tenant."""
+        """Synchronous single-partition ingest into the named tenant.
+
+        With a ``breaker`` policy a quarantined tenant is rejected before
+        any work (:class:`TenantQuarantined`); the outcome of the ingest
+        is recorded against the tenant's breaker either way.
+        """
         name = str(tenant)
-        lsns = self._wal_log_sync(name, {int(partition_id): values})
-        out = self.tenant(name).ingest(partition_id, values)
+        self._breaker_check(name)
+        try:
+            faults.hit("tenant.apply", tenant=name, parts=1)
+            lsns = self._wal_log_sync(name, {int(partition_id): values})
+            out = self.tenant(name).ingest(partition_id, values)
+        except BaseException:
+            self._breaker_fail(name)
+            raise
+        self._breaker_ok(name)
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])
@@ -318,8 +431,15 @@ class TenantRegistry(PoolStateView):
         """Grouped one-dispatch bulk ingest into the named tenant (with a
         WAL: the whole batch logged under one group-commit fsync)."""
         name = str(tenant)
-        lsns = self._wal_log_sync(name, dict(partitions))
-        self.tenant(name).ingest_many(partitions)
+        self._breaker_check(name)
+        try:
+            faults.hit("tenant.apply", tenant=name, parts=len(partitions))
+            lsns = self._wal_log_sync(name, dict(partitions))
+            self.tenant(name).ingest_many(partitions)
+        except BaseException:
+            self._breaker_fail(name)
+            raise
+        self._breaker_ok(name)
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])
@@ -333,6 +453,7 @@ class TenantRegistry(PoolStateView):
         """
         values = _validated(values)
         name = str(tenant)
+        self._breaker_check(name)  # quarantined tenants rejected at the door
         self.tenant(name)  # create eagerly: queries can see the tenant
         # stable per-tenant routing keeps each tenant's partitions FIFO —
         # hash() is salted per process but stable within one, which is all
@@ -358,7 +479,9 @@ class TenantRegistry(PoolStateView):
         if len(groups) == 1:
             ((name, parts),) = groups.items()
             store = self.tenant(name)
+            faults.hit("tenant.apply", tenant=name, parts=len(parts))
             store._apply(store._summarize_batch(parts))
+            self._breaker_ok(name)
             return
         if self.arena is not None:
             self._apply_groups_batched(batch, groups)
@@ -367,7 +490,9 @@ class TenantRegistry(PoolStateView):
         for name, parts in groups.items():
             store = self.tenant(name)
             try:
+                faults.hit("tenant.apply", tenant=name, parts=len(parts))
                 store._apply(store._summarize_batch(parts))
+                self._breaker_ok(name)
             except BaseException:
                 suspects += [
                     item for item in batch if item[0] == name
@@ -397,6 +522,7 @@ class TenantRegistry(PoolStateView):
         for name, parts in groups.items():
             store = self.tenant(name)
             try:
+                faults.hit("tenant.apply", tenant=name, parts=len(parts))
                 summarized[name] = (store, store._summarize_batch(parts))
             except BaseException:
                 suspects += [item for item in batch if item[0] == name]
@@ -416,6 +542,8 @@ class TenantRegistry(PoolStateView):
                 pull_up_trees(work)
                 for name in names:
                     summarized[name][0]._tree._invalidate()
+                for name in names:
+                    self._breaker_ok(name)
             except BaseException:
                 # a mid-apply failure must not release the locks with any
                 # tenant's leaves written but ancestors stale — a query
@@ -431,12 +559,15 @@ class TenantRegistry(PoolStateView):
         if suspects:
             raise PartialBatchFailure(suspects)
 
-    @staticmethod
-    def _wrap_async_error(item, exc: BaseException):
+    def _wrap_async_error(self, item, exc: BaseException):
         # pool error record: (tenant, pid, exception); a failed retention/
-        # budget sweep (item None) records as (None, None, exception)
+        # budget sweep (item None) records as (None, None, exception).
+        # This is also where an async-ingested partition's terminal
+        # failure (after the pool's per-item retry budget) counts against
+        # its tenant's circuit breaker.
         if item is None:
             return (None, None, exc)
+        self._breaker_fail(item[0])
         return (item[0], item[1], exc)
 
     def _sweep_after_batch(
@@ -584,6 +715,8 @@ class TenantRegistry(PoolStateView):
         beta: int,
         *,
         strict: bool = True,
+        degraded_ok: bool = False,
+        deadline: float | None = None,
     ) -> list[tuple[Histogram | None, float]]:
         """Answer ``[(tenant, lo, hi), ...]`` with ≤ one merge dispatch.
 
@@ -598,6 +731,20 @@ class TenantRegistry(PoolStateView):
         query: an unknown tenant or an interval with zero present summaries
         yields the placeholder ``(None, float("inf"))`` instead of killing
         the batch; with ``strict=True`` both raise ``KeyError``.
+
+        ``degraded_ok=True`` is the self-healing serving contract: when
+        answering *fails* — the merge dispatch (or a query's node
+        selection) raises, or ``deadline`` (absolute, by the registry
+        clock) has passed before the dispatch — the affected queries are
+        served their last known-good answer as an
+        :class:`~repro.core.resilience.Answer` with ``degraded=True`` and
+        an **honestly widened** ``eps_total`` (the cached bound plus all
+        mass added to or removed from the interval since it was cached),
+        instead of killing the batch.  Strict-contract ``KeyError``\\ s
+        still raise — a missing partition is a caller error, not a fault.
+        Fresh answers stay plain ``(hist, eps)`` tuples (``degraded``
+        reads False), and only ``degraded_ok=True`` calls record/maintain
+        the last-known-good cache.
         """
         results: list[tuple[Histogram | None, float] | None] = [None] * len(
             queries
@@ -605,82 +752,175 @@ class TenantRegistry(PoolStateView):
         # mkey (store id + cache key) → (miss row, result slots)
         miss_map: dict[tuple, tuple[int, list[int]]] = {}
         miss_sels: list[list] = []
-        miss_meta: list[tuple[HistogramStore, tuple]] = []
+        miss_meta: list[tuple[HistogramStore, tuple, tuple, dict | None]] = []
         for qi, (name, lo, hi) in enumerate(queries):
             if not strict and name not in self:
                 results[qi] = (None, float("inf"))
                 continue
-            store = self[name]
-            tree = store._tree
-            with store._lock:
-                ids = store._present_ids(lo, hi)
-                if strict and len(ids) != hi - lo + 1:
-                    missing = sorted(set(range(lo, hi + 1)) - set(ids))
-                    raise KeyError(
-                        f"tenant {name!r}: missing partition summaries: "
-                        f"{missing}"
-                    )
-                keys = store._sync_tree(ids, lo, hi)
-                if not ids:
-                    if strict:
+            gkey = (str(name), int(lo), int(hi), int(beta))
+            try:
+                store = self[name]
+                tree = store._tree
+                with store._lock:
+                    ids = store._present_ids(lo, hi)
+                    if strict and len(ids) != hi - lo + 1:
+                        missing = sorted(set(range(lo, hi + 1)) - set(ids))
                         raise KeyError(
-                            f"tenant {name!r}: no partition summaries in "
-                            f"requested interval"
+                            f"tenant {name!r}: missing partition summaries: "
+                            f"{missing}"
                         )
-                    results[qi] = (None, float("inf"))
-                    continue
-                key = (int(lo), int(hi), int(beta), tree.version)
-                mkey = (id(store), key)
-                prior = miss_map.get(mkey)
-                if prior is not None:  # duplicate within this batch
-                    prior[1].append(qi)
-                    continue
-                hit = tree._cache_get(key)
-                if hit is not None:
-                    results[qi] = hit
-                    continue
-                tree.cache_misses += 1
-                sel = [tree.nodes[k] for k in keys]
-                miss_map[mkey] = (len(miss_sels), [qi])
-                miss_sels.append(sel)
-                miss_meta.append((store, key))
+                    keys = store._sync_tree(ids, lo, hi)
+                    if not ids:
+                        if strict:
+                            raise KeyError(
+                                f"tenant {name!r}: no partition summaries in "
+                                f"requested interval"
+                            )
+                        results[qi] = (None, float("inf"))
+                        continue
+                    key = (int(lo), int(hi), int(beta), tree.version)
+                    mkey = (id(store), key)
+                    prior = miss_map.get(mkey)
+                    if prior is not None:  # duplicate within this batch
+                        prior[1].append(qi)
+                        continue
+                    hit = tree._cache_get(key)
+                    if hit is not None:
+                        results[qi] = hit
+                        continue
+                    tree.cache_misses += 1
+                    sel = [tree.nodes[k] for k in keys]
+                    members = (
+                        {pid: store.summaries[pid].n for pid in ids}
+                        if degraded_ok
+                        else None
+                    )
+                    miss_map[mkey] = (len(miss_sels), [qi])
+                    miss_sels.append(sel)
+                    miss_meta.append((store, key, gkey, members))
+            except KeyError:
+                raise  # strict-contract violations are not faults
+            except BaseException:
+                if not degraded_ok:
+                    raise
+                results[qi] = self._degraded_answer(gkey)
         if miss_sels:
-            # ONE cross-tenant merge dispatch for the whole batch.  Packing
-            # outside the store locks is safe: arena rows are write-once
-            # and the node handles held in miss_sels pin them against
-            # concurrent eviction + reuse (core/arena.py slot lifecycle).
-            packed = None
-            if self.arena is not None:
-                # shared arena: assemble the whole merge stack with a
-                # single device gather — zero host-side row copies
-                packed = pack_device_rows(miss_sels)
-            if packed is None:
-                # per-tenant arenas (or a mixed-plane selection, e.g.
-                # geometric T_node): host pack, one stacked copy per
-                # plane, padded to the plane width so the block is
-                # bit-identical to the gather path's
-                T_pad = max(nd.width for sel in miss_sels for nd in sel)
-                packed = pack_node_rows(
-                    miss_sels, T_pad=T_pad, pad_row_copy=True
-                )
-            bounds, sizes = packed
-            with self._lock:  # counters are read by concurrent servers
-                self.merge_dispatches += 1
-                self.merge_shapes.add(tuple(bounds.shape) + (int(beta),))
-            bo, so = merge_stacks(bounds, sizes, int(beta))
-            # one device→host transfer; per-row unpacking is then free views
-            bo, so = np.asarray(bo), np.asarray(so)
+            try:
+                if deadline is not None and self._clock() >= deadline:
+                    raise TimeoutError(
+                        "query deadline passed before the merge dispatch"
+                    )
+                faults.hit("tenant.merge", misses=len(miss_sels))
+                # ONE cross-tenant merge dispatch for the whole batch.
+                # Packing outside the store locks is safe: arena rows are
+                # write-once and the node handles held in miss_sels pin
+                # them against concurrent eviction + reuse (core/arena.py
+                # slot lifecycle).
+                packed = None
+                if self.arena is not None:
+                    # shared arena: assemble the whole merge stack with a
+                    # single device gather — zero host-side row copies
+                    packed = pack_device_rows(miss_sels)
+                    if packed is None:
+                        with self._lock:
+                            self.pack_fallbacks += 1
+                if packed is None:
+                    # per-tenant arenas (or a mixed-plane selection, e.g.
+                    # geometric T_node): host pack, one stacked copy per
+                    # plane, padded to the plane width so the block is
+                    # bit-identical to the gather path's
+                    T_pad = max(nd.width for sel in miss_sels for nd in sel)
+                    packed = pack_node_rows(
+                        miss_sels, T_pad=T_pad, pad_row_copy=True
+                    )
+                bounds, sizes = packed
+                with self._lock:  # counters read by concurrent servers
+                    self.merge_dispatches += 1
+                    self.merge_shapes.add(tuple(bounds.shape) + (int(beta),))
+                bo, so = merge_stacks(bounds, sizes, int(beta))
+                # one device→host transfer; per-row unpacking is free views
+                bo, so = np.asarray(bo), np.asarray(so)
+            except BaseException:
+                if not degraded_ok:
+                    raise
+                # the dispatch failed (or the deadline passed): every miss
+                # gets its last known-good answer, honestly widened
+                for row, slots in miss_map.values():
+                    _store, _key, gkey, members = miss_meta[row]
+                    ans = self._degraded_answer(gkey, members)
+                    for qi in slots:
+                        results[qi] = ans
+                return results
             for row, slots in miss_map.values():
-                store, key = miss_meta[row]
+                store, key, gkey, members = miss_meta[row]
                 out = (
                     Histogram(bo[row], so[row]),
                     selection_eps(miss_sels[row]),
                 )
                 with store._lock:
                     store._tree._cache_put(key, out)
+                if members is not None:
+                    self._remember_good(gkey, out, members, key[3])
                 for qi in slots:
                     results[qi] = out
         return results
+
+    def _remember_good(
+        self, gkey: tuple, out: tuple, members: dict, version: int
+    ) -> None:
+        """Record a fresh answer as ``gkey``'s degraded-serving fallback
+        (bounded FIFO — oldest entries age out past the cap)."""
+        with self._lock:
+            self._last_good.pop(gkey, None)
+            self._last_good[gkey] = (out[0], float(out[1]), members, version)
+            while len(self._last_good) > self._last_good_cap:
+                self._last_good.pop(next(iter(self._last_good)))
+
+    def _degraded_answer(self, gkey: tuple, now: dict | None = None):
+        """The last known-good answer for ``gkey`` as a degraded
+        :class:`Answer`, its ``eps_total`` widened by every unit of mass
+        added to or removed from the interval since it was cached (the
+        honest bound on what staleness can have changed).  ``now`` is the
+        current ``{pid: n}`` membership if the caller captured one; with
+        no cached answer — or no way to read the current membership — the
+        placeholder ``(None, inf)`` / an ``inf``-widened answer is served
+        instead of guessing.
+        """
+        name, lo, hi, _beta = gkey
+        if now is None:
+            try:
+                with self._lock:
+                    store = self._stores.get(name)
+                now = (
+                    {}
+                    if store is None
+                    else {
+                        pid: s.n
+                        for pid, s in list(store.summaries.items())
+                        if lo <= pid <= hi
+                    }
+                )
+            except Exception:  # store too broken to read: widen to inf
+                now = None
+        with self._lock:
+            self.degraded_served += 1
+            cached = self._last_good.get(gkey)
+        if cached is None:
+            return Answer.make(None, float("inf"), degraded=True)
+        hist, eps, members, version = cached
+        if now is None:
+            return Answer.make(
+                hist, float("inf"), degraded=True, stale_version=version
+            )
+        drift = 0.0
+        for pid, n in now.items():
+            drift += abs(n - members.get(pid, 0))
+        for pid, n in members.items():
+            if pid not in now:
+                drift += n
+        return Answer.make(
+            hist, eps + drift, degraded=True, stale_version=version
+        )
 
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
@@ -794,7 +1034,12 @@ class TenantRegistry(PoolStateView):
 
     @classmethod
     def recover(
-        cls, path: str, wal_dir: str, **registry_kwargs
+        cls,
+        path: str,
+        wal_dir: str,
+        *,
+        salvage: bool = False,
+        **registry_kwargs,
     ) -> "TenantRegistry":
         """Crash-consistent startup: snapshot + WAL → the acked state.
 
@@ -805,9 +1050,34 @@ class TenantRegistry(PoolStateView):
         that were still sitting in the in-memory queue when the process
         died — is present afterwards, and the registry keeps logging to
         ``wal_dir``.
+
+        ``salvage=True`` adds the bit-rot leg of the self-healing plane:
+        the snapshot's payload checksums are verified first
+        (:func:`~repro.core.scrub.verify_snapshot`), and a corrupt or
+        unloadable snapshot is moved aside to ``path + ".corrupt"`` and
+        the registry rebuilt from the WAL alone — wrong answers are never
+        served from rotted bytes.  The verification report lands on
+        ``last_salvage`` (and :meth:`health`).
         """
         if os.path.exists(path):
-            return cls.load(path, wal_dir=wal_dir)
+            report = None
+            if salvage:
+                report = verify_snapshot(path)
+            if report is None or report["ok"]:
+                try:
+                    reg = cls.load(path, wal_dir=wal_dir)
+                    reg.last_salvage = report
+                    return reg
+                except Exception as e:
+                    if not salvage:
+                        raise
+                    report = {"ok": False, "error": repr(e)}
+            # corrupt snapshot: quarantine the file, rebuild from the WAL
+            os.replace(path, path + ".corrupt")
+            reg = cls(**registry_kwargs)
+            reg._attach_wal(wal_dir, None)
+            reg.last_salvage = report
+            return reg
         reg = cls(**registry_kwargs)
         reg._attach_wal(wal_dir, None)
         return reg

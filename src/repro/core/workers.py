@@ -115,6 +115,9 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.core import faults
+from repro.core.resilience import IngestBackpressure, RetryPolicy, retry_call
+
 __all__ = [
     "IngestPool",
     "PartialBatchFailure",
@@ -151,19 +154,36 @@ class WriteAheadLog:
     """
 
     def __init__(
-        self, dir: str, *, segment_bytes: int = 4 << 20, fsync: bool = True
+        self,
+        dir: str,
+        *,
+        segment_bytes: int = 4 << 20,
+        fsync: bool = True,
+        retry: RetryPolicy | None = None,
     ):
         self.dir = str(dir)
         self.segment_bytes = int(segment_bytes)
         self.fsync_enabled = bool(fsync)
+        # transient-fault policy for the group-commit fsync: a flaky disk
+        # (EIO that clears, momentary ENOSPC) heals inside commit() itself;
+        # a persistently sick one exhausts the budget and the failure
+        # propagates to the submitter as backpressure (IngestPool.submit)
+        self.retry = retry if retry is not None else RetryPolicy(
+            attempts=3, base=0.005, cap=0.1
+        )
         os.makedirs(self.dir, exist_ok=True)
         self._lock = threading.Lock()  # append/rotate/bookkeeping
         self._commit_lock = threading.Lock()  # group-commit fsync
         self._fd = None  # active segment file object (lazy)
+        self._fd_broken = False  # rollback failed → rotate before next write
         self._active_path: str | None = None
+        # set by close(): cuts any in-flight backoff wait short
+        self._interrupt = threading.Event()
         # telemetry counters (core/telemetry.py surfaces these)
         self.appends = 0
         self.fsyncs = 0
+        self.fsync_retries = 0
+        self.append_rollbacks = 0
         self.fsync_seconds = 0.0
         self.last_fsync_seconds = 0.0
         self.bytes_written = 0
@@ -193,7 +213,19 @@ class WriteAheadLog:
     # ------------------------------------------------------------- append
     def append(self, tenant: str | None, pid: int, values) -> int:
         """Buffer one record into the active segment; returns its LSN.
-        Durability requires a subsequent :meth:`commit`."""
+        Durability requires a subsequent :meth:`commit`.
+
+        **All-or-nothing on failure.**  A write that raises mid-record
+        (ENOSPC, EIO, an injected torn write) must not leave a partial
+        record in the segment: the torn-tail scan stops a segment at its
+        first bad record, so stray bytes here would silently drop every
+        *later* record in the segment at recovery.  On any write failure
+        the segment is truncated back to the pre-append offset and the
+        LSN is un-assigned (nothing else can have taken one — the lock is
+        held); if even the rollback fails, the fd is marked broken and
+        the next append rotates to a fresh segment, leaving the partial
+        record as a scannable torn tail instead of a mid-segment hole.
+        """
         v = np.ascontiguousarray(values)
         header = json.dumps(
             {
@@ -206,16 +238,37 @@ class WriteAheadLog:
         ).encode()
         payload = v.tobytes()
         crc = binascii.crc32(payload, binascii.crc32(header))
+        faults.hit("wal.append", tenant=tenant, pid=pid)
         with self._lock:
             lsn = self._next_lsn
-            self._next_lsn += 1
-            if self._fd is None or self._fd.tell() >= self.segment_bytes:
+            if (
+                self._fd is None
+                or self._fd_broken
+                or self._fd.tell() >= self.segment_bytes
+            ):
                 self._roll(lsn)
             buf = _WAL_PREFIX.pack(_WAL_MAGIC, lsn, crc, len(header))
-            self._fd.write(buf + header + payload)
-            self._fd.flush()  # into the OS — commit() makes it durable
+            data = buf + header + payload
+            pos = self._fd.tell()
+            try:
+                torn = faults.hit("wal.append.torn", lsn=lsn, size=len(data))
+                if torn is not None:  # injected: write a prefix, then fail
+                    self._fd.write(data[: int(torn)])
+                    self._fd.flush()
+                    raise OSError("injected torn write")
+                self._fd.write(data)
+                self._fd.flush()  # into the OS — commit() makes it durable
+            except BaseException:
+                self.append_rollbacks += 1
+                try:  # roll the partial record back out of the segment
+                    self._fd.seek(pos)
+                    self._fd.truncate()
+                except OSError:
+                    self._fd_broken = True  # next append rotates
+                raise
+            self._next_lsn = lsn + 1
             self.appends += 1
-            self.bytes_written += len(buf) + len(header) + len(payload)
+            self.bytes_written += len(data)
             self._written_lsn = lsn
         return lsn
 
@@ -237,8 +290,25 @@ class WriteAheadLog:
                 fd, latest = self._fd, self._written_lsn
             if fd is None:
                 return
+
+            def _sync() -> None:
+                faults.hit("wal.fsync")
+                os.fsync(fd.fileno())
+
+            def _count(attempt: int, exc: BaseException) -> None:
+                self.fsync_retries += 1
+
             t0 = time.perf_counter()
-            os.fsync(fd.fileno())
+            # transient failures heal here (bounded backoff, jittered);
+            # close() interrupts the wait, and the remaining attempts
+            # still run — a persistent failure propagates to the
+            # submitter, which surfaces it as backpressure
+            retry_call(
+                _sync,
+                self.retry,
+                wait=self._interrupt.wait,
+                on_retry=_count,
+            )
             dt = time.perf_counter() - t0
             self.fsyncs += 1
             self.fsync_seconds += dt
@@ -256,17 +326,30 @@ class WriteAheadLog:
     def _roll(self, first_lsn: int) -> None:
         """Rotate to a fresh segment (callers hold ``_lock``)."""
         if self._fd is not None:
-            self._fd.flush()
-            if self.fsync_enabled:
-                os.fsync(self._fd.fileno())
-            self._fd.close()
+            try:
+                self._fd.flush()
+                if self.fsync_enabled:
+                    os.fsync(self._fd.fileno())
+                synced = True
+            except OSError:
+                # a broken outgoing fd (failed append rollback): records
+                # already committed were fsynced at their own commit; an
+                # un-fsynced tail was never acked, and its loss is the
+                # torn-tail scan's job — rotating away is the recovery
+                synced = False
+            try:
+                self._fd.close()
+            except OSError:
+                pass
+            self._fd_broken = False
             # every record in the outgoing segment is ≤ written_lsn and
             # now durable; it becomes a closed, truncatable segment
             self._segments[self._active_path] = (
                 self._segments[self._active_path][0],
                 self._written_lsn,
             )
-            self._synced_lsn = max(self._synced_lsn, self._written_lsn)
+            if synced:
+                self._synced_lsn = max(self._synced_lsn, self._written_lsn)
         self._active_path = os.path.join(self.dir, f"wal-{first_lsn:020d}.log")
         self._fd = open(self._active_path, "wb")
         self._segments[self._active_path] = (first_lsn, first_lsn - 1)
@@ -415,7 +498,9 @@ class WriteAheadLog:
         with self._lock:
             return {
                 "appends": self.appends,
+                "append_rollbacks": self.append_rollbacks,
                 "fsyncs": self.fsyncs,
+                "fsync_retries": self.fsync_retries,
                 "fsync_seconds_total": self.fsync_seconds,
                 "last_fsync_seconds": self.last_fsync_seconds,
                 "bytes_written": self.bytes_written,
@@ -429,13 +514,16 @@ class WriteAheadLog:
             }
 
     def close(self) -> None:
+        self._interrupt.set()  # cut any in-flight commit backoff short
         with self._lock:
             if self._fd is not None:
-                self._fd.flush()
-                if self.fsync_enabled:
-                    os.fsync(self._fd.fileno())
-                self._fd.close()
-                self._fd = None
+                try:
+                    self._fd.flush()
+                    if self.fsync_enabled:
+                        os.fsync(self._fd.fileno())
+                finally:
+                    self._fd.close()
+                    self._fd = None
 
 
 class PartialBatchFailure(Exception):
@@ -495,6 +583,7 @@ class IngestPool:
         on_batch_end: Callable[[list], None] | None = None,
         wal: "WriteAheadLog | None" = None,
         wal_record: Callable[[object], tuple] | None = None,
+        retry: RetryPolicy | None = None,
     ):
         if workers < 1:
             raise ValueError("workers must be >= 1")
@@ -503,6 +592,13 @@ class IngestPool:
         self.apply_batch = apply_batch
         self.wrap_error = wrap_error
         self.on_batch_end = on_batch_end
+        # transient-fault policy: suspect items get this many attempts
+        # (with interruptible backoff) before their error surfaces on
+        # flush, and WAL appends retry under it before the submit is
+        # rejected with backpressure
+        self.retry = retry if retry is not None else RetryPolicy(
+            attempts=3, base=0.005, cap=0.1
+        )
         # durable-ingest plane (module docstring): every submit is
         # appended + group-commit-fsynced before it acks; wal_record maps
         # a queue item to its (tenant_route, pid, raw_values) log fields
@@ -524,6 +620,16 @@ class IngestPool:
         self._state_lock = threading.Lock()  # guards queue/thread setup
         self._queues: list[queue.Queue] | None = None
         self._threads: list[threading.Thread] = []
+        # set by close() BEFORE the sentinels go in: any worker sleeping
+        # in a retry backoff wakes immediately, runs its remaining
+        # attempts without sleeping, and reaches the sentinel — close()
+        # never out-waits a backoff and never drops a retried batch
+        self._closing = threading.Event()
+        # self-healing observability (surfaced through health()/stats())
+        self.batches = 0
+        self.apply_retries = 0
+        self.wal_append_retries = 0
+        self.backpressure_rejects = 0
 
     # --------------------------------------------------------------- submit
     def submit(self, item, route: int = 0) -> None:
@@ -537,17 +643,58 @@ class IngestPool:
         one fsync; a worker may apply the item before the fsync lands,
         which is harmless (if the process dies first, the ack never
         happened and the in-memory apply died with it).
+
+        **Backpressure when the disk is sick.**  A WAL append that keeps
+        failing after bounded retries rejects the submit with
+        :class:`~repro.core.resilience.IngestBackpressure` — nothing is
+        enqueued, the caller owns the partition and may resubmit.  If the
+        append landed but the group-commit fsync failed after retries,
+        the item is already queued (it will be applied in-memory) but the
+        call still raises backpressure: the durability ack would be a
+        lie, and the caller must know it.
         """
         lsn = None
         with self.ingest_mutex:
             self._ensure_workers()
             if self.wal is not None:
-                lsn = self.wal.append(*self.wal_record(item))
+                try:
+                    lsn = retry_call(
+                        lambda: self.wal.append(*self.wal_record(item)),
+                        self.retry,
+                        wait=self._closing.wait,
+                        on_retry=self._count_append_retry,
+                    )
+                except BaseException as e:
+                    self.backpressure_rejects += 1
+                    raise IngestBackpressure(
+                        f"WAL append failed after "
+                        f"{self.retry.attempts} attempt(s): {e!r}"
+                    ) from e
             with self.cv:
                 self.pending += 1
             self._queues[route % self.workers].put((item, lsn))
         if self.wal is not None:
-            self.wal.commit(lsn)  # durable before the ack
+            try:
+                self.wal.commit(lsn)  # durable before the ack
+            except BaseException as e:
+                self.backpressure_rejects += 1
+                raise IngestBackpressure(
+                    "WAL fsync failed after retries — the partition was "
+                    f"accepted in-memory but is NOT durable: {e!r}"
+                ) from e
+
+    def _count_append_retry(self, attempt: int, exc: BaseException) -> None:
+        self.wal_append_retries += 1
+
+    def _count_apply_retry(self, attempt: int, exc: BaseException) -> None:
+        self.apply_retries += 1
+
+    def _retry_wait(self, delay: float) -> None:
+        """Interruptible backoff sleep of the worker's per-item retry.
+        The ``pool.retry`` failpoint fires first, so tests can sequence a
+        close() against a worker provably parked in this wait."""
+        faults.hit("pool.retry", delay=delay)
+        self._closing.wait(delay)
 
     def _ensure_workers(self) -> None:
         with self._state_lock:
@@ -555,6 +702,7 @@ class IngestPool:
                 t.is_alive() for t in self._threads
             ):
                 return
+            self._closing.clear()
             self._queues = [
                 queue.Queue(maxsize=self.queue_size)
                 for _ in range(self.workers)
@@ -596,6 +744,9 @@ class IngestPool:
         items = [item for item, _lsn in batch]
         try:
             try:
+                # chaos site: a worker "crash" mid-batch — the whole
+                # batch becomes suspect and rides the per-item retry
+                faults.hit("pool.batch", size=len(items))
                 self.apply_batch(items)
             except PartialBatchFailure as pf:
                 suspects = pf.items
@@ -604,17 +755,26 @@ class IngestPool:
             else:
                 suspects = ()
             # isolate the poison rows: retry the suspect items one at a
-            # time so a single bad item cannot drop the valid items
-            # drained into the same batch (errors surface on the owner's
-            # flush()).  The retries run HERE, inside the batch, before
-            # the pending count drops — close()'s shutdown sentinel (and
-            # drain()'s pending wait) therefore cannot overtake an
-            # in-flight retry and drop the still-pending non-poisoned
-            # items (pinned by tests/test_durability.py's deterministic
-            # close-vs-retry interleaving).
+            # time — each under the bounded backoff policy, so transient
+            # faults heal on the worker — so a single bad item cannot
+            # drop the valid items drained into the same batch (errors
+            # surface on the owner's flush()).  The retries run HERE,
+            # inside the batch, before the pending count drops — close()'s
+            # shutdown sentinel (and drain()'s pending wait) therefore
+            # cannot overtake an in-flight retry and drop the
+            # still-pending non-poisoned items; the backoff sleeps wait
+            # on the closing event, so close() bounds them without
+            # skipping the remaining attempts (pinned by the
+            # deterministic close-vs-retry interleavings in
+            # tests/test_durability.py and tests/test_faults.py).
             for item in suspects:
                 try:
-                    self.apply_batch([item])
+                    retry_call(
+                        lambda item=item: self.apply_batch([item]),
+                        self.retry,
+                        wait=self._retry_wait,
+                        on_retry=self._count_apply_retry,
+                    )
                 except BaseException as e:
                     with self.cv:  # pairs with drain()'s swap-read
                         self.errors.append(self.wrap_error(item, e))
@@ -632,6 +792,7 @@ class IngestPool:
                 # crashes, not bad data; poison errors surfaced above)
                 self.wal.mark_applied(lsn for _item, lsn in batch)
             with self.cv:
+                self.batches += 1
                 self.pending -= len(batch)
                 self.cv.notify_all()
 
@@ -650,7 +811,15 @@ class IngestPool:
 
     def close(self) -> None:
         """Drain each queue, stop the workers.  Safe to call repeatedly;
-        the next submit() restarts the pool transparently."""
+        the next submit() restarts the pool transparently.
+
+        Bounded even against an in-flight retry backoff: the closing
+        event is set *before* the sentinels go in, so a worker parked in
+        a backoff sleep wakes immediately, finishes its remaining retry
+        attempts without sleeping, and reaches the sentinel — the
+        retried batch is never dropped and the join never out-waits a
+        backoff schedule."""
+        self._closing.set()
         with self.ingest_mutex:
             with self._state_lock:
                 threads, queues = self._threads, self._queues
@@ -660,3 +829,19 @@ class IngestPool:
                     q.put(_SENTINEL)
                 for t in threads:
                     t.join()
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Self-healing counters for health()/telemetry surfaces."""
+        with self.cv:
+            pending = self.pending
+            errors_pending = len(self.errors)
+            batches = self.batches
+        return {
+            "pending": pending,
+            "errors_pending": errors_pending,
+            "batches": batches,
+            "apply_retries": self.apply_retries,
+            "wal_append_retries": self.wal_append_retries,
+            "backpressure_rejects": self.backpressure_rejects,
+        }

@@ -149,17 +149,24 @@ class HistogramService:
     >>> svc.checkpoint()        # atomic snapshot + WAL truncation
     """
 
-    def __init__(self, data_dir: str, **registry_kwargs):
+    def __init__(self, data_dir: str, *, salvage: bool = True, **registry_kwargs):
         self.data_dir = str(data_dir)
         os.makedirs(self.data_dir, exist_ok=True)
         self.snapshot_path = os.path.join(self.data_dir, "registry.npz")
         self.wal_dir = os.path.join(self.data_dir, "wal")
+        # salvage=True (the service default): a snapshot whose payload
+        # checksums fail is moved aside and the state rebuilt from the
+        # WAL alone — a serving sidecar must start, not crash-loop on a
+        # rotted file (core/scrub.py)
         self.registry = TenantRegistry.recover(
-            self.snapshot_path, self.wal_dir, **registry_kwargs
+            self.snapshot_path, self.wal_dir, salvage=salvage,
+            **registry_kwargs
         )
         #: replay stats from this startup (records scanned/replayed,
         #: torn records dropped) — surface these in the serving logs
         self.recovery = self.registry.last_recovery
+        #: snapshot-verification report when salvage rebuilt from the WAL
+        self.salvage = self.registry.last_salvage
 
     # ---- ingest plane ----------------------------------------------------
     def record(self, metric: str, window_id: int, values) -> None:
@@ -179,11 +186,36 @@ class HistogramService:
     def quantile(self, metric: str, lo: int, hi: int, q, beta=None):
         return self.registry[metric].quantile_query(lo, hi, q, beta)
 
-    def query_many(self, panels, beta: int = 64, strict: bool = False):
-        return self.registry.query_many(panels, beta, strict=strict)
+    def query_many(
+        self,
+        panels,
+        beta: int = 64,
+        strict: bool = False,
+        deadline: float | None = None,
+    ):
+        """Dashboard panel batch.  The service plane defaults to
+        ``degraded_ok=True``: a failed merge dispatch (or a missed
+        ``deadline``) serves last-known-good answers flagged
+        ``degraded=True`` with honestly widened eps instead of a 500 —
+        check ``ans.degraded`` (plain fresh answers read False)."""
+        return self.registry.query_many(
+            panels, beta, strict=strict, degraded_ok=True, deadline=deadline
+        )
 
     def metrics(self) -> list[str]:
         return self.registry.names()
+
+    # ---- health plane ----------------------------------------------------
+    def health(self) -> dict:
+        """Serving-plane health aggregate (breakers, quarantine, WAL,
+        degraded counters, last recovery/scrub) — the /healthz payload."""
+        return self.registry.health()
+
+    def scrub(self, *, repair: bool = False) -> dict:
+        """On-demand integrity scrub of every tenant (core/scrub.py);
+        ``repair=True`` routes corrupted tenants through WAL-replay
+        rebuild."""
+        return self.registry.scrub(repair=repair)
 
     # ---- durability plane ------------------------------------------------
     def checkpoint(self) -> str:

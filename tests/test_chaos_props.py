@@ -1,0 +1,240 @@
+"""Chaos property test: randomized fault schedules over the full plane.
+
+Each drawn case runs a random multi-tenant script — sync ingest, async
+ingest, dashboard queries, checkpoints, drains — under a *seeded* set of
+armed failpoints (disk-full and torn WAL appends, flaky fsyncs, worker
+crashes, poisoned applies, failed merge dispatches), then crashes the
+process (drops the registry without close) and recovers.  Invariants:
+
+* **zero acked-data loss** — every ingest that returned normally (and
+  whose terminal apply failure, if any, was surfaced by drain — the WAL
+  guards against crashes, not bad data) is present after recovery;
+* **no hangs** — drain()/flush()/close() return under active fault
+  schedules (the deterministic close-vs-retry interleaving is pinned
+  separately in tests/test_faults.py);
+* **honest serving** — under an armed merge failpoint, answers are
+  either fresh or flagged ``degraded=True``; every NON-degraded answer
+  bit-matches a fault-free replica fed the same partitions;
+* **recovery fidelity** — the recovered registry's every partition
+  bit-matches a never-faulted replica built from the submitted values.
+
+Runs in the fast lane: few cases, tiny arrays, one jit shape.
+"""
+import contextlib
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IngestBackpressure, TenantRegistry, faults
+
+settings.register_profile("chaos", deadline=None, max_examples=6)
+settings.load_profile("chaos")
+
+T = 8
+BETA = 16
+N_VALUES = 32  # one shape → one jit compile across all cases
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@st.composite
+def chaos_case(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n_tenants = draw(st.integers(1, 3))
+    n_ops = draw(st.integers(8, 14))
+    return seed, n_tenants, n_ops
+
+
+def _arm_faults(stack, seed):
+    """Arm the full fault schedule, each failpoint on its own seeded
+    probability stream — the same case replays the same schedule for a
+    given hit sequence."""
+    stack.enter_context(
+        faults.inject(
+            "wal.append", exc=OSError(28, "ENOSPC"), prob=0.08, seed=seed
+        )
+    )
+    stack.enter_context(
+        faults.inject(
+            "wal.append.torn",
+            action=lambda **ctx: min(9, ctx.get("size", 9)),
+            prob=0.06,
+            seed=seed + 1,
+        )
+    )
+    stack.enter_context(
+        faults.inject(
+            "wal.fsync", exc=OSError(5, "EIO"), prob=0.08, seed=seed + 2
+        )
+    )
+    stack.enter_context(
+        faults.inject("pool.batch", prob=0.10, seed=seed + 3)
+    )
+    stack.enter_context(
+        faults.inject("tenant.apply", prob=0.08, seed=seed + 4)
+    )
+    stack.enter_context(
+        faults.inject("tenant.merge", prob=0.20, seed=seed + 5)
+    )
+
+
+def _bit_match(reg, ref, tenant, lo, hi):
+    [(gh, ge)] = reg.query_many([(tenant, lo, hi)], BETA, strict=False)
+    [(wh, we)] = ref.query_many([(tenant, lo, hi)], BETA, strict=False)
+    assert (gh is None) == (wh is None)
+    if gh is not None:
+        assert np.array_equal(
+            np.asarray(gh.boundaries), np.asarray(wh.boundaries)
+        )
+        assert np.array_equal(np.asarray(gh.sizes), np.asarray(wh.sizes))
+        assert ge == we
+
+
+@given(chaos_case())
+def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
+    seed, n_tenants, n_ops = case
+    rng = np.random.default_rng(seed)
+    tenants = [f"t{i}" for i in range(n_tenants)]
+    base = tempfile.mkdtemp(prefix="chaos-")
+    try:
+        snap = os.path.join(base, "reg.npz")
+        wal_dir = os.path.join(base, "wal")
+        reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+        oracle: dict[tuple[str, int], np.ndarray] = {}  # every submit
+        must: set[tuple[str, int]] = set()  # acked → survives the crash
+        next_pid = {t: 0 for t in tenants}
+
+        def draw_item():
+            t = tenants[int(rng.integers(0, n_tenants))]
+            next_pid[t] += int(rng.integers(1, 3))  # gappy monotone pids
+            v = rng.normal(size=N_VALUES).astype(np.float32)
+            oracle[(t, next_pid[t])] = v
+            return t, next_pid[t], v
+
+        with contextlib.ExitStack() as stack:
+            _arm_faults(stack, seed)
+            for _ in range(n_ops):
+                op = rng.integers(0, 10)
+                if op < 4:  # sync ingest: ack ⇒ logged + applied
+                    t, pid, v = draw_item()
+                    try:
+                        reg.ingest(t, pid, v)
+                        must.add((t, pid))
+                    except (faults.FaultError, OSError):
+                        pass  # rejected before the ack — caller owns it
+                elif op < 7:  # async ingest: ack ⇒ durable (fsynced)
+                    t, pid, v = draw_item()
+                    try:
+                        reg.ingest_async(t, pid, v)
+                        must.add((t, pid))
+                    except IngestBackpressure:
+                        pass  # honest rejection — durability was refused
+                elif op < 8:  # drain: terminal apply failures surface here
+                    for t, pid, _e in reg._pool.drain():
+                        # surfaced ⇒ not silent loss; the WAL guards
+                        # against crashes, not bad data
+                        must.discard((t, pid))
+                elif op < 9:  # checkpoint: snapshot + WAL truncation
+                    for t, pid, _e in reg._pool.drain():
+                        must.discard((t, pid))
+                    reg.save(snap)
+                else:  # dashboard query mid-chaos: must not raise
+                    for t in tenants:
+                        if t in reg and reg[t].ids():
+                            ids = reg[t].ids()
+                            [ans] = reg.query_many(
+                                [(t, min(ids), max(ids))],
+                                BETA,
+                                strict=False,
+                                degraded_ok=True,
+                            )
+                            assert len(ans) == 2  # well-formed either way
+
+            # quiesce under the armed schedule: drain must return (no
+            # hang) and surfaces every terminal apply failure
+            for t, pid, _e in reg._pool.drain():
+                must.discard((t, pid))
+            reg.flush()  # errors already swapped out: returns clean
+
+            # honest serving: query every tenant with the merge failpoint
+            # still armed — each answer must come back fresh or flagged
+            # degraded; record the fresh ones for verification below
+            observed = []
+            for t in tenants:
+                if t not in reg or not reg[t].ids():
+                    continue
+                ids = reg[t].ids()
+                [ans] = reg.query_many(
+                    [(t, min(ids), max(ids))],
+                    BETA,
+                    strict=False,
+                    degraded_ok=True,
+                )
+                if not getattr(ans, "degraded", False):
+                    observed.append((t, list(ids), ans))
+                # degraded answers are flagged honestly; the eps-widening
+                # contract is pinned in tests/test_faults.py
+
+        # faults disarmed: every non-degraded answer served under chaos
+        # must bit-match a fault-free replica fed the same partitions
+        for t, ids, (hist, eps) in observed:
+            ref = TenantRegistry(num_buckets=T)
+            ref.ingest_many(t, {pid: oracle[(t, pid)] for pid in ids})
+            [(wh, we)] = ref.query_many(
+                [(t, min(ids), max(ids))], BETA, strict=False
+            )
+            assert np.array_equal(
+                np.asarray(hist.boundaries), np.asarray(wh.boundaries)
+            )
+            assert np.array_equal(
+                np.asarray(hist.sizes), np.asarray(wh.sizes)
+            )
+            assert eps == we
+            ref.close()
+
+        # a final acked burst that never gets flushed: recovery must
+        # replay it from the log alone
+        for _ in range(2):
+            t, pid, v = draw_item()
+            try:
+                reg.ingest_async(t, pid, v)
+                must.add((t, pid))
+            except IngestBackpressure:
+                pass
+
+        del reg  # kill -9: in-memory state gone, snapshot + log survive
+
+        rec = TenantRegistry.recover(
+            snap, wal_dir, salvage=True, num_buckets=T
+        )
+        # zero acked-data loss
+        for t, pid in sorted(must):
+            assert t in rec, f"acked tenant {t} lost"
+            assert pid in rec[t].summaries, f"acked ({t}, {pid}) lost"
+        # recovery fidelity: every recovered partition (acked or the
+        # harmless durable-but-unacked superset) bit-matches a replica
+        # fed the same raw values
+        for t in rec.names():
+            ids = rec[t].ids()
+            assert set(
+                (t, pid) for pid in ids
+            ) <= set(k for k in oracle if k[0] == t)
+            if not ids:
+                continue
+            ref = TenantRegistry(num_buckets=T)
+            ref.ingest_many(t, {pid: oracle[(t, pid)] for pid in ids})
+            _bit_match(rec, ref, t, min(ids), max(ids))
+            ref.close()
+        rec.close()  # must return promptly — no hung close
+    finally:
+        faults.reset()
+        shutil.rmtree(base, ignore_errors=True)

@@ -1,0 +1,225 @@
+"""Unit tests for the self-healing primitives (core/resilience.py).
+
+Everything here is deterministic by construction — seeded jitter,
+injected clocks, event-driven waits — no test sleeps or depends on
+wall-clock timing.
+"""
+import threading
+
+import pytest
+
+from repro.core.resilience import (
+    Answer,
+    BreakerPolicy,
+    CircuitBreaker,
+    RetryPolicy,
+    retry_call,
+)
+
+
+# --------------------------------------------------------------- RetryPolicy
+class TestRetryPolicy:
+    def test_delays_deterministic_for_seed(self):
+        p = RetryPolicy(attempts=5, base=0.01, cap=1.0, jitter=0.5, seed=7)
+        assert list(p.delays()) == list(p.delays())
+        assert list(p.delays()) != list(
+            RetryPolicy(attempts=5, seed=8).delays()
+        )
+
+    def test_delays_exponential_and_capped(self):
+        p = RetryPolicy(attempts=6, base=0.1, cap=0.3, jitter=0.0)
+        assert list(p.delays()) == [0.1, 0.2, 0.3, 0.3, 0.3]
+
+    def test_jitter_scales_down_only(self):
+        p = RetryPolicy(attempts=50, base=1.0, cap=1.0, jitter=0.25, seed=3)
+        for d in p.delays():
+            assert 0.75 <= d <= 1.0
+
+    def test_one_attempt_means_no_delays(self):
+        assert list(RetryPolicy(attempts=1).delays()) == []
+
+
+class TestRetryCall:
+    def test_returns_first_success(self):
+        calls = []
+        out = retry_call(
+            lambda: calls.append(0) or "ok",
+            RetryPolicy(attempts=3),
+            wait=lambda d: None,
+        )
+        assert out == "ok" and len(calls) == 1
+
+    def test_heals_transient_failure(self):
+        state = {"n": 0}
+
+        def flaky():
+            state["n"] += 1
+            if state["n"] < 3:
+                raise OSError("transient")
+            return state["n"]
+
+        waits = []
+        out = retry_call(
+            flaky, RetryPolicy(attempts=3, jitter=0.0), wait=waits.append
+        )
+        assert out == 3 and len(waits) == 2
+
+    def test_reraises_after_budget(self):
+        def always():
+            raise ValueError("permanent")
+
+        with pytest.raises(ValueError, match="permanent"):
+            retry_call(always, RetryPolicy(attempts=3), wait=lambda d: None)
+
+    def test_retryable_veto_skips_retry(self):
+        calls = []
+
+        def boom():
+            calls.append(0)
+            raise KeyError("not retryable")
+
+        with pytest.raises(KeyError):
+            retry_call(
+                boom,
+                RetryPolicy(attempts=5),
+                wait=lambda d: None,
+                retryable=lambda e: not isinstance(e, KeyError),
+            )
+        assert len(calls) == 1
+
+    def test_on_retry_counts_attempts(self):
+        seen = []
+
+        def always():
+            raise OSError("x")
+
+        with pytest.raises(OSError):
+            retry_call(
+                always,
+                RetryPolicy(attempts=4),
+                wait=lambda d: None,
+                on_retry=lambda attempt, exc: seen.append(attempt),
+            )
+        assert seen == [1, 2, 3]
+
+    def test_interrupted_wait_still_runs_remaining_attempts(self):
+        # an Event.wait-style interruptible wait returning immediately must
+        # not cost any of the remaining attempts (close() semantics)
+        ev = threading.Event()
+        ev.set()
+        state = {"n": 0}
+
+        def flaky():
+            state["n"] += 1
+            if state["n"] < 3:
+                raise OSError("transient")
+            return "healed"
+
+        out = retry_call(flaky, RetryPolicy(attempts=3), wait=ev.wait)
+        assert out == "healed"
+
+
+# ------------------------------------------------------------ CircuitBreaker
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+class TestCircuitBreaker:
+    def make(self, threshold=3, cooldown=30.0, probes=1):
+        clock = FakeClock()
+        b = CircuitBreaker(
+            BreakerPolicy(
+                threshold=threshold,
+                cooldown=cooldown,
+                probes=probes,
+                clock=clock,
+            )
+        )
+        return b, clock
+
+    def test_closed_allows_and_failures_trip(self):
+        b, _ = self.make(threshold=3)
+        assert b.state == "closed"
+        for _ in range(2):
+            assert b.allow()
+            b.record_failure()
+        assert b.state == "closed"
+        b.record_failure()
+        assert b.state == "open" and b.trips == 1
+
+    def test_success_resets_consecutive_count(self):
+        b, _ = self.make(threshold=2)
+        b.record_failure()
+        b.record_success()
+        b.record_failure()
+        assert b.state == "closed"  # never 2 consecutive
+
+    def test_open_rejects_until_cooldown(self):
+        b, clock = self.make(threshold=1, cooldown=10.0)
+        b.record_failure()
+        assert b.state == "open"
+        assert not b.allow()
+        clock.now = 9.999
+        assert not b.allow()
+        clock.now = 10.0
+        assert b.allow()  # half-open probe admitted
+        assert b.state == "half_open"
+
+    def test_half_open_probe_budget(self):
+        b, clock = self.make(threshold=1, cooldown=1.0, probes=1)
+        b.record_failure()
+        clock.now = 1.0
+        assert b.allow()  # the probe
+        assert not b.allow()  # probe budget spent
+
+    def test_probe_success_closes(self):
+        b, clock = self.make(threshold=1, cooldown=1.0)
+        b.record_failure()
+        clock.now = 1.0
+        assert b.allow()
+        b.record_success()
+        assert b.state == "closed"
+        assert b.allow()
+
+    def test_probe_failure_reopens_for_another_cooldown(self):
+        b, clock = self.make(threshold=1, cooldown=5.0)
+        b.record_failure()  # open at t=0
+        clock.now = 5.0
+        assert b.allow()
+        b.record_failure()  # probe failed: re-open at t=5
+        assert b.state == "open" and b.trips == 2
+        clock.now = 9.0
+        assert not b.allow()
+        clock.now = 10.0
+        assert b.allow()
+
+    def test_snapshot_shape(self):
+        b, _ = self.make()
+        snap = b.snapshot()
+        assert snap == {"state": "closed", "failures": 0, "trips": 0}
+
+
+# -------------------------------------------------------------------- Answer
+class TestAnswer:
+    def test_unpacks_like_historical_two_tuple(self):
+        a = Answer.make("hist", 12.5, degraded=True, stale_version=7)
+        h, e = a
+        assert h == "hist" and e == 12.5
+        assert a[0] == "hist" and len(a) == 2
+
+    def test_degraded_metadata(self):
+        a = Answer.make("hist", 1.0, degraded=True, stale_version=3)
+        assert a.degraded is True and a.stale_version == 3
+
+    def test_plain_tuple_reads_not_degraded(self):
+        # serving code checks `getattr(ans, "degraded", False)`-free:
+        # plain Answers default the class attributes
+        fresh = Answer(("hist", 1.0))
+        assert fresh.degraded is False and fresh.stale_version is None
+
+    def test_equality_with_plain_tuple(self):
+        assert Answer.make("h", 2.0, degraded=True) == ("h", 2.0)
