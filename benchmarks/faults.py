@@ -13,6 +13,14 @@ failpoint/self-healing subsystem, see core/faults.py):
     — an upper bound, since it charges the full call cost on top of the
     measured end-to-end time.  CI asserts ``overhead_ok``: both the
     ingest and query ratios stay ≤ 1.01 (the ≤ 1 % design rule).
+
+    The same analytic bound covers the **lock-discipline witness**
+    (repro.analysis.witness): ns/acquire for a raw ``threading.Lock``
+    vs a disarmed ``OrderedLock`` vs an armed one, plus the number of
+    witnessed acquisitions the ingest workload performs
+    (``witness.acquire_count()``).  The production claim is the
+    *disarmed* delta — one module-global read per acquire — and CI
+    gates ``1 + acquires × max(0, disarmed − raw) / time ≤ 1.01``.
   * **Does the plane actually heal?**  A fixed-seed fault drill — ENOSPC
     and torn WAL appends, flaky fsyncs, worker crashes, poisoned
     applies, failed merge dispatches — runs a multi-tenant script, then
@@ -37,10 +45,12 @@ import json
 import os
 import shutil
 import tempfile
+import threading
 import time
 
 import numpy as np
 
+from repro.analysis import witness
 from repro.core import IngestBackpressure, TenantRegistry, faults
 
 SCHEMA = "bench_faults/v1"
@@ -58,6 +68,21 @@ def _hit_ns_per_call(reps: int, n: int = 200_000) -> float:
         t0 = time.perf_counter()
         for _ in range(n):
             hit("bench.disarmed")
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best * 1e9
+
+
+def _lock_ns_per_acquire(make_lock, reps: int, n: int = 200_000) -> float:
+    """Min-of-reps per-(acquire+release) cost of an uncontended lock —
+    the tight-loop twin of _hit_ns_per_call, for the witness wrappers."""
+    lk = make_lock()
+    acquire, release = lk.acquire, lk.release
+    best = float("inf")
+    for _ in range(reps + 1):  # first rep doubles as warm-up
+        t0 = time.perf_counter()
+        for _ in range(n):
+            acquire()
+            release()
         best = min(best, (time.perf_counter() - t0) / n)
     return best * 1e9
 
@@ -275,7 +300,37 @@ def main(
         query_seconds = _time_min(lambda: _query_once(qreg, panels), reps)
         qreg.close()
         query_ratio = 1.0 + query_hits[0] * hit_ns * 1e-9 / query_seconds
-        overhead_ok = ingest_ratio <= 1.01 and query_ratio <= 1.01
+
+        # ---- lock-witness overhead: ns/acquire × acquires crossed ----
+        was_armed = witness.armed()
+        witness.disarm()
+        raw_lock_ns = _lock_ns_per_acquire(threading.Lock, reps)
+        disarmed_ns = _lock_ns_per_acquire(
+            lambda: witness.OrderedLock("wal._lock"), reps
+        )
+        witness.arm()
+        try:
+            armed_ns = _lock_ns_per_acquire(
+                lambda: witness.OrderedLock("wal._lock"), reps
+            )
+            witness.reset_acquire_count()
+            _ingest_once(parts)  # same workload the failpoint bound uses
+            lock_acquires = witness.acquire_count()
+        finally:
+            if not was_armed:
+                witness.disarm()
+        # production claim: the *disarmed* delta over a raw Lock (one
+        # module-global read); clamp at 0 — timer noise can invert the
+        # two sub-ns means
+        disarmed_delta_ns = max(0.0, disarmed_ns - raw_lock_ns)
+        lock_ratio = (
+            1.0 + lock_acquires * disarmed_delta_ns * 1e-9 / ingest_seconds
+        )
+        overhead_ok = (
+            ingest_ratio <= 1.01
+            and query_ratio <= 1.01
+            and lock_ratio <= 1.01
+        )
 
         # ---- fixed-seed chaos drill ----
         chaos = _chaos_drill(os.path.join(base, "chaos"), 7, chaos_ops)
@@ -294,6 +349,14 @@ def main(
                 "query_seconds": query_seconds,
                 "query_failpoint_hits": query_hits[0],
                 "query_overhead_ratio": query_ratio,
+            },
+            "lock_witness": {
+                "raw_lock_ns_per_acquire": raw_lock_ns,
+                "disarmed_ns_per_acquire": disarmed_ns,
+                "armed_ns_per_acquire": armed_ns,
+                "disarmed_delta_ns": disarmed_delta_ns,
+                "ingest_lock_acquires": lock_acquires,
+                "ingest_overhead_ratio": lock_ratio,
             },
             "overhead_ok": overhead_ok,
             "chaos": chaos,
@@ -316,6 +379,14 @@ def main(
             f"{query_hits[0]} sites × {hit_ns:.0f} ns over a cold "
             "2-tenant dashboard "
             f"(gate ≤ 1.01: {'ok' if query_ratio <= 1.01 else 'FAIL'})",
+        )
+        emit(
+            "witness_disarmed_overhead_ingest",
+            lock_ratio,
+            f"{lock_acquires} acquires × {disarmed_delta_ns:.0f} ns delta "
+            f"(raw {raw_lock_ns:.0f} / disarmed {disarmed_ns:.0f} / armed "
+            f"{armed_ns:.0f} ns) "
+            f"(gate ≤ 1.01: {'ok' if lock_ratio <= 1.01 else 'FAIL'})",
         )
         emit(
             "faults_chaos_degraded_rate",

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Repo static-analysis gate: lint rules + lock-discipline graph.
+
+Usage (the CI invocation)::
+
+    PYTHONPATH=src python scripts/analyze.py src tests benchmarks \
+        --baseline analysis_baseline.json
+
+Exit codes: 0 — no findings outside the ratchet baseline; 1 — new
+findings (printed, one per line); 2 — bad invocation/baseline.
+
+``--update-baseline`` rewrites the baseline to the current finding set,
+keeping justifications for fingerprints that survive; fresh entries get
+a ``TODO`` justification the gate will reject until a human fills it in.
+See ANALYSIS.md for the rule catalogue and the ratchet workflow.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"),
+)
+
+from repro.analysis.findings import (  # noqa: E402
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.lint import SourceFile, run_lint  # noqa: E402
+from repro.analysis.lockgraph import run_lockgraph  # noqa: E402
+
+# fixture trees with *seeded* violations (the analyzer's own tests) and
+# generated/vendored code never gate CI
+EXCLUDE_DIR_NAMES = {
+    "__pycache__", ".git", ".claude", "analysis_fixtures", ".pytest_cache",
+}
+
+
+def collect(paths: list[str], root: str) -> list[SourceFile]:
+    out: list[SourceFile] = []
+    for p in paths:
+        ap = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(ap):
+            out.append(_parse(ap, root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = sorted(
+                d for d in dirnames if d not in EXCLUDE_DIR_NAMES
+            )
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    out.append(_parse(os.path.join(dirpath, name), root))
+    return out
+
+
+def _parse(path: str, root: str) -> SourceFile:
+    with open(path) as f:
+        source = f.read()
+    rel = os.path.relpath(path, root)
+    return SourceFile.parse(rel, source)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--baseline", default=None,
+                    help="ratchet baseline JSON (see ANALYSIS.md)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current finding set")
+    ap.add_argument("--root", default=os.getcwd(),
+                    help="repo root paths are resolved/reported against")
+    args = ap.parse_args(argv)
+
+    try:
+        files = collect(args.paths, args.root)
+    except (OSError, SyntaxError) as e:
+        print(f"analyze: cannot parse inputs: {e}", file=sys.stderr)
+        return 2
+
+    findings = run_lint(files) + run_lockgraph(files)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    if args.update_baseline:
+        if not args.baseline:
+            print("analyze: --update-baseline needs --baseline",
+                  file=sys.stderr)
+            return 2
+        try:
+            old = load_baseline(args.baseline)
+        except ValueError:
+            old = {}
+        save_baseline(args.baseline, findings, old)
+        print(f"analyze: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    try:
+        baseline = load_baseline(args.baseline) if args.baseline else {}
+    except ValueError as e:
+        print(f"analyze: {e}", file=sys.stderr)
+        return 2
+
+    res = apply_baseline(findings, baseline)
+    for f in res.new:
+        print(f.render())
+    if res.suppressed:
+        print(
+            f"analyze: {len(res.suppressed)} baselined finding(s) "
+            "suppressed (ratchet)"
+        )
+    for fp in res.stale:
+        print(
+            f"analyze: stale baseline entry (finding fixed — remove it): "
+            f"{fp}"
+        )
+    n_files = len(files)
+    if res.new:
+        print(
+            f"analyze: {len(res.new)} new finding(s) across {n_files} "
+            "file(s) — fix them or (exceptionally) justify them in the "
+            "baseline",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"analyze: clean — {n_files} file(s), 0 new findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

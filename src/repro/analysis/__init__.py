@@ -1,0 +1,21 @@
+"""Repo-specific static analysis + runtime lock-discipline witness.
+
+Submodules (import what you need; this ``__init__`` stays cheap because
+``repro.core`` imports :mod:`repro.analysis.witness` at module load):
+
+- :mod:`repro.analysis.witness`   — OrderedLock/OrderedRLock runtime witness
+- :mod:`repro.analysis.findings`  — Finding records + ratchet baseline
+- :mod:`repro.analysis.lint`      — AST lint rules from the repo's bug history
+- :mod:`repro.analysis.lockgraph` — static lock-acquisition graph + rank check
+
+CLI entry point: ``scripts/analyze.py`` (see ANALYSIS.md).
+"""
+from repro.analysis.witness import (  # noqa: F401
+    LockOrderError,
+    OrderedLock,
+    OrderedRLock,
+    RANKS,
+    arm,
+    armed,
+    disarm,
+)

@@ -1,0 +1,103 @@
+"""Finding records + the ratchet baseline.
+
+A finding is one rule violation at one source location.  Its
+**fingerprint** deliberately excludes line numbers — ``rule | path |
+enclosing scope | detail token`` — so unrelated edits above a legacy
+finding don't churn the baseline, while moving the offending code to a
+new function *does* (at which point it should be fixed, not re-blessed).
+
+The baseline (``analysis_baseline.json``) is a **ratchet**: every entry
+must carry a human-written justification, new findings always fail the
+gate, and entries whose finding no longer exists are reported as stale
+(so the file only ever shrinks).  ``scripts/analyze.py --update-baseline``
+rewrites it, preserving justifications for surviving fingerprints.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+BASELINE_SCHEMA = "analysis_baseline/v1"
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str       # rule id, e.g. "resource-leak"
+    path: str       # repo-relative posix path
+    line: int       # 1-based; informational only (not fingerprinted)
+    scope: str      # dotted enclosing scope, e.g. "IngestPool._run_batch"
+    message: str    # human-readable description
+    token: str = ""  # rule-chosen stable detail (symbol name, lock pair…)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}|{self.path}|{self.scope}|{self.token}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class BaselineResult:
+    new: list[Finding] = field(default_factory=list)        # fail the gate
+    suppressed: list[Finding] = field(default_factory=list)  # baselined
+    stale: list[str] = field(default_factory=list)  # fingerprints gone
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    """Return {fingerprint: justification}.  Missing file → empty."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    if data.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(
+            f"{path}: expected schema {BASELINE_SCHEMA!r}, "
+            f"got {data.get('schema')!r}"
+        )
+    out: dict[str, str] = {}
+    for entry in data.get("findings", []):
+        just = entry.get("justification", "").strip()
+        if not just:
+            raise ValueError(
+                f"{path}: baseline entry {entry.get('fingerprint')!r} has "
+                "no justification — every ratcheted finding must say why "
+                "it is acceptable"
+            )
+        out[entry["fingerprint"]] = just
+    return out
+
+
+def save_baseline(path: str, findings: list[Finding],
+                  justifications: dict[str, str]) -> None:
+    entries = [
+        {
+            "fingerprint": f.fingerprint,
+            "rule": f.rule,
+            "path": f.path,
+            "justification": justifications.get(
+                f.fingerprint, "TODO: justify or fix"
+            ),
+        }
+        for f in sorted(findings, key=lambda f: f.fingerprint)
+    ]
+    with open(path, "w") as f:
+        json.dump(
+            {"schema": BASELINE_SCHEMA, "findings": entries}, f, indent=2
+        )
+        f.write("\n")
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: dict[str, str]) -> BaselineResult:
+    res = BaselineResult()
+    seen: set[str] = set()
+    for f in findings:
+        seen.add(f.fingerprint)
+        if f.fingerprint in baseline:
+            res.suppressed.append(f)
+        else:
+            res.new.append(f)
+    res.stale = sorted(fp for fp in baseline if fp not in seen)
+    return res

@@ -1,0 +1,675 @@
+"""AST lint rules distilled from this repo's own bug history.
+
+Every rule here is a shipped bug turned into a machine check:
+
+- ``resource-leak``    — the PR 3 / PR 6 NpzFile-fd leaks: a resource
+  factory (``np.load``/``open``/``os.fdopen``/…) whose handle is neither
+  context-managed, ``enter_context``-ed, stored on ``self`` (object
+  lifetime), nor ``.close()``-d in the same scope.
+- ``fsync-order``      — the ``atomic_savez`` contract: ``os.replace``
+  publishing a temp-built path must fsync the payload *before* the
+  rename and the directory *after* it (crash-consistency of PR 6's
+  recovery plane).  Skipped for test files.
+- ``cv-wait``          — ``Condition.wait`` outside a ``while``-predicate
+  loop (spurious wakeups turn a missed predicate into a hang — the
+  enqueue-vs-close wedge class).
+- ``thread-daemon``    — serving-plane ``threading.Thread`` without
+  ``daemon=True``: a wedged worker must never block interpreter exit.
+  Skipped for test files (tests join their threads explicitly).
+- ``test-sleep``       — ``time.sleep`` in ``tests/``: the suite's
+  zero-sleep discipline (deterministic interleavings come from
+  failpoints and events, not timing).
+- ``bare-except``      — ``except:`` anywhere (swallows KeyboardInterrupt
+  and the witness's LockOrderError alike).
+- ``swallowed-oserror``— an ``except OSError: pass/continue`` in a
+  durability module; legitimate cleanup sites are ratcheted in
+  ``analysis_baseline.json`` with per-site justifications.
+- ``failpoint-*``      — every ``faults.hit`` site name must be a member
+  of ``faults.SITES`` (declared exactly once), every member must have a
+  live site, and every member must be referenced by at least one test.
+
+All rules are stdlib-``ast`` only.  See ANALYSIS.md for the catalogue
+and how to add a rule.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+
+from repro.analysis.findings import Finding
+
+RESOURCE_FACTORIES = {
+    "open",
+    "io.open",
+    "os.fdopen",
+    "np.load",
+    "numpy.load",
+    "gzip.open",
+    "bz2.open",
+    "lzma.open",
+}
+
+# .wait() receivers assumed to be Conditions unless the file assigns them
+# threading.Event(); file-local `threading.Condition(...)` assignments
+# extend this set.
+COND_NAME_HINTS = {"cv", "_cv", "cond", "condition"}
+
+SWALLOWED_EXCS = {
+    "OSError",
+    "IOError",
+    "EnvironmentError",
+    "FileNotFoundError",
+    "PermissionError",
+    "InterruptedError",
+}
+
+# modules whose error handling guards on-disk state
+DURABILITY_BASENAMES = {
+    "workers.py",
+    "stream.py",
+    "checkpoint.py",
+    "tenant.py",
+    "scrub.py",
+    "faults.py",
+}
+
+
+@dataclass
+class SourceFile:
+    path: str          # repo-relative posix path
+    tree: ast.Module
+    is_test: bool
+    source: str = ""
+
+    @classmethod
+    def parse(cls, path: str, source: str, is_test: bool | None = None):
+        if is_test is None:
+            parts = path.replace(os.sep, "/").split("/")
+            is_test = "tests" in parts or os.path.basename(path).startswith(
+                "test_"
+            )
+        return cls(
+            path=path.replace(os.sep, "/"),
+            tree=ast.parse(source, filename=path),
+            is_test=is_test,
+            source=source,
+        )
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'np.load' for Attribute chains over Names, 'open' for Names."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _receiver_leaf(node: ast.AST) -> str | None:
+    """Last segment before the method: 'cv' for ``self.pool.cv.wait``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _iter_local(node: ast.AST, *, into_defs: bool = False):
+    """Walk descendants without crossing into nested def/class bodies."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not into_defs and isinstance(
+            n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+        ):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _scopes(tree: ast.Module):
+    """Yield (scope_name, scope_node) for the module and every def."""
+    yield "<module>", tree
+
+    def rec(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{prefix}{child.name}"
+                yield name, child
+                yield from rec(child, f"{name}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from rec(child, f"{prefix}{child.name}.")
+            else:
+                yield from rec(child, prefix)
+
+    yield from rec(tree, "")
+
+
+@dataclass
+class _FileFacts:
+    cond_names: set[str] = field(default_factory=set)
+    event_names: set[str] = field(default_factory=set)
+    from_time_sleep: bool = False
+    from_threading_thread: bool = False
+
+
+def _file_facts(sf: SourceFile) -> _FileFacts:
+    facts = _FileFacts()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            callee = _dotted(node.value.func)
+            names = {
+                _receiver_leaf(t)
+                for t in node.targets
+                if isinstance(t, (ast.Name, ast.Attribute))
+            }
+            names.discard(None)
+            if callee in ("threading.Condition", "Condition"):
+                facts.cond_names |= names
+            elif callee in ("threading.Event", "Event"):
+                facts.event_names |= names
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "time":
+                if any(a.name == "sleep" for a in node.names):
+                    facts.from_time_sleep = True
+            if node.module == "threading":
+                if any(a.name == "Thread" for a in node.names):
+                    facts.from_threading_thread = True
+    return facts
+
+
+def _managed_calls(scope: ast.AST) -> set[int]:
+    """ids() of Call nodes whose handle is lifetime-managed in scope."""
+    managed: set[int] = set()
+    for node in _iter_local(scope):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if isinstance(item.context_expr, ast.Call):
+                    managed.add(id(item.context_expr))
+        elif isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            if callee and callee.split(".")[-1] == "enter_context":
+                for arg in node.args:
+                    if isinstance(arg, ast.Call):
+                        managed.add(id(arg))
+    return managed
+
+
+def _closed_names(scope: ast.AST) -> set[str]:
+    out: set[str] = set()
+    for node in _iter_local(scope):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "close"
+            and isinstance(node.func.value, ast.Name)
+        ):
+            out.add(node.func.value.id)
+    return out
+
+
+def _assignment_target(scope: ast.AST, call: ast.Call):
+    """(kind, name) where kind ∈ {'name', 'self-attr', None}."""
+    for node in _iter_local(scope):
+        if isinstance(node, ast.Assign) and node.value is call:
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                return "name", t.id
+            if isinstance(t, ast.Attribute) and isinstance(
+                t.value, ast.Name
+            ) and t.value.id == "self":
+                return "self-attr", t.attr
+        elif isinstance(node, ast.withitem) and node.context_expr is call:
+            return "with", None
+    return None, None
+
+
+# --------------------------------------------------------------------- rules
+
+
+def _rule_resource_leak(sf: SourceFile) -> list[Finding]:
+    out = []
+    for scope_name, scope in _scopes(sf.tree):
+        managed = _managed_calls(scope)
+        closed = _closed_names(scope)
+        for node in _iter_local(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if callee not in RESOURCE_FACTORIES:
+                continue
+            if id(node) in managed:
+                continue
+            kind, name = _assignment_target(scope, node)
+            if kind == "self-attr":
+                continue  # object-lifetime handle (closed by the owner)
+            if kind == "name" and name in closed:
+                continue
+            out.append(
+                Finding(
+                    rule="resource-leak",
+                    path=sf.path,
+                    line=node.lineno,
+                    scope=scope_name,
+                    message=(
+                        f"{callee}(...) handle is never context-managed or "
+                        f"closed in this scope — fd/NpzFile leak"
+                    ),
+                    token=callee,
+                )
+            )
+    return out
+
+
+def _temp_path_names(scope: ast.AST) -> set[str]:
+    temps: set[str] = set()
+    for node in _iter_local(scope):
+        if not isinstance(node, ast.Assign) or not isinstance(
+            node.value, ast.Call
+        ):
+            continue
+        callee = _dotted(node.value.func) or ""
+        t = node.targets[0]
+        if callee.endswith("mkstemp") and isinstance(t, ast.Tuple):
+            if len(t.elts) == 2 and isinstance(t.elts[1], ast.Name):
+                temps.add(t.elts[1].id)
+        elif callee.endswith(("mkdtemp", "mktemp")) and isinstance(
+            t, ast.Name
+        ):
+            temps.add(t.id)
+        elif (
+            callee.endswith("path.join")
+            and node.value.args
+            and isinstance(node.value.args[0], ast.Name)
+            and node.value.args[0].id in temps
+            and isinstance(t, ast.Name)
+        ):
+            temps.add(t.id)  # paths derived from a temp dir
+    return temps
+
+
+def _is_temp_derived(node: ast.AST, temps: set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in temps
+    if isinstance(node, ast.Call):
+        callee = _dotted(node.func) or ""
+        if callee.endswith("path.join") and node.args:
+            return _is_temp_derived(node.args[0], temps)
+    return False
+
+
+def _rule_fsync_order(sf: SourceFile) -> list[Finding]:
+    if sf.is_test:
+        return []
+    out = []
+    for scope_name, scope in _scopes(sf.tree):
+        temps = _temp_path_names(scope)
+        if not temps:
+            continue
+        fsync_lines = []  # lines with os.fsync(...) or *fsync* helper calls
+        replaces = []
+        for node in _iter_local(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func) or ""
+            if "fsync" in callee.split(".")[-1]:
+                fsync_lines.append(node.lineno)
+            elif callee in ("os.replace", "os.rename") and node.args:
+                if _is_temp_derived(node.args[0], temps):
+                    replaces.append(node)
+        for idx, rep in enumerate(replaces):
+            tok = f"replace#{idx}"
+            if not any(ln < rep.lineno for ln in fsync_lines):
+                out.append(
+                    Finding(
+                        rule="fsync-order",
+                        path=sf.path,
+                        line=rep.lineno,
+                        scope=scope_name,
+                        message=(
+                            "os.replace publishes a temp-built path with no "
+                            "fsync of the payload before the rename — a "
+                            "crash can publish torn data (atomic_savez "
+                            "contract)"
+                        ),
+                        token=f"{tok}:pre-fsync",
+                    )
+                )
+            if not any(ln > rep.lineno for ln in fsync_lines):
+                out.append(
+                    Finding(
+                        rule="fsync-order",
+                        path=sf.path,
+                        line=rep.lineno,
+                        scope=scope_name,
+                        message=(
+                            "no directory fsync after os.replace — the "
+                            "rename itself may not survive a crash "
+                            "(atomic_savez contract)"
+                        ),
+                        token=f"{tok}:dir-fsync",
+                    )
+                )
+    return out
+
+
+def _rule_cv_wait(sf: SourceFile, facts: _FileFacts) -> list[Finding]:
+    cond_names = (facts.cond_names | COND_NAME_HINTS) - facts.event_names
+    out = []
+
+    def rec(node, scope_name, while_depth):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                rec(child, f"{scope_name}.{child.name}"
+                    if scope_name != "<module>" else child.name, 0)
+                continue
+            if isinstance(child, ast.ClassDef):
+                rec(child, child.name if scope_name == "<module>"
+                    else f"{scope_name}.{child.name}", while_depth)
+                continue
+            depth = while_depth + (1 if isinstance(child, ast.While) else 0)
+            if (
+                isinstance(child, ast.Call)
+                and isinstance(child.func, ast.Attribute)
+                and child.func.attr == "wait"
+                and _receiver_leaf(child.func.value) in cond_names
+                and while_depth == 0
+            ):
+                out.append(
+                    Finding(
+                        rule="cv-wait",
+                        path=sf.path,
+                        line=child.lineno,
+                        scope=scope_name,
+                        message=(
+                            "Condition.wait outside a while-predicate loop "
+                            "— spurious wakeup turns a missed predicate "
+                            "into a lost signal or hang"
+                        ),
+                        token=_receiver_leaf(child.func.value) or "cv",
+                    )
+                )
+            rec(child, scope_name, depth)
+
+    rec(sf.tree, "<module>", 0)
+    return out
+
+
+def _rule_thread_daemon(sf: SourceFile, facts: _FileFacts) -> list[Finding]:
+    if sf.is_test:
+        return []
+    out = []
+    thread_callees = {"threading.Thread"}
+    if facts.from_threading_thread:
+        thread_callees.add("Thread")
+    for scope_name, scope in _scopes(sf.tree):
+        daemon_assigned = any(
+            isinstance(n, ast.Assign)
+            and isinstance(n.targets[0], ast.Attribute)
+            and n.targets[0].attr == "daemon"
+            for n in _iter_local(scope)
+        )
+        for node in _iter_local(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            if _dotted(node.func) not in thread_callees:
+                continue
+            has_daemon = any(
+                kw.arg == "daemon"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+                for kw in node.keywords
+            )
+            if not has_daemon and not daemon_assigned:
+                out.append(
+                    Finding(
+                        rule="thread-daemon",
+                        path=sf.path,
+                        line=node.lineno,
+                        scope=scope_name,
+                        message=(
+                            "serving-plane Thread without daemon=True — a "
+                            "wedged worker would block interpreter exit"
+                        ),
+                        token="Thread",
+                    )
+                )
+    return out
+
+
+def _rule_test_sleep(sf: SourceFile, facts: _FileFacts) -> list[Finding]:
+    if not sf.is_test:
+        return []
+    out = []
+    for scope_name, scope in _scopes(sf.tree):
+        for node in _iter_local(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if callee == "time.sleep" or (
+                callee == "sleep" and facts.from_time_sleep
+            ):
+                out.append(
+                    Finding(
+                        rule="test-sleep",
+                        path=sf.path,
+                        line=node.lineno,
+                        scope=scope_name,
+                        message=(
+                            "time.sleep in a test — interleavings must come "
+                            "from failpoints/events, not wall-clock timing "
+                            "(zero-sleep discipline)"
+                        ),
+                        token="sleep",
+                    )
+                )
+    return out
+
+
+def _exc_names(node: ast.AST | None) -> set[str]:
+    if node is None:
+        return set()
+    if isinstance(node, ast.Tuple):
+        return set().union(*(_exc_names(e) for e in node.elts))
+    name = _dotted(node)
+    return {name.split(".")[-1]} if name else set()
+
+
+def _rule_excepts(sf: SourceFile) -> list[Finding]:
+    out = []
+    durability = os.path.basename(sf.path) in DURABILITY_BASENAMES
+    for scope_name, scope in _scopes(sf.tree):
+        idx = 0
+        for node in _iter_local(scope):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(
+                    Finding(
+                        rule="bare-except",
+                        path=sf.path,
+                        line=node.lineno,
+                        scope=scope_name,
+                        message="bare except: swallows KeyboardInterrupt, "
+                        "LockOrderError and every other invariant signal",
+                        token=f"bare#{idx}",
+                    )
+                )
+                idx += 1
+                continue
+            names = _exc_names(node.type)
+            if (
+                durability
+                and not sf.is_test
+                and names
+                and names <= SWALLOWED_EXCS
+                and all(
+                    isinstance(s, (ast.Pass, ast.Continue)) for s in node.body
+                )
+            ):
+                out.append(
+                    Finding(
+                        rule="swallowed-oserror",
+                        path=sf.path,
+                        line=node.lineno,
+                        scope=scope_name,
+                        message=(
+                            f"except {'/'.join(sorted(names))}: "
+                            f"{'pass' if isinstance(node.body[0], ast.Pass) else 'continue'}"
+                            " in a durability path — a swallowed disk error "
+                            "here can silently drop acked data (justify in "
+                            "the ratchet baseline or handle it)"
+                        ),
+                        token=f"{'+'.join(sorted(names))}#{idx}",
+                    )
+                )
+                idx += 1
+    return out
+
+
+# ------------------------------------------------------- failpoint project rule
+
+
+def _string_constants(tree: ast.AST) -> set[str]:
+    return {
+        n.value
+        for n in ast.walk(tree)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    }
+
+
+def run_failpoint_rule(files: list[SourceFile]) -> list[Finding]:
+    declared: dict[str, tuple[str, int]] = {}  # name -> (path, line)
+    declarations = 0
+    hits: list[tuple[str, SourceFile, int]] = []
+    injects: list[tuple[str, SourceFile, int]] = []
+    test_strings: set[str] = set()
+    sites_file = None
+
+    for sf in files:
+        if sf.is_test:
+            test_strings |= _string_constants(sf.tree)
+        base = os.path.basename(sf.path)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func) or ""
+            leaf = callee.split(".")[-1]
+            if (
+                isinstance(node.func, ast.Name)
+                or callee.startswith("faults.")
+            ) and leaf in ("hit", "inject"):
+                if base == "faults.py":
+                    continue  # the registry's own internals
+                if node.args and isinstance(node.args[0], ast.Constant):
+                    name = node.args[0].value
+                    (hits if leaf == "hit" else injects).append(
+                        (name, sf, node.lineno)
+                    )
+        if base == "faults.py" and not sf.is_test:
+            for node in ast.walk(sf.tree):
+                if (
+                    isinstance(node, ast.Assign)
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "SITES"
+                ):
+                    declarations += 1
+                    sites_file = sf
+                    for c in ast.walk(node.value):
+                        if isinstance(c, ast.Constant) and isinstance(
+                            c.value, str
+                        ):
+                            declared[c.value] = (sf.path, node.lineno)
+
+    out: list[Finding] = []
+    if sites_file is None:
+        return out  # no registry in the analyzed set — nothing to check
+    if declarations != 1:
+        out.append(
+            Finding(
+                rule="failpoint-declared-once",
+                path=sites_file.path,
+                line=1,
+                scope="<module>",
+                message=f"faults.SITES assigned {declarations} times — the "
+                "site registry must be declared exactly once",
+                token="SITES",
+            )
+        )
+    hit_names = {name for name, _sf, _ln in hits if not _sf.is_test}
+    for name, sf, line in hits + injects:
+        if name not in declared:
+            out.append(
+                Finding(
+                    rule="failpoint-undeclared",
+                    path=sf.path,
+                    line=line,
+                    scope="<module>",
+                    message=f"failpoint {name!r} is not declared in "
+                    "faults.SITES (typo, or add it to the registry)",
+                    token=name,
+                )
+            )
+    for name, (path, line) in sorted(declared.items()):
+        if name not in hit_names:
+            out.append(
+                Finding(
+                    rule="failpoint-unused",
+                    path=path,
+                    line=line,
+                    scope="<module>",
+                    message=f"declared failpoint {name!r} has no live "
+                    "faults.hit site in src",
+                    token=name,
+                )
+            )
+        elif name not in test_strings:
+            out.append(
+                Finding(
+                    rule="failpoint-untested",
+                    path=path,
+                    line=line,
+                    scope="<module>",
+                    message=f"failpoint {name!r} is referenced by no test — "
+                    "an injectable fault nobody injects",
+                    token=name,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------- entry point
+
+
+def run_lint(files: list[SourceFile]) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        facts = _file_facts(sf)
+        findings += _rule_resource_leak(sf)
+        findings += _rule_fsync_order(sf)
+        findings += _rule_cv_wait(sf, facts)
+        findings += _rule_thread_daemon(sf, facts)
+        findings += _rule_test_sleep(sf, facts)
+        findings += _rule_excepts(sf)
+    findings += run_failpoint_rule(files)
+    return _dedupe_fingerprints(findings)
+
+
+def _dedupe_fingerprints(findings: list[Finding]) -> list[Finding]:
+    """Suffix repeated fingerprints so each finding ratchets separately."""
+    seen: dict[str, int] = {}
+    out = []
+    for f in findings:
+        n = seen.get(f.fingerprint, 0)
+        seen[f.fingerprint] = n + 1
+        if n:
+            f = Finding(
+                rule=f.rule, path=f.path, line=f.line, scope=f.scope,
+                message=f.message, token=f"{f.token}~{n}",
+            )
+        out.append(f)
+    return out

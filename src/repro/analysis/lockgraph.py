@@ -1,0 +1,437 @@
+"""Static lock-acquisition graph + hierarchy check.
+
+Extracts, from the AST of the core modules, *which documented locks may
+be acquired while which others are held* — across function calls — and
+checks every edge against the rank table shared with the runtime witness
+(:data:`repro.analysis.witness.RANKS`).  Rank inversions and cycles are
+reported as findings; the runtime witness then re-checks the same
+discipline on every real acquisition the test suite drives, so the two
+analyses bracket each other (static = all *syntactic* paths, runtime =
+the *executed* ones with exact object identity).
+
+Precision notes (deliberate, documented approximations):
+
+- Lock expressions are recognized by declarative pattern tables
+  (``CLASS_ATTR_LOCKS`` for ``self.X`` inside a known class,
+  ``RECEIVER_CLASS`` leaf-name hints for ``store._lock`` /
+  ``reg._lock``-style cross-object accesses).  Unknown lock-ish
+  expressions are ignored, not guessed.
+- Calls resolve to: same-class methods (``self.m()``), methods of a
+  hinted receiver class (``self.wal.append()`` → ``WriteAheadLog``),
+  configured callback bindings (``self.wrap_error`` is a constructor
+  argument — invisible to a naive call graph), or a *globally unique*
+  function name.  Ambiguous names and builtin-ish container methods
+  (``append``/``get``/``put``…) are skipped rather than over-linked —
+  except through the hint tables above, which is why ``wal.append`` still
+  resolves while ``errors.append`` does not.
+- ``stack.enter_context(lock)`` and bare ``lock.acquire()`` hold until
+  function exit (``release()`` drops); branches union their held-sets.
+
+The transitive summary is a fixed point of "locks this function may
+acquire"; an edge ``(held → acquired)`` is emitted for every direct
+acquisition and every call made while holding a lock.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import SourceFile, _dotted, _receiver_leaf
+from repro.analysis.witness import RANKS
+
+# (class, self-attribute) → documented lock id
+CLASS_ATTR_LOCKS: dict[tuple[str, str], str] = {
+    ("TenantRegistry", "_lock"): "registry._lock",
+    ("HistogramStore", "_lock"): "store._lock",
+    ("WriteAheadLog", "_lock"): "wal._lock",
+    ("WriteAheadLog", "_commit_lock"): "wal._commit_lock",
+    ("IngestPool", "ingest_mutex"): "pool.ingest_mutex",
+    ("IngestPool", "_state_lock"): "pool._state_lock",
+    ("IngestPool", "cv"): "pool.cv",
+    ("NodeArena", "_lock"): "arena._lock",
+}
+
+# module-level lock names → lock id (qualified by defining basename)
+MODULE_LOCKS: dict[tuple[str, str], str] = {
+    ("interval_tree.py", "_COUNTER_LOCK"): "tree.counters",
+    ("faults.py", "_LOCK"): "faults.registry",
+}
+
+# receiver-leaf-name → class, for cross-object lock/method accesses
+RECEIVER_CLASS: dict[str, str] = {
+    "store": "HistogramStore",
+    "stores": "HistogramStore",
+    "_stores": "HistogramStore",
+    "summarized": "HistogramStore",  # tenant.py's {name: (store, …)} map
+    "reg": "TenantRegistry",
+    "registry": "TenantRegistry",
+    "wal": "WriteAheadLog",
+    "_wal": "WriteAheadLog",
+    "pool": "IngestPool",
+    "_pool": "IngestPool",
+    "arena": "NodeArena",
+    "_arena": "NodeArena",
+    "tree": "IntervalTree",
+    "_tree": "IntervalTree",
+}
+
+# constructor-argument callbacks: attribute call on self that is really a
+# bound method of another class (invisible to syntactic resolution)
+CALLBACK_BINDINGS: dict[str, list[tuple[str, str]]] = {
+    "apply_batch": [
+        ("HistogramStore", "_apply_batch"),
+        ("HistogramStore", "_apply_worker_batch"),
+        ("TenantRegistry", "_apply_worker_batch"),
+    ],
+    "wrap_error": [
+        ("HistogramStore", "_wrap_async_error"),
+        ("TenantRegistry", "_wrap_async_error"),
+    ],
+    "on_batch_end": [
+        ("HistogramStore", "_sweep_after_batch"),
+        ("TenantRegistry", "_sweep_after_batch"),
+    ],
+    "wal_record": [],
+}
+
+# container/stdlib method names never resolved on unknown receivers
+SKIP_METHODS = frozenset({
+    "append", "extend", "add", "discard", "remove", "pop", "popleft",
+    "clear", "update", "get", "put", "get_nowait", "put_nowait", "items",
+    "keys", "values", "copy", "sort", "index", "count", "join", "start",
+    "is_alive", "read", "write", "flush", "seek", "tell", "truncate",
+    "fileno",
+    "close", "open", "strip", "split", "format", "encode", "decode",
+    "startswith", "endswith", "setdefault", "tolist", "astype", "reshape",
+    "acquire", "release", "wait", "notify", "notify_all", "set",
+    "is_set", "locked",
+})
+
+# locks safe to re-acquire with another instance (RLock and/or keyed
+# same-rank family whose sorted order the runtime witness checks)
+REENTRANT = frozenset({
+    "registry._lock", "store._lock", "arena._lock", "pool.cv",
+})
+
+
+@dataclass
+class _Func:
+    key: str                 # "basename.py:Class.name" (or ":name")
+    cls: str | None
+    name: str
+    path: str
+    node: ast.AST
+    acquires: list = field(default_factory=list)  # (lock, held, line)
+    calls: list = field(default_factory=list)     # (callees, held, line, label)
+    trans: set = field(default_factory=set)       # fixed-point lock set
+
+
+class LockGraph:
+    def __init__(self, files: list[SourceFile]):
+        self.files = [f for f in files if not f.is_test]
+        self.funcs: dict[str, _Func] = {}
+        self.by_class: dict[tuple[str, str], list[str]] = {}
+        self.by_name: dict[str, list[str]] = {}
+        self._index()
+        for fn in self.funcs.values():
+            self._scan(fn)
+        self._fixed_point()
+
+    # ------------------------------------------------------------ indexing
+    def _index(self) -> None:
+        for sf in self.files:
+            base = os.path.basename(sf.path)
+
+            def add(node, cls):
+                name = f"{cls}.{node.name}" if cls else node.name
+                fn = _Func(
+                    key=f"{base}:{name}", cls=cls, name=node.name,
+                    path=sf.path, node=node,
+                )
+                self.funcs[fn.key] = fn
+                if cls:
+                    self.by_class.setdefault((cls, node.name), []).append(
+                        fn.key
+                    )
+                self.by_name.setdefault(node.name, []).append(fn.key)
+
+            for child in ast.iter_child_nodes(sf.tree):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    add(child, None)
+                elif isinstance(child, ast.ClassDef):
+                    for sub in ast.iter_child_nodes(child):
+                        if isinstance(
+                            sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                        ):
+                            add(sub, child.name)
+
+    # ------------------------------------------------------- lock resolution
+    def _resolve_lock(self, expr: ast.AST, fn: _Func) -> str | None:
+        base = os.path.basename(fn.path)
+        if isinstance(expr, ast.Name):
+            return MODULE_LOCKS.get((base, expr.id))
+        if not isinstance(expr, ast.Attribute):
+            return None
+        recv = expr.value
+        # strip subscripts: summarized[name][0]._lock → leaf 'summarized'
+        while isinstance(recv, ast.Subscript):
+            recv = recv.value
+        leaf = _receiver_leaf(recv)
+        if leaf == "self" and fn.cls:
+            return CLASS_ATTR_LOCKS.get((fn.cls, expr.attr))
+        if isinstance(recv, ast.Attribute):
+            # self.wal._lock / self._pool.cv — hint on the inner attribute
+            leaf = recv.attr
+        cls = RECEIVER_CLASS.get(leaf or "")
+        if cls:
+            return CLASS_ATTR_LOCKS.get((cls, expr.attr))
+        return None
+
+    # ------------------------------------------------------- call resolution
+    def _resolve_call(self, node: ast.Call, fn: _Func) -> tuple[list[str], str]:
+        func = node.func
+        if isinstance(func, ast.Name):
+            name = func.id
+            base = os.path.basename(fn.path)
+            local = [k for k in self.by_name.get(name, ())
+                     if k.startswith(f"{base}:") and ":" + name == k[len(base):]]
+            if local:
+                return local, name
+            cands = [
+                k for k in self.by_name.get(name, ())
+                if self.funcs[k].cls is None
+            ]
+            return (cands, name) if len(cands) == 1 else ([], name)
+        if not isinstance(func, ast.Attribute):
+            return [], "?"
+        meth = func.attr
+        recv = func.value
+        while isinstance(recv, ast.Subscript):
+            recv = recv.value
+        leaf = _receiver_leaf(recv)
+        if leaf == "self" and fn.cls:
+            own = self.by_class.get((fn.cls, meth))
+            if own:
+                return own, f"self.{meth}"
+            bound = [
+                k
+                for cls, m in CALLBACK_BINDINGS.get(meth, ())
+                for k in self.by_class.get((cls, m), ())
+            ]
+            return bound, f"self.{meth} (callback)"
+        if isinstance(recv, ast.Attribute):
+            leaf = recv.attr
+        cls = RECEIVER_CLASS.get(leaf or "")
+        if cls:
+            return self.by_class.get((cls, meth), []), f"{leaf}.{meth}"
+        if meth in SKIP_METHODS:
+            return [], meth
+        cands = self.by_name.get(meth, [])
+        return (cands, meth) if len(cands) == 1 else ([], meth)
+
+    # ----------------------------------------------------------- scanning
+    def _scan(self, fn: _Func) -> None:
+        body = getattr(fn.node, "body", [])
+        self._walk_body(body, frozenset(), fn)
+
+    def _walk_body(self, body, held, fn):
+        for stmt in body:
+            held = self._walk_stmt(stmt, held, fn)
+        return held
+
+    def _walk_stmt(self, stmt, held, fn):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            # nested defs execute later; scan them with empty held context
+            # (their closure may outlive the enclosing with-block) AND with
+            # the current one (they may run inline) — conservative: current
+            self._walk_body(getattr(stmt, "body", []), held, fn)
+            return held
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            inner = held
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, inner, fn)
+                lock = self._resolve_lock_expr(item.context_expr, fn)
+                if lock:
+                    fn.acquires.append((lock, inner, item.context_expr.lineno
+                                        if hasattr(item.context_expr, "lineno")
+                                        else stmt.lineno))
+                    inner = inner | {lock}
+            self._walk_body(stmt.body, inner, fn)
+            return held  # the with-block released its locks
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter, held, fn)
+            held = self._walk_body(stmt.body, held, fn)
+            return self._walk_body(stmt.orelse, held, fn)
+        if isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, held, fn)
+            held = self._walk_body(stmt.body, held, fn)
+            return self._walk_body(stmt.orelse, held, fn)
+        if isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, held, fn)
+            a = self._walk_body(stmt.body, held, fn)
+            b = self._walk_body(stmt.orelse, held, fn)
+            return a | b
+        if isinstance(stmt, ast.Try):
+            h = self._walk_body(stmt.body, held, fn)
+            for handler in stmt.handlers:
+                h |= self._walk_body(handler.body, held, fn)
+            h |= self._walk_body(stmt.orelse, h, fn)
+            return self._walk_body(stmt.finalbody, h, fn)
+        # plain statement: scan its expressions for calls/acquire/release
+        return self._scan_stmt_exprs(stmt, held, fn)
+
+    def _scan_stmt_exprs(self, stmt, held, fn):
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func) or ""
+            leaf = callee.split(".")[-1]
+            if leaf == "enter_context" and node.args:
+                lock = self._resolve_lock_expr(node.args[0], fn)
+                if lock:
+                    fn.acquires.append((lock, held, node.lineno))
+                    held = held | {lock}
+                    continue
+            if leaf == "acquire" and isinstance(node.func, ast.Attribute):
+                lock = self._resolve_lock(node.func.value, fn)
+                if lock:
+                    fn.acquires.append((lock, held, node.lineno))
+                    held = held | {lock}
+                    continue
+            if leaf == "release" and isinstance(node.func, ast.Attribute):
+                lock = self._resolve_lock(node.func.value, fn)
+                if lock:
+                    held = held - {lock}
+                    continue
+            callees, label = self._resolve_call(node, fn)
+            if callees:
+                fn.calls.append((callees, held, node.lineno, label))
+        return held
+
+    def _scan_expr(self, expr, held, fn):
+        if expr is not None:
+            self._scan_stmt_exprs(ast.Expr(value=expr), held, fn)
+
+    def _resolve_lock_expr(self, expr, fn):
+        if isinstance(expr, ast.Call):
+            return None  # ExitStack(), Condition(...) etc.
+        return self._resolve_lock(expr, fn)
+
+    # --------------------------------------------------------- fixed point
+    def _fixed_point(self) -> None:
+        for fn in self.funcs.values():
+            fn.trans = {lock for lock, _h, _l in fn.acquires}
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.funcs.values():
+                for callees, _held, _line, _label in fn.calls:
+                    for key in callees:
+                        extra = self.funcs[key].trans - fn.trans
+                        if extra:
+                            fn.trans |= extra
+                            changed = True
+
+    # -------------------------------------------------------------- edges
+    def edges(self):
+        """Yield (held, acquired, path, line, scope, via)."""
+        for fn in self.funcs.values():
+            scope = fn.key.split(":", 1)[1]
+            for lock, held, line in fn.acquires:
+                for h in held:
+                    yield h, lock, fn.path, line, scope, None
+            for callees, held, line, label in fn.calls:
+                if not held:
+                    continue
+                for key in callees:
+                    for lock in self.funcs[key].trans:
+                        for h in held:
+                            yield h, lock, fn.path, line, scope, label
+
+    def check(self) -> list[Finding]:
+        out = []
+        seen: set[tuple] = set()
+        graph: dict[str, set[str]] = {}
+        provenance: dict[tuple[str, str], tuple] = {}
+        for h, a, path, line, scope, via in self.edges():
+            graph.setdefault(h, set()).add(a)
+            provenance.setdefault((h, a), (path, line, scope, via))
+            if h == a:
+                ok = a in REENTRANT
+            else:
+                ok = RANKS[h] < RANKS[a]
+            if ok:
+                continue
+            key = (h, a, scope)
+            if key in seen:
+                continue
+            seen.add(key)
+            via_txt = f" via call to {via}" if via else ""
+            if h == a:
+                msg = (
+                    f"possible self-deadlock: {scope} may re-acquire "
+                    f"non-reentrant {a!r}{via_txt}"
+                )
+            else:
+                msg = (
+                    f"lock-rank inversion: {scope} acquires {a!r} (rank "
+                    f"{RANKS[a]}) while holding {h!r} (rank {RANKS[h]})"
+                    f"{via_txt}"
+                )
+            out.append(
+                Finding(
+                    rule="lock-order",
+                    path=path,
+                    line=line,
+                    scope=scope,
+                    message=msg,
+                    token=f"{h}->{a}",
+                )
+            )
+        out += self._cycles(graph)
+        return out
+
+    def _cycles(self, graph: dict[str, set[str]]) -> list[Finding]:
+        out = []
+        state: dict[str, int] = {}
+        stack: list[str] = []
+        reported: set[frozenset] = set()
+
+        def dfs(node):
+            state[node] = 1
+            stack.append(node)
+            for nxt in sorted(graph.get(node, ())):
+                if nxt == node:
+                    continue  # reentrant self-edges are rank-checked above
+                if state.get(nxt, 0) == 1:
+                    cyc = stack[stack.index(nxt):] + [nxt]
+                    key = frozenset(cyc)
+                    if key not in reported:
+                        reported.add(key)
+                        out.append(
+                            Finding(
+                                rule="lock-cycle",
+                                path="<lock-graph>",
+                                line=0,
+                                scope="<graph>",
+                                message="lock acquisition cycle: "
+                                + " -> ".join(cyc),
+                                token="|".join(sorted(key)),
+                            )
+                        )
+                elif state.get(nxt, 0) == 0:
+                    dfs(nxt)
+            stack.pop()
+            state[node] = 2
+
+        for node in sorted(graph):
+            if state.get(node, 0) == 0:
+                dfs(node)
+        return out
+
+
+def run_lockgraph(files: list[SourceFile]) -> list[Finding]:
+    return LockGraph(files).check()

@@ -28,6 +28,15 @@ from repro.core import faults
 SEP = "|"
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory fd so a just-renamed entry survives a crash."""
+    dfd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -54,7 +63,17 @@ def save_checkpoint(
             payload.update(
                 {f"o{SEP}{k}": v for k, v in _flatten(opt_state).items()}
             )
-        np.savez(os.path.join(tmp, "arrays.npz"), **payload)
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays_path, **payload)
+        # np.savez closes the zip without fsync — a crash after the rename
+        # below could publish a manifest pointing at torn array data.
+        # Same discipline as stream.atomic_savez: payload fsync before the
+        # rename, directory fsync after it.
+        fd = os.open(arrays_path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
         manifest = {
             "step": int(step),
             "keys": sorted(payload),
@@ -67,14 +86,20 @@ def save_checkpoint(
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        _fsync_dir(ckpt_dir)  # make the rename itself durable
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    # atomic LATEST pointer
+    # atomic LATEST pointer — fsynced before the rename (an un-synced
+    # pointer can survive a crash as an empty file, orphaning the step
+    # directory it was about to publish), directory fsync after
     fd, ptr_tmp = tempfile.mkstemp(dir=ckpt_dir)
     with os.fdopen(fd, "w") as f:
         f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _fsync_dir(ckpt_dir)
     return final
 
 

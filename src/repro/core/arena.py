@@ -88,10 +88,9 @@ per unique slot so existing budget calibrations are unchanged.
 """
 from __future__ import annotations
 
-import threading
-
 import numpy as np
 
+from repro.analysis.witness import OrderedRLock
 from repro.core import faults
 
 __all__ = ["NodeArena"]
@@ -151,7 +150,7 @@ class NodeArena:
     def __init__(self):
         self._planes: dict[int, _Plane] = {}
         # RLock: public entry points may nest (alloc → reap → free lists)
-        self._lock = threading.RLock()
+        self._lock = OrderedRLock("arena._lock")
         # rows whose last handle was garbage-collected; finalizers append
         # without taking the lock (list.append is GIL-atomic), alloc drains
         self._dead: list[tuple[int, int]] = []

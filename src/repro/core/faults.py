@@ -10,7 +10,7 @@ fault-tolerant layer threads through:
 
     core/workers.py   wal.append / wal.append.torn / wal.fsync /
                       pool.batch / pool.retry
-    core/arena.py     arena.alloc / arena.gather
+    core/arena.py     arena.alloc / arena.rows / arena.gather
     core/tenant.py    tenant.merge / tenant.apply
     core/stream.py    snapshot.save / snapshot.save.corrupt / snapshot.load
     checkpoint/       checkpoint.save / checkpoint.restore
@@ -52,12 +52,14 @@ whole registry for the chaos harness and ``health()`` surfaces.
 from __future__ import annotations
 
 import random
-import threading
 from typing import Callable
+
+from repro.analysis.witness import OrderedLock
 
 __all__ = [
     "FaultError",
     "Failpoint",
+    "SITES",
     "fires",
     "hit",
     "inject",
@@ -65,6 +67,29 @@ __all__ = [
     "reset",
     "stats",
 ]
+
+# The declared failpoint sites — the single source of truth.  Every
+# ``hit(name)`` call in src/ must name a member, every member must have a
+# live call site, and every member must be referenced by at least one
+# test; ``scripts/analyze.py``'s failpoint rule enforces all three, so a
+# renamed or orphaned site fails CI instead of silently never firing.
+SITES: frozenset[str] = frozenset({
+    "wal.append",
+    "wal.append.torn",
+    "wal.fsync",
+    "pool.batch",
+    "pool.retry",
+    "arena.alloc",
+    "arena.rows",
+    "arena.gather",
+    "tenant.apply",
+    "tenant.merge",
+    "snapshot.save",
+    "snapshot.save.corrupt",
+    "snapshot.load",
+    "checkpoint.save",
+    "checkpoint.restore",
+})
 
 
 class FaultError(Exception):
@@ -74,7 +99,7 @@ class FaultError(Exception):
 # fast-path flag: hit() reads this one global before anything else, so a
 # fully-disarmed process pays a single boolean check per site
 _ARMED = False
-_LOCK = threading.Lock()
+_LOCK = OrderedLock("faults.registry")
 _REGISTRY: dict[str, "Failpoint"] = {}
 
 

@@ -114,13 +114,13 @@ memory without touching XLA at all.
 from __future__ import annotations
 
 import functools
-import threading
 from collections import OrderedDict
 from typing import Sequence
 
 import jax
 import numpy as np
 
+from repro.analysis.witness import OrderedLock
 from repro.core.arena import NodeArena
 from repro.core.histogram import Histogram, merge, next_pow2
 
@@ -142,7 +142,7 @@ COLLAPSE_MODES = ("canonical", "amortized")
 # counter cannot live on any single tree).  Benchmarks read and reset these
 # to machine-check the "one dispatch per level across tenants" claim and
 # the amortized-collapse merge-work claim.
-_COUNTER_LOCK = threading.Lock()
+_COUNTER_LOCK = OrderedLock("tree.counters")
 PULLUP_STATS = {"dispatches": 0, "pair_merges": 0}
 
 

@@ -115,6 +115,7 @@ from repro.core.histogram import (
     quantile,
     theoretical_eps_max,
 )
+from repro.analysis.witness import OrderedRLock
 from repro.core import faults
 from repro.core.arena import NodeArena
 from repro.core.interval_tree import COLLAPSE_MODES, IntervalTree
@@ -338,7 +339,10 @@ class HistogramStore(PoolStateView):
         # distinct (k_pad, n_pad, T) summarizer dispatch shapes seen so far —
         # observability for the compile-stability tests and benchmarks
         self.summarize_shapes: set[tuple[int, int, int]] = set()
-        self._lock = threading.RLock()  # guards summaries + tree + queries
+        # guards summaries + tree + queries.  Standalone stores carry no
+        # key; TenantRegistry.tenant() keys the lock by tenant name so the
+        # witness can check the sorted multi-store acquisition contract
+        self._lock = OrderedRLock("store._lock")
         # mutation-counted dict + staleness tokens: queries verify
         # tree/dict sync once per (dict mutation, tree version) state
         # instead of re-scanning their interval every time (_sync_tree)

@@ -110,6 +110,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis.witness import OrderedRLock
 from repro.core import faults
 from repro.core.arena import NodeArena
 from repro.core.histogram import Histogram
@@ -197,7 +198,7 @@ class TenantRegistry(PoolStateView):
         # trees with one merge dispatch per level (core/arena.py)
         self.arena: NodeArena | None = NodeArena() if shared_arena else None
         self._stores: dict[str, HistogramStore] = {}
-        self._lock = threading.RLock()  # guards the tenant dict + caches
+        self._lock = OrderedRLock("registry._lock")  # tenant dict + caches
         # per-tenant node-float footprints, cached per store version so the
         # budget check is O(#tenants) when nothing changed
         self._floats_cache: dict[str, tuple[int, int]] = {}
@@ -292,6 +293,10 @@ class TenantRegistry(PoolStateView):
                     collapse=self.collapse,
                     arena=self.arena,
                 )
+                # key the store lock by tenant name: the witness enforces
+                # the PR 5 sorted-order contract for multi-store sites
+                # (_apply_groups_batched, save) via ascending-key checks
+                store._lock.key = name
                 self._stores[name] = store
             return store
 
@@ -542,8 +547,6 @@ class TenantRegistry(PoolStateView):
                 pull_up_trees(work)
                 for name in names:
                     summarized[name][0]._tree._invalidate()
-                for name in names:
-                    self._breaker_ok(name)
             except BaseException:
                 # a mid-apply failure must not release the locks with any
                 # tenant's leaves written but ancestors stale — a query
@@ -556,6 +559,13 @@ class TenantRegistry(PoolStateView):
                     except BaseException:
                         pass  # best effort; the original error surfaces
                 raise
+        # breaker acks AFTER the store locks are released: _breaker_ok
+        # takes registry._lock (rank 10), and holding store locks (rank
+        # 20) at that point inverts the hierarchy against save()/
+        # query_many()'s registry→store nesting — a latent ABBA deadlock
+        # surfaced by the static lock graph (scripts/analyze.py)
+        for name in names:
+            self._breaker_ok(name)
         if suspects:
             raise PartialBatchFailure(suspects)
 

@@ -115,6 +115,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.analysis.witness import OrderedLock, OrderedRLock
 from repro.core import faults
 from repro.core.resilience import IngestBackpressure, RetryPolicy, retry_call
 
@@ -172,8 +173,11 @@ class WriteAheadLog:
             attempts=3, base=0.005, cap=0.1
         )
         os.makedirs(self.dir, exist_ok=True)
-        self._lock = threading.Lock()  # append/rotate/bookkeeping
-        self._commit_lock = threading.Lock()  # group-commit fsync
+        # rank note (ANALYSIS.md): commit() nests _commit_lock OUTER and
+        # _lock inner (grab the fd/lsn snapshot under _lock, fsync outside
+        # it) — so _commit_lock ranks BELOW _lock in the hierarchy
+        self._lock = OrderedLock("wal._lock")  # append/rotate/bookkeeping
+        self._commit_lock = OrderedLock("wal._commit_lock")  # group-commit fsync
         self._fd = None  # active segment file object (lazy)
         self._fd_broken = False  # rollback failed → rotate before next write
         self._active_path: str | None = None
@@ -609,15 +613,15 @@ class IngestPool:
         self.name = name
         # pending-count + error-record synchronization; owners may expose
         # (or tests may replace) this condition — always read via self.cv
-        self.cv = threading.Condition()
+        self.cv = threading.Condition(OrderedRLock("pool.cv"))
         self.pending = 0  # submitted-but-not-yet-processed items
         self.errors: list = []  # wrap_error records since the last drain
         # serializes submit against close(): without it a producer could
         # land an item behind the shutdown sentinel (or hit the torn-down
         # queue list) and strand it.  Workers never take this mutex, so
         # close() may hold it across join().
-        self.ingest_mutex = threading.Lock()
-        self._state_lock = threading.Lock()  # guards queue/thread setup
+        self.ingest_mutex = OrderedLock("pool.ingest_mutex")
+        self._state_lock = OrderedLock("pool._state_lock")  # queue/thread setup
         self._queues: list[queue.Queue] | None = None
         self._threads: list[threading.Thread] = []
         # set by close() BEFORE the sentinels go in: any worker sleeping
@@ -776,14 +780,21 @@ class IngestPool:
                         on_retry=self._count_apply_retry,
                     )
                 except BaseException as e:
+                    # build the record BEFORE taking cv: wrap_error may be
+                    # a registry callback that trips the tenant's circuit
+                    # breaker under registry._lock — taking that under cv
+                    # inverts the lock hierarchy (witness-pinned in
+                    # tests/test_lock_witness.py)
+                    rec = self.wrap_error(item, e)
                     with self.cv:  # pairs with drain()'s swap-read
-                        self.errors.append(self.wrap_error(item, e))
+                        self.errors.append(rec)
             if self.on_batch_end is not None:
                 try:
                     self.on_batch_end(items)
                 except BaseException as e:
+                    rec = self.wrap_error(None, e)  # outside cv, as above
                     with self.cv:
-                        self.errors.append(self.wrap_error(None, e))
+                        self.errors.append(rec)
         finally:
             if self.wal is not None:
                 # the whole batch — poison included — is done with the

@@ -1,0 +1,54 @@
+"""Known-clean exemplar: every rule's discipline done right — the
+no-false-positive half of the analyzer's own tests."""
+import os
+import tempfile
+import threading
+
+import numpy as np
+
+
+def read_summaries(path):
+    with np.load(path) as data:  # context-managed NpzFile
+        return {k: data[k] for k in data.files}
+
+
+def publish(payload: bytes, path: str) -> None:
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())     # payload durable before the rename
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path), os.O_RDONLY)
+    try:
+        os.fsync(dfd)            # the rename durable too
+    finally:
+        os.close(dfd)
+
+
+class Drainer:
+    def __init__(self):
+        self.cv = threading.Condition()
+        self.closing = threading.Event()
+        self.pending = 0
+
+    def drain(self):
+        with self.cv:
+            while self.pending:  # predicate loop around wait
+                self.cv.wait()
+
+    def pause(self):
+        self.closing.wait(0.01)  # Event.wait — not a Condition
+
+
+def start_worker(fn):
+    t = threading.Thread(target=fn, name="worker", daemon=True)
+    t.start()
+    return t
+
+
+def careful_cleanup(path):
+    try:
+        os.unlink(path)
+    except FileNotFoundError:
+        raise RuntimeError(f"{path} vanished mid-cleanup") from None

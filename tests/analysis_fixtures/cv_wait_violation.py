@@ -1,0 +1,13 @@
+"""Seeded violation: Condition.wait outside a while loop (cv-wait ×1)."""
+import threading
+
+
+class Drainer:
+    def __init__(self):
+        self.cv = threading.Condition()
+        self.pending = 0
+
+    def drain(self):
+        with self.cv:
+            if self.pending:   # should be `while self.pending:`
+                self.cv.wait()

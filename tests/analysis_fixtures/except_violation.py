@@ -1,0 +1,18 @@
+"""Seeded violations (parsed under a durability basename): one bare
+except (bare-except ×1) and one swallowed OSError (swallowed-oserror ×1).
+"""
+import os
+
+
+def cleanup(path):
+    try:
+        os.unlink(path)
+    except OSError:
+        pass  # swallowed disk error in a durability path
+
+
+def ignore_everything(fn):
+    try:
+        fn()
+    except:  # noqa: E722 — seeded bare except
+        return None

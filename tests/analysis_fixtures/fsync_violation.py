@@ -1,0 +1,11 @@
+"""Seeded violation: os.replace of a temp-built file with no fsync
+before the rename and no directory fsync after (fsync-order ×2)."""
+import os
+import tempfile
+
+
+def publish(payload: bytes, path: str) -> None:
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)  # neither payload nor directory ever fsynced

@@ -1,0 +1,7 @@
+"""Seeded violation: np.load handle never managed (resource-leak ×1)."""
+import numpy as np
+
+
+def read_summaries(path):
+    data = np.load(path)  # leaks the NpzFile fd
+    return dict(data)

@@ -1,0 +1,14 @@
+"""Seeded violation: registry/store locks nested in both orders —
+one rank inversion (lock-order ×1) closing a cycle (lock-cycle ×1)."""
+
+
+def forward(reg, store):
+    with reg._lock:          # rank 10
+        with store._lock:    # rank 20 — documented order
+            pass
+
+
+def backward(reg, store):
+    with store._lock:        # rank 20
+        with reg._lock:      # rank 10 — inversion, closes the cycle
+            pass

@@ -1,0 +1,9 @@
+"""Seeded violation (parsed as a test file): time.sleep in a test
+(test-sleep ×1)."""
+import time
+
+
+def test_eventually_consistent(store):
+    store.kick()
+    time.sleep(0.2)  # timing-based interleaving — the banned pattern
+    assert store.done()

@@ -1,0 +1,9 @@
+"""Seeded violation: serving-plane Thread without daemon=True
+(thread-daemon ×1)."""
+import threading
+
+
+def start_worker(fn):
+    t = threading.Thread(target=fn, name="worker")
+    t.start()
+    return t

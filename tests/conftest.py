@@ -7,6 +7,11 @@
    unmodified.  Real hypothesis is always preferred when installed.
 2. Register the ``slow`` marker backing the fast lane
    (``pytest -m "not slow"``).
+3. ``REPRO_LOCK_WITNESS=1`` arms the runtime lock-discipline witness
+   (repro.analysis.witness) for the whole run: every acquisition of a
+   wrapped core lock asserts the documented rank order, so the entire
+   suite — chaos lane included — doubles as a lock-hierarchy check.
+   CI's ``fast`` and ``chaos-smoke`` lanes set it (see ANALYSIS.md).
 """
 import importlib.util
 import os
@@ -31,6 +36,12 @@ def _install_propcheck() -> None:
 
 
 _install_propcheck()
+
+
+if os.environ.get("REPRO_LOCK_WITNESS") == "1":
+    from repro.analysis import witness as _witness
+
+    _witness.arm()
 
 
 def pytest_configure(config):

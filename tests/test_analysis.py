@@ -1,0 +1,265 @@
+"""Tests for the static-analysis toolkit (src/repro/analysis).
+
+Two halves, per the analyzer's own acceptance bar:
+
+1. **Seeded violations** — each fixture module under
+   ``tests/analysis_fixtures/`` plants exactly the violations its name
+   says, and each rule fires exactly that often (a rule that silently
+   stops firing is worse than no rule).
+2. **No false positives** — the clean exemplar (every discipline done
+   right) and the real, post-fix repo produce zero findings outside the
+   ratcheted baseline; the CI gate invocation itself exits 0.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.findings import (
+    Finding,
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.lint import SourceFile, run_failpoint_rule, run_lint
+from repro.analysis.lockgraph import run_lockgraph
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+
+
+def fixture(name: str, label: str, is_test: bool = False) -> SourceFile:
+    """Parse a fixture under a chosen path label (rules key off paths —
+    durability basenames, tests/ — so the label, not the real location,
+    decides which rules apply)."""
+    with open(os.path.join(FIXTURES, name)) as f:
+        return SourceFile.parse(label, f.read(), is_test=is_test)
+
+
+def rule_counts(findings):
+    out = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out
+
+
+# ------------------------------------------------------- seeded violations
+
+
+def test_resource_leak_fires_exactly_once():
+    sf = fixture("leak_violation.py", "src/fake/loader.py")
+    counts = rule_counts(run_lint([sf]))
+    assert counts == {"resource-leak": 1}
+
+
+def test_fsync_order_fires_for_both_halves_of_the_contract():
+    sf = fixture("fsync_violation.py", "src/fake/publish.py")
+    found = [f for f in run_lint([sf]) if f.rule == "fsync-order"]
+    assert sorted(f.token for f in found) == [
+        "replace#0:dir-fsync",
+        "replace#0:pre-fsync",
+    ]
+
+
+def test_cv_wait_fires_exactly_once():
+    sf = fixture("cv_wait_violation.py", "src/fake/drainer.py")
+    counts = rule_counts(run_lint([sf]))
+    assert counts == {"cv-wait": 1}
+
+
+def test_thread_daemon_fires_exactly_once():
+    sf = fixture("thread_violation.py", "src/fake/spawn.py")
+    counts = rule_counts(run_lint([sf]))
+    assert counts == {"thread-daemon": 1}
+
+
+def test_thread_daemon_skips_tests():
+    sf = fixture("thread_violation.py", "tests/test_fake.py", is_test=True)
+    assert rule_counts(run_lint([sf])) == {}
+
+
+def test_test_sleep_fires_exactly_once_and_only_in_tests():
+    as_test = fixture("sleep_violation.py", "tests/test_fake.py",
+                      is_test=True)
+    assert rule_counts(run_lint([as_test])) == {"test-sleep": 1}
+    as_src = fixture("sleep_violation.py", "src/fake/poller.py")
+    assert rule_counts(run_lint([as_src])) == {}
+
+
+def test_except_rules_fire_once_each_in_durability_modules():
+    sf = fixture("except_violation.py", "src/fake/workers.py")
+    counts = rule_counts(run_lint([sf]))
+    assert counts == {"bare-except": 1, "swallowed-oserror": 1}
+    # outside a durability basename only the bare except remains
+    sf2 = fixture("except_violation.py", "src/fake/util.py")
+    assert rule_counts(run_lint([sf2])) == {"bare-except": 1}
+
+
+def test_lock_cycle_fixture_fires_inversion_and_cycle_once_each():
+    sf = fixture("lock_cycle_violation.py", "src/fake/locks.py")
+    counts = rule_counts(run_lockgraph([sf]))
+    assert counts == {"lock-order": 1, "lock-cycle": 1}
+    inversion = [f for f in run_lockgraph([sf]) if f.rule == "lock-order"][0]
+    assert inversion.token == "store._lock->registry._lock"
+    assert inversion.scope == "backward"
+
+
+# ---------------------------------------------------------- no false positives
+
+
+def test_clean_exemplar_is_clean_under_every_rule():
+    # run it under the strictest labels: a durability basename AND again
+    # as a test file — zero findings both ways
+    as_src = fixture("clean_exemplar.py", "src/fake/stream.py")
+    assert run_lint([as_src]) == []
+    assert run_lockgraph([as_src]) == []
+    as_test = fixture("clean_exemplar.py", "tests/test_fake.py",
+                      is_test=True)
+    assert run_lint([as_test]) == []
+
+
+def test_repo_core_lock_graph_is_clean():
+    files = []
+    core = os.path.join(REPO, "src", "repro", "core")
+    for name in sorted(os.listdir(core)):
+        if name.endswith(".py"):
+            with open(os.path.join(core, name)) as f:
+                files.append(
+                    SourceFile.parse(f"src/repro/core/{name}", f.read())
+                )
+    assert run_lockgraph(files) == []
+
+
+# ------------------------------------------------------------ failpoint rule
+
+
+def _mk(path, source, is_test=False):
+    return SourceFile.parse(path, source, is_test=is_test)
+
+
+def test_failpoint_rule_undeclared_unused_untested():
+    registry = _mk(
+        "src/fake/faults.py",
+        "SITES = frozenset({'wal.append', 'pool.batch', 'arena.alloc'})\n",
+    )
+    src = _mk(
+        "src/fake/workers.py",
+        "from repro.core import faults\n"
+        "def f():\n"
+        "    faults.hit('wal.append')\n"
+        "    faults.hit('wal.apend')\n",  # typo → undeclared
+    )
+    test = _mk(
+        "tests/test_fake.py",
+        "from repro.core import faults\n"
+        "def test_f():\n"
+        "    with faults.inject('wal.append', exc=RuntimeError()):\n"
+        "        pass\n",
+        is_test=True,
+    )
+    counts = rule_counts(run_failpoint_rule([registry, src, test]))
+    # wal.apend → undeclared; pool.batch + arena.alloc → unused
+    assert counts == {"failpoint-undeclared": 1, "failpoint-unused": 2}
+
+
+def test_failpoint_rule_untested_site():
+    registry = _mk("src/fake/faults.py", "SITES = frozenset({'a.b'})\n")
+    src = _mk(
+        "src/fake/m.py",
+        "from repro.core import faults\nfaults.hit('a.b')\n",
+    )
+    counts = rule_counts(run_failpoint_rule([registry, src]))
+    assert counts == {"failpoint-untested": 1}
+
+
+def test_failpoint_rule_declared_twice():
+    registry = _mk(
+        "src/fake/faults.py",
+        "SITES = frozenset({'a.b'})\nSITES = frozenset({'a.b'})\n",
+    )
+    src = _mk("src/fake/m.py",
+              "from repro.core import faults\nfaults.hit('a.b')\n")
+    test = _mk("tests/test_fake.py", "x = 'a.b'\n", is_test=True)
+    counts = rule_counts(run_failpoint_rule([registry, src, test]))
+    assert counts == {"failpoint-declared-once": 1}
+
+
+def test_repo_failpoint_sites_all_declared_used_and_tested():
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "analyze.py"),
+         "src", "tests", "benchmarks"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert "failpoint" not in out.stdout, out.stdout
+
+
+# -------------------------------------------------------------- ratchet
+
+
+def test_baseline_ratchet_suppresses_old_flags_new_reports_stale(tmp_path):
+    old = Finding("r", "p.py", 3, "f", "m", token="x")
+    new = Finding("r", "p.py", 9, "g", "m", token="y")
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, [old], {old.fingerprint: "known cleanup site"})
+    baseline = load_baseline(path)
+
+    res = apply_baseline([old, new], baseline)
+    assert [f.fingerprint for f in res.new] == [new.fingerprint]
+    assert [f.fingerprint for f in res.suppressed] == [old.fingerprint]
+    assert res.stale == []
+
+    res2 = apply_baseline([new], baseline)  # old finding got fixed
+    assert res2.stale == [old.fingerprint]
+
+
+def test_baseline_requires_justifications(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schema": "analysis_baseline/v1",
+                "findings": [{"fingerprint": "r|p|f|x"}],
+            },
+            f,
+        )
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(path)
+
+
+def test_fingerprints_are_line_number_independent():
+    a = Finding("r", "p.py", 10, "f", "m", token="x")
+    b = Finding("r", "p.py", 99, "f", "m", token="x")
+    assert a.fingerprint == b.fingerprint
+
+
+# --------------------------------------------------------------- CI gate
+
+
+def test_cli_gate_exits_zero_on_the_repo():
+    """The acceptance criterion: the exact CI invocation is clean."""
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "analyze.py"),
+         "src", "tests", "benchmarks",
+         "--baseline", "analysis_baseline.json"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 new findings" in out.stdout
+
+
+def test_cli_gate_fails_on_seeded_violation(tmp_path):
+    bad = tmp_path / "src" / "leaky.py"
+    bad.parent.mkdir()
+    bad.write_text("import numpy as np\n\ndef f(p):\n    return np.load(p)\n")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "analyze.py"),
+         str(bad)],
+        cwd=str(tmp_path), capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert out.returncode == 1
+    assert "resource-leak" in out.stdout

@@ -80,3 +80,47 @@ def test_overwrite_same_step(tmp_path):
     save_checkpoint(d, 2, t2)
     p, _, _ = restore_checkpoint(d, 2, t)
     np.testing.assert_allclose(np.asarray(p["a"]), np.asarray(t["a"]) * 2)
+
+
+def test_save_fsync_discipline(tmp_path, monkeypatch):
+    """Regression (static-analysis fsync-order rule): the arrays payload
+    is fsynced BEFORE the step-directory rename, and the checkpoint dir
+    is fsynced AFTER each publish rename (step dir and LATEST pointer) —
+    the atomic_savez contract.  Pre-fix, arrays.npz was never fsynced and
+    no rename was followed by a directory fsync, so a crash could publish
+    a manifest over torn array data (or lose the rename entirely)."""
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+
+    def recording_fsync(fd):
+        try:  # classify what the fd points at (linux: /proc/self/fd)
+            target = os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:
+            target = "?"
+        kind = "dir" if os.path.isdir(target) else os.path.basename(target)
+        events.append(("fsync", kind))
+        return real_fsync(fd)
+
+    def recording_replace(src, dst):
+        events.append(("replace", os.path.basename(dst)))
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "fsync", recording_fsync)
+    monkeypatch.setattr(os, "replace", recording_replace)
+
+    d = str(tmp_path)
+    save_checkpoint(d, 3, tree())
+
+    step_pub = events.index(("replace", "step_00000003"))
+    latest_pub = events.index(("replace", "LATEST"))
+    before_step = [k for op, k in events[:step_pub] if op == "fsync"]
+    assert "arrays.npz" in before_step, events
+    assert "manifest.json" in before_step, events
+    # every publish rename is followed by a directory fsync
+    assert ("fsync", "dir") in events[step_pub:latest_pub], events
+    assert ("fsync", "dir") in events[latest_pub:], events
+    # and the LATEST payload itself was durable before its rename
+    latest_fsyncs = [k for op, k in events[step_pub:latest_pub]
+                     if op == "fsync"]
+    assert any(k not in ("dir",) for k in latest_fsyncs), events
+    assert latest_step(d) == 3  # the recorded save still round-trips

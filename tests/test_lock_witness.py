@@ -1,0 +1,209 @@
+"""Runtime lock-discipline witness (repro.analysis.witness).
+
+Unit half: the wrapper semantics — rank inversions raise at the
+acquisition site, same-rank store locks require ascending keys, RLocks
+re-enter, Conditions wait/notify through the wrapper, and the disarmed
+path checks nothing.
+
+Integration half: the two inversions this PR fixed stay fixed — witness
+armed, the exact pre-fix interleavings run clean:
+
+1. ``IngestPool._run_batch`` building the error record *under* ``cv``
+   (``wrap_error`` → circuit breaker → ``registry._lock`` under rank-34).
+2. ``TenantRegistry._apply_groups_batched`` acking breakers *inside* the
+   sorted store-lock scope (``registry._lock`` under rank-20 — the
+   latent ABBA against ``save()``/``query_many()``).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import witness
+from repro.analysis.witness import (
+    LockOrderError,
+    OrderedLock,
+    OrderedRLock,
+)
+from repro.core import faults
+from repro.core.resilience import BreakerPolicy, RetryPolicy
+from repro.core.tenant import TenantRegistry
+
+
+@pytest.fixture
+def armed():
+    was = witness.armed()
+    witness.arm()
+    try:
+        yield
+    finally:
+        if not was:
+            witness.disarm()
+
+
+# ------------------------------------------------------------------- unit
+
+
+def test_misordered_acquisition_raises(armed):
+    """The acceptance criterion: a deliberately inverted pair raises."""
+    wal = OrderedLock("wal._lock")       # rank 42
+    store = OrderedRLock("store._lock")  # rank 20
+    with wal:
+        with pytest.raises(LockOrderError, match="inversion"):
+            store.acquire()
+    # and the correct order is silent
+    with store:
+        with wal:
+            pass
+
+
+def test_error_names_both_locks(armed):
+    reg = OrderedRLock("registry._lock")
+    arena = OrderedRLock("arena._lock")
+    with arena:
+        with pytest.raises(LockOrderError) as ei:
+            reg.acquire()
+    msg = str(ei.value)
+    assert "registry._lock" in msg and "arena._lock" in msg
+
+
+def test_same_rank_requires_ascending_keys(armed):
+    a = OrderedRLock("store._lock", key="a")
+    b = OrderedRLock("store._lock", key="b")
+    with a:
+        with b:  # ascending — the sorted-acquisition contract
+            pass
+    with b:
+        with pytest.raises(LockOrderError, match="same-rank"):
+            a.acquire()
+
+
+def test_same_rank_unkeyed_is_rejected(armed):
+    a = OrderedRLock("store._lock")
+    b = OrderedRLock("store._lock")
+    with a:
+        with pytest.raises(LockOrderError, match="same-rank"):
+            b.acquire()
+
+
+def test_rlock_reentry_and_nonreentrant_self_deadlock(armed):
+    r = OrderedRLock("registry._lock")
+    with r:
+        with r:  # RLock re-entry is always legal
+            pass
+    lk = OrderedLock("wal._lock")
+    with lk:
+        with pytest.raises(LockOrderError, match="self-deadlock"):
+            lk.acquire()
+
+
+def test_release_pops_only_that_lock(armed):
+    reg = OrderedRLock("registry._lock")
+    store = OrderedRLock("store._lock", key="t")
+    reg.acquire()
+    store.acquire()
+    reg.release()  # out-of-order release is legal; stack stays coherent
+    assert witness.held_locks() == ["store._lock"]
+    store.release()
+    assert witness.held_locks() == []
+
+
+def test_condition_over_ordered_rlock_waits_and_rechecks(armed):
+    cv = threading.Condition(OrderedRLock("pool.cv"))
+    state = {"ready": False}
+
+    def signal():
+        with cv:
+            state["ready"] = True
+            cv.notify_all()
+
+    t = threading.Thread(target=signal, daemon=True)
+    with cv:
+        t.start()
+        while not state["ready"]:
+            cv.wait(timeout=5.0)
+    t.join(timeout=5.0)
+    assert state["ready"]
+    assert witness.held_locks() == []  # wait's release/restore balanced
+
+
+def test_disarmed_checks_nothing():
+    was = witness.armed()  # REPRO_LOCK_WITNESS=1 arms the whole suite
+    witness.disarm()
+    try:
+        wal = OrderedLock("wal._lock")
+        store = OrderedRLock("store._lock")
+        with wal:
+            with store:  # inverted, but the witness is disarmed
+                pass
+        assert witness.held_locks() == []
+    finally:
+        if was:
+            witness.arm()
+
+
+def test_acquire_counter_counts_only_armed(armed):
+    witness.reset_acquire_count()
+    lk = OrderedLock("wal._lock")
+    with lk:
+        pass
+    witness.disarm()
+    try:
+        with lk:
+            pass
+    finally:
+        witness.arm()
+    assert witness.acquire_count() == 1
+
+
+# ---------------------------------------------------------- integration
+
+
+def _vals(rng):
+    return rng.normal(size=64)
+
+
+def test_pool_error_path_builds_record_outside_cv(armed):
+    """Regression: wrap_error (→ breaker → registry._lock) must run
+    before cv is taken — pre-fix this raised LockOrderError in the
+    worker and wedged the error report."""
+    rng = np.random.default_rng(0)
+    reg = TenantRegistry(
+        num_buckets=8,
+        breaker=BreakerPolicy(threshold=100, cooldown=1e9),
+    )
+    reg._pool.retry = RetryPolicy(attempts=2, base=0.0, jitter=0.0)
+    try:
+        bad_only = {"match": lambda ctx: ctx.get("tenant") == "bad"}
+        with faults.inject("tenant.apply", **bad_only):
+            reg.ingest_async("ok", 0, _vals(rng))
+            reg.ingest_async("bad", 0, _vals(rng))
+            with pytest.raises(RuntimeError, match="async ingest failed"):
+                reg.flush()
+        # the error record was built and surfaced; the healthy tenant
+        # applied; no LockOrderError killed the worker
+        assert len(reg.tenant("ok").summaries) == 1
+    finally:
+        reg.close()
+
+
+def test_batched_apply_acks_breaker_after_store_locks(armed):
+    """Regression: _apply_groups_batched's breaker acks run after the
+    sorted store-lock scope — pre-fix, breaker + shared arena took
+    registry._lock under store locks (latent ABBA vs save())."""
+    rng = np.random.default_rng(1)
+    reg = TenantRegistry(
+        num_buckets=8,
+        shared_arena=True,  # → the _apply_groups_batched path
+        breaker=BreakerPolicy(threshold=2, cooldown=10.0),
+    )
+    assert reg.arena is not None
+    try:
+        for t in ("b", "a", "c"):
+            for pid in range(2):
+                reg.ingest_async(t, pid, _vals(rng))
+        reg.flush()
+        for t in ("a", "b", "c"):
+            assert len(reg.tenant(t).summaries) == 2
+    finally:
+        reg.close()
