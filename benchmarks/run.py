@@ -25,6 +25,10 @@
                         ingest + query) + fixed-seed chaos drill: degraded
                         rate, recovery time, zero acked loss
                         (writes BENCH_faults.json)
+  * serving           — standing-query push plane vs naive dashboard
+                        re-pull: update-latency p50/p99, one merge
+                        dispatch per tick, dedup counters
+                        (writes BENCH_serving.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -37,6 +41,7 @@ from benchmarks import durability as durability_bench
 from benchmarks import faults as faults_bench
 from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
+from benchmarks import serving as serving_bench
 
 
 def main() -> None:
@@ -61,6 +66,7 @@ def main() -> None:
         "arena": arena_bench.main,
         "durability": durability_bench.main,
         "faults": faults_bench.main,
+        "serving": serving_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

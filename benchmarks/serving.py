@@ -1,0 +1,268 @@
+"""Standing-query push plane vs naive dashboard re-pull.
+
+The serving benchmark for ``serve/subscriptions.py``: N dashboard
+clients hold standing queries over a multi-tenant registry and the
+plane pushes updates only to the subscribers whose windows actually
+went stale — all stale windows of a tick answered with ONE cross-tenant
+``query_many`` merge dispatch, deduplicated across subscribers sharing
+a window.  The baseline is what dashboards do without a push plane:
+every refresh re-pulls **every** subscription with its own singleton
+``query_many`` call.  Reported:
+
+  * **push_tick** — mark-stale → flush barrier for one ingest tick
+    (10 % of tenants move): update-latency p50/p99 from the per-update
+    ``lag_seconds`` the plane stamps, plus the machine-checked
+    one-merge-dispatch-per-tick assertion;
+  * **pull_refresh** — a full naive re-pull of every subscription after
+    an identical ingest tick (per-tenant LRUs serve the unchanged ones,
+    exactly as a polling dashboard would see);
+  * **dedup** — the plane's counters: windows evaluated vs subscriber
+    deliveries, evals saved by window sharing.
+
+Results print as CSV rows and are written to ``BENCH_serving.json``
+(schema ``bench_serving/v1``; CI smoke-checks ``one_dispatch_per_tick``
+and ``push_vs_pull_speedup >= 5`` at tiny sizes via ``--smoke``).
+Every run appends a ``trajectory`` entry so the file carries its own
+history.
+
+Run standalone: ``PYTHONPATH=src python benchmarks/serving.py``
+or as a section of ``python -m benchmarks.run --only serving``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import TenantRegistry
+from repro.serve.subscriptions import SubscriptionPlane
+
+SCHEMA = "bench_serving/v1"
+
+T = 16  # summary resolution per window (serving regime: many small
+BETA = 16  # per-metric summaries; dispatch + fan-out overhead dominates)
+N_PER = 64
+PARTS = 4  # partitions per tenant; window keys split them 2+2
+WINDOWS = ((0, 1), (2, 3))
+
+
+def _build(n_tenants: int, rng) -> TenantRegistry:
+    reg = TenantRegistry(num_buckets=T, shared_arena=True)
+    for t in range(n_tenants):
+        # store-level ingest: prime without ticking the (future) plane
+        reg.tenant(f"svc{t:04d}").ingest_many(
+            {
+                d: rng.lognormal(-1.8, 0.55, size=N_PER).astype(np.float32)
+                for d in range(PARTS)
+            }
+        )
+    return reg
+
+
+def _subscribe_all(plane, names, subs_per_window):
+    by_tenant: dict[str, list] = {}
+    for name in names:
+        for lo, hi in WINDOWS:
+            for _ in range(subs_per_window):
+                sub = plane.subscribe(name, lo, hi, BETA, queue_cap=4)
+                by_tenant.setdefault(name, []).append(sub)
+    return by_tenant
+
+
+def _tick(reg, plane, subset, pid, rng):
+    """One ingest tick: 10 % of tenants move, one mark, one flush."""
+    for name in subset:
+        reg.tenant(name).ingest(
+            pid, rng.lognormal(-1.8, 0.55, size=N_PER).astype(np.float32)
+        )
+    d0 = reg.merge_dispatches
+    t0 = time.perf_counter()
+    plane.mark_stale(subset)
+    plane.flush()
+    seconds = time.perf_counter() - t0
+    return seconds, reg.merge_dispatches - d0
+
+
+def main(
+    emit,
+    *,
+    n_tenants: int = 1000,
+    subs_per_window: int = 5,
+    n_ticks: int = 10,
+    pull_cycles: int = 3,
+    out_path: str = "BENCH_serving.json",
+) -> dict:
+    rng = np.random.default_rng(0)
+    reg = _build(n_tenants, rng)
+    plane = SubscriptionPlane(reg)
+    names = reg.names()
+    by_tenant = _subscribe_all(plane, names, subs_per_window)
+    n_subs = len(plane)
+    subset_n = max(1, n_tenants // 10)
+
+    # initial answers (and the batched-merge compile) land here, untimed
+    plane.flush()
+    for subs in by_tenant.values():
+        for sub in subs:
+            sub.drain()
+
+    # a tick packs only the subset's stale windows — a different stack
+    # shape than the initial full flush — so warm that compile untimed
+    _tick(reg, plane, names[:subset_n], 0, rng)
+    for name in names[:subset_n]:
+        for sub in by_tenant[name]:
+            sub.drain()
+
+    # ---- push: per-tick latency + the one-dispatch guarantee ----------
+    lags: list[float] = []
+    tick_seconds: list[float] = []
+    one_dispatch = True
+    updates = 0
+    for tick in range(n_ticks):
+        subset = names[(tick * subset_n) % n_tenants:][:subset_n]
+        seconds, dispatches = _tick(
+            reg, plane, subset, tick % PARTS, rng
+        )
+        one_dispatch = one_dispatch and dispatches == 1
+        tick_seconds.append(seconds)
+        for name in subset:
+            for sub in by_tenant[name]:
+                for up in sub.drain():
+                    lags.append(up.lag_seconds)
+                    updates += 1
+    push_per_tick = float(np.mean(tick_seconds))
+    p50_ms = float(np.percentile(lags, 50) * 1e3)
+    p99_ms = float(np.percentile(lags, 99) * 1e3)
+
+    # ---- pull baseline: naive full re-pull after an identical tick ----
+    keys = [
+        (name, lo, hi)
+        for name in names
+        for lo, hi in WINDOWS
+        for _ in range(subs_per_window)
+    ]
+    for name, lo, hi in keys[: 2 * subs_per_window]:  # compile warmup
+        reg.query_many([(name, lo, hi)], BETA, strict=False)
+    pull_times = []
+    for cycle in range(pull_cycles):
+        subset = names[(cycle * subset_n) % n_tenants:][:subset_n]
+        for name in subset:  # same staleness profile as a push tick
+            reg.tenant(name).ingest(
+                cycle % PARTS,
+                rng.lognormal(-1.8, 0.55, size=N_PER).astype(np.float32),
+            )
+        t0 = time.perf_counter()
+        for name, lo, hi in keys:
+            reg.query_many([(name, lo, hi)], BETA, strict=False)
+        pull_times.append(time.perf_counter() - t0)
+    pull_per_refresh = float(np.mean(pull_times))
+    speedup = pull_per_refresh / push_per_tick
+
+    stats = plane.stats()
+    plane.close()
+    reg.close()
+
+    # per-run history: carry the previous file's trajectory forward so
+    # the json records how the headline numbers move across commits
+    trajectory = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                trajectory = json.load(f).get("trajectory", [])
+        except (json.JSONDecodeError, OSError):
+            trajectory = []
+    trajectory.append(
+        {
+            "subscribers": n_subs,
+            "tenants": n_tenants,
+            "update_p99_ms": p99_ms,
+            "push_vs_pull_speedup": speedup,
+            "one_dispatch_per_tick": one_dispatch,
+        }
+    )
+    result = {
+        "schema": SCHEMA,
+        "tenants": n_tenants,
+        "subscribers": n_subs,
+        "windows": len(names) * len(WINDOWS),
+        "subs_per_window": subs_per_window,
+        "T": T,
+        "beta": BETA,
+        "ticks": n_ticks,
+        "tenants_per_tick": subset_n,
+        "push": {
+            "seconds_per_tick": push_per_tick,
+            "updates_per_tick": updates / n_ticks,
+            "update_p50_ms": p50_ms,
+            "update_p99_ms": p99_ms,
+        },
+        "pull": {
+            "seconds_per_refresh": pull_per_refresh,
+            "queries_per_refresh": len(keys),
+        },
+        "dedup": {
+            "windows_evaluated": stats["windows_evaluated"],
+            "updates_delivered": stats["updates_delivered"],
+            "dedup_saved": stats["dedup_saved"],
+            "eval_batches": stats["eval_batches"],
+        },
+        # headline claims hoisted for the CI schema check
+        "update_p50_ms": p50_ms,
+        "update_p99_ms": p99_ms,
+        "push_vs_pull_speedup": speedup,
+        "one_dispatch_per_tick": one_dispatch,
+        "trajectory": trajectory,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    emit(
+        "serving_push_tick_ms",
+        push_per_tick * 1e3,
+        f"ms/tick, {n_subs} subs, {subset_n} tenants move, "
+        f"one_dispatch={one_dispatch}",
+    )
+    emit(
+        "serving_update_p99_ms",
+        p99_ms,
+        f"p99 push latency (p50 {p50_ms:.2f} ms, {len(lags)} updates)",
+    )
+    emit(
+        "serving_pull_refresh_ms",
+        pull_per_refresh * 1e3,
+        f"ms for a naive re-pull of all {len(keys)} subscriptions",
+    )
+    emit(
+        "serving_push_vs_pull_speedup",
+        speedup,
+        f"x per refresh cycle (target >= 5x); dedup saved "
+        f"{stats['dedup_saved']} evals",
+    )
+    emit("serving_json", 0.0, f"written to {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes for CI: validates the pipeline + JSON schema only",
+    )
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--tenants", type=int, default=1000)
+    args = ap.parse_args()
+    kw = dict(out_path=args.out, n_tenants=args.tenants)
+    if args.smoke:
+        kw.update(n_tenants=24, subs_per_window=12, n_ticks=4,
+                  pull_cycles=2)
+    print("name,value,derived")
+    main(
+        lambda name, v, derived="": print(
+            f"{name},{v:.1f},{derived}", flush=True
+        ),
+        **kw,
+    )

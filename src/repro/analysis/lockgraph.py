@@ -51,6 +51,8 @@ CLASS_ATTR_LOCKS: dict[tuple[str, str], str] = {
     ("IngestPool", "_state_lock"): "pool._state_lock",
     ("IngestPool", "cv"): "pool.cv",
     ("NodeArena", "_lock"): "arena._lock",
+    ("SubscriptionPlane", "cv"): "subs.cv",
+    ("Subscription", "cv"): "subs.queue",
 }
 
 # module-level lock names → lock id (qualified by defining basename)
@@ -75,6 +77,8 @@ RECEIVER_CLASS: dict[str, str] = {
     "_arena": "NodeArena",
     "tree": "IntervalTree",
     "_tree": "IntervalTree",
+    "plane": "SubscriptionPlane",  # tenant.py's _notify_stale loop var
+    "sub": "Subscription",
 }
 
 # constructor-argument callbacks: attribute call on self that is really a
@@ -113,6 +117,7 @@ SKIP_METHODS = frozenset({
 # same-rank family whose sorted order the runtime witness checks)
 REENTRANT = frozenset({
     "registry._lock", "store._lock", "arena._lock", "pool.cv",
+    "subs.cv", "subs.queue",
 })
 
 

@@ -49,6 +49,8 @@ class LockOrderError(AssertionError):
 # rationale per edge).  Lower rank = acquired first (outermost).  Gaps
 # are deliberate — future locks slot in without renumbering.
 RANKS: dict[str, int] = {
+    "subs.cv": 6,               # SubscriptionPlane.cv's underlying RLock
+    "subs.queue": 8,            # Subscription.cv (delivery queue, key=id)
     "registry._lock": 10,       # TenantRegistry._lock (RLock)
     "store._lock": 20,          # HistogramStore._lock (RLock, key=tenant)
     "pool.ingest_mutex": 30,    # IngestPool.ingest_mutex

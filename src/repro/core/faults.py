@@ -84,6 +84,8 @@ SITES: frozenset[str] = frozenset({
     "arena.gather",
     "tenant.apply",
     "tenant.merge",
+    "subs.eval",
+    "subs.deliver",
     "snapshot.save",
     "snapshot.save.corrupt",
     "snapshot.load",

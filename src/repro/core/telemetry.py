@@ -293,6 +293,33 @@ class TelemetryHub:
         refresh."""
         return self.registry.query_many(panels, beta, strict=False)
 
+    def subscribe(
+        self,
+        metric: str,
+        lo: int,
+        hi: int,
+        beta: int = 64,
+        *,
+        policy: str = "coalesce",
+        queue_cap: int = 8,
+    ):
+        """Standing dashboard panel: instead of re-polling
+        :meth:`dashboard`, receive pushed ``Update``s whenever windows
+        ``lo..hi`` of the metric go stale (serve/subscriptions.py) —
+        same hist/eps the pull path reports, one merge dispatch per
+        ingest tick across every subscription on the hub."""
+        # local import: serve/ imports core/, not the other way around
+        from repro.serve.subscriptions import SubscriptionPlane
+
+        planes = self.registry._stale_listeners
+        plane = planes[0] if planes else SubscriptionPlane(self.registry)
+        return plane.subscribe(
+            metric, lo, hi, beta, policy=policy, queue_cap=queue_cap
+        )
+
+    def unsubscribe(self, sub) -> None:
+        sub.plane.unsubscribe(sub)
+
 
 def timed(fn: Callable) -> Callable:
     """Decorator: returns (result, wall_seconds); feeds StragglerDetector."""

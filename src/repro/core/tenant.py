@@ -236,6 +236,11 @@ class TenantRegistry(PoolStateView):
         self._clock = time.monotonic  # injectable for deadline tests
         self.degraded_served = 0  # Answer(degraded=True) responses handed out
         self.pack_fallbacks = 0  # shared-arena gathers that fell to host pack
+        # standing-query planes (serve/subscriptions.py) attached to this
+        # registry: every ingest/sweep/eviction tick notifies them which
+        # tenants' versions moved, so pushed answers re-evaluate
+        # incrementally.  Runtime state — never persisted.
+        self._stale_listeners: list = []
         self.last_scrub: dict | None = None  # scrub() report (core/scrub.py)
         self.last_salvage: dict | None = None  # recover(salvage=True) report
 
@@ -376,6 +381,16 @@ class TenantRegistry(PoolStateView):
             or pool["errors_pending"]
             or (last_scrub is not None and last_scrub["corrupt"])
         )
+        # standing-query plane counters (subscription counts, push lag,
+        # dedup/overflow accounting) — None when no plane is attached,
+        # the single plane's stats dict in the common case
+        planes = list(self._stale_listeners)
+        if not planes:
+            subscriptions = None
+        elif len(planes) == 1:
+            subscriptions = planes[0].stats()
+        else:
+            subscriptions = [p.stats() for p in planes]
         return {
             "status": "degraded" if degraded else "ok",
             "tenants": len(self),
@@ -383,6 +398,7 @@ class TenantRegistry(PoolStateView):
             "breakers": breakers,
             "degraded_served": self.degraded_served,
             "pack_fallbacks": self.pack_fallbacks,
+            "subscriptions": subscriptions,
             "pool": pool,
             "wal": self.wal_stats(),
             "last_recovery": self.last_recovery,
@@ -430,6 +446,7 @@ class TenantRegistry(PoolStateView):
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])
+        self._notify_stale((name,))
         return out
 
     def ingest_many(self, tenant: str, partitions: dict[int, np.ndarray]) -> None:
@@ -448,6 +465,7 @@ class TenantRegistry(PoolStateView):
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])
+        self._notify_stale((name,))
 
     def ingest_async(self, tenant: str, partition_id: int, values) -> None:
         """Enqueue one partition for the shared background worker pool.
@@ -595,6 +613,15 @@ class TenantRegistry(PoolStateView):
                 if store is not None:
                     store.sweep_retention()
         self._enforce_budget_cached(touched)
+        self._notify_stale(touched)
+
+    def _notify_stale(self, names) -> None:
+        """Tick the attached subscription planes: the named tenants'
+        versions may have moved.  Called with NO locks held (plane
+        bookkeeping ranks below ``registry._lock`` and may call back into
+        the registry)."""
+        for plane in list(self._stale_listeners):
+            plane.mark_stale(names)
 
     def flush(self) -> None:
         """Block until every enqueued partition is visible (and swept);
@@ -617,7 +644,11 @@ class TenantRegistry(PoolStateView):
             ) from errs[0][2]
 
     def close(self) -> None:
-        """Drain the pool, stop its workers, surface pending errors."""
+        """Drain the pool, stop its workers, surface pending errors.
+        Attached subscription planes are closed first (their evaluation
+        workers drain, subscribers see ``closed``)."""
+        for plane in list(self._stale_listeners):
+            plane.close()
         self._pool.close()
         self.flush()
 
@@ -710,6 +741,10 @@ class TenantRegistry(PoolStateView):
                     break
             if not progressed:
                 break  # every over-quota tenant is down to one partition
+        if evicted:
+            # eviction moves versions too — standing queries over an
+            # evicted tenant's windows are stale exactly like post-ingest
+            self._notify_stale(evicted)
         return evicted
 
     # --------------------------------------------------------------- Merger

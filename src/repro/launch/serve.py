@@ -1,14 +1,22 @@
-"""Serving launcher: batched generation with a reduced config on CPU."""
+"""Serving launcher: batched generation with a reduced config on CPU.
+
+``--metrics-dir DIR`` attaches a :class:`HistogramService` sidecar: each
+request's generation latency is recorded as a durable histogram window,
+and a standing subscription on the latency metric demonstrates the push
+plane — the pushed update's p-quantile answer and eps are printed after
+the batch, then the sidecar checkpoints and closes.
+"""
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, smoke as smoke_cfg
 from repro.models.model import init_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, HistogramService, ServeConfig
 
 
 def main() -> None:
@@ -19,6 +27,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--metrics-dir", default=None,
+        help="attach a HistogramService sidecar recording per-request "
+        "generation latency, with a standing push subscription",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -33,14 +46,45 @@ def main() -> None:
             temperature=args.temperature,
         ),
     )
+    svc = sub = None
+    if args.metrics_dir is not None:
+        svc = HistogramService(args.metrics_dir, num_buckets=64)
+        # standing dashboard panel: p-latency over the whole run so far
+        sub = svc.subscribe("gen_latency_ms", 0, 1 << 20, beta=64)
+
     rng = np.random.default_rng(0)
     prompts = [
         rng.integers(2, cfg.vocab_size, size=rng.integers(4, args.prompt_len + 1)).astype(np.int32)
         for _ in range(args.batch)
     ]
-    outs = eng.generate(prompts)
+    latencies = []
+    outs = []
+    for i, p in enumerate(prompts):
+        t0 = time.perf_counter()
+        outs.append(eng.generate([p])[0])
+        latencies.append((time.perf_counter() - t0) * 1e3)
+        if svc is not None:
+            svc.record("gen_latency_ms", i, np.float32([latencies[-1]]))
     for i, o in enumerate(outs):
         print(f"req{i}: prompt_len={len(prompts[i])} output={o.tolist()}")
+
+    if svc is not None:
+        svc.subscriptions.flush()  # push barrier: deliver the update
+        update = sub.get(timeout=5.0)
+        if update is not None:
+            print(
+                f"pushed update: metric=gen_latency_ms windows=0..{1 << 20} "
+                f"eps={update.eps:g} degraded={update.degraded} "
+                f"lag={update.lag_seconds * 1e3:.1f}ms"
+            )
+        stats = svc.subscriptions.stats()
+        print(
+            "subscription plane: "
+            f"delivered={stats['updates_delivered']} "
+            f"dispatches={stats['eval_batches']}"
+        )
+        svc.checkpoint()
+        svc.close()
 
 
 if __name__ == "__main__":

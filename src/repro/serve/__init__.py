@@ -1,1 +1,6 @@
 from repro.serve.engine import Engine, HistogramService, ServeConfig
+from repro.serve.subscriptions import (
+    Subscription,
+    SubscriptionPlane,
+    Update,
+)

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core.histogram import Histogram, build_exact, merge_list, quantile
 from repro.core.tenant import TenantRegistry
 from repro.models.model import decode_step, forward_hidden, init_cache, prefill
+from repro.serve.subscriptions import Subscription, SubscriptionPlane
 
 
 @dataclasses.dataclass
@@ -167,6 +168,8 @@ class HistogramService:
         self.recovery = self.registry.last_recovery
         #: snapshot-verification report when salvage rebuilt from the WAL
         self.salvage = self.registry.last_salvage
+        # standing-query plane, created on first subscribe()
+        self._plane: SubscriptionPlane | None = None
 
     # ---- ingest plane ----------------------------------------------------
     def record(self, metric: str, window_id: int, values) -> None:
@@ -204,6 +207,38 @@ class HistogramService:
 
     def metrics(self) -> list[str]:
         return self.registry.names()
+
+    # ---- standing queries (push plane) -----------------------------------
+    @property
+    def subscriptions(self) -> SubscriptionPlane:
+        """The service's standing-query plane (created on first use);
+        its ``flush()`` is the push barrier, its ``stats()`` also rides
+        ``health()['subscriptions']``."""
+        if self._plane is None:
+            self._plane = SubscriptionPlane(self.registry)
+        return self._plane
+
+    def subscribe(
+        self,
+        metric: str,
+        lo: int,
+        hi: int,
+        beta: int = 64,
+        *,
+        policy: str = "coalesce",
+        queue_cap: int = 8,
+    ) -> Subscription:
+        """Register a standing dashboard query: pushed ``Update``s arrive
+        whenever windows ``lo..hi`` of the metric go stale — same answer
+        (hist and composed eps) the pull path reports, deduplicated and
+        batched into one merge dispatch per ingest tick across ALL
+        subscriptions (serve/subscriptions.py)."""
+        return self.subscriptions.subscribe(
+            metric, lo, hi, beta, policy=policy, queue_cap=queue_cap
+        )
+
+    def unsubscribe(self, sub: Subscription) -> None:
+        self.subscriptions.unsubscribe(sub)
 
     # ---- health plane ----------------------------------------------------
     def health(self) -> dict:

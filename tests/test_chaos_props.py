@@ -16,7 +16,13 @@ process (drops the registry without close) and recovers.  Invariants:
   either fresh or flagged ``degraded=True``; every NON-degraded answer
   bit-matches a fault-free replica fed the same partitions;
 * **recovery fidelity** — the recovered registry's every partition
-  bit-matches a never-faulted replica built from the submitted values.
+  bit-matches a never-faulted replica built from the submitted values;
+* **honest pushes** — standing subscriptions (serve/subscriptions.py)
+  survive armed ``subs.eval``/``subs.deliver`` failpoints: the delivery
+  ledger balances (enqueued = drained + coalesced, i.e. zero
+  *uncounted* loss), and once faults disarm every coalesce subscriber's
+  final pushed answer is non-degraded, current-version, and bit-matches
+  a fault-free replica fed the same partitions.
 
 Runs in the fast lane: few cases, tiny arrays, one jit shape.
 """
@@ -30,6 +36,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IngestBackpressure, TenantRegistry, faults
+from repro.serve.subscriptions import SubscriptionPlane
 
 settings.register_profile("chaos", deadline=None, max_examples=6)
 settings.load_profile("chaos")
@@ -85,6 +92,12 @@ def _arm_faults(stack, seed):
     stack.enter_context(
         faults.inject("tenant.merge", prob=0.20, seed=seed + 5)
     )
+    stack.enter_context(
+        faults.inject("subs.eval", prob=0.15, seed=seed + 6)
+    )
+    stack.enter_context(
+        faults.inject("subs.deliver", prob=0.15, seed=seed + 7)
+    )
 
 
 def _bit_match(reg, ref, tenant, lo, hi):
@@ -109,6 +122,9 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
         snap = os.path.join(base, "reg.npz")
         wal_dir = os.path.join(base, "wal")
         reg = TenantRegistry(num_buckets=T, wal_dir=wal_dir)
+        plane = SubscriptionPlane(reg)  # every ingest below ticks it
+        subs = []  # live standing queries (coalesce/drop — never block)
+        drained: dict[int, int] = {}  # id(sub) → updates drained so far
         oracle: dict[tuple[str, int], np.ndarray] = {}  # every submit
         must: set[tuple[str, int]] = set()  # acked → survives the crash
         next_pid = {t: 0 for t in tenants}
@@ -123,7 +139,7 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
         with contextlib.ExitStack() as stack:
             _arm_faults(stack, seed)
             for _ in range(n_ops):
-                op = rng.integers(0, 10)
+                op = rng.integers(0, 13)
                 if op < 4:  # sync ingest: ack ⇒ logged + applied
                     t, pid, v = draw_item()
                     try:
@@ -147,7 +163,7 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
                     for t, pid, _e in reg._pool.drain():
                         must.discard((t, pid))
                     reg.save(snap)
-                else:  # dashboard query mid-chaos: must not raise
+                elif op < 10:  # dashboard query mid-chaos: must not raise
                     for t in tenants:
                         if t in reg and reg[t].ids():
                             ids = reg[t].ids()
@@ -158,6 +174,29 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
                                 degraded_ok=True,
                             )
                             assert len(ans) == 2  # well-formed either way
+                elif op < 11:  # standing query joins mid-chaos
+                    t = tenants[int(rng.integers(0, n_tenants))]
+                    sub = plane.subscribe(
+                        t,
+                        0,
+                        next_pid[t] + 4,
+                        BETA,
+                        policy=("coalesce", "drop")[int(rng.integers(0, 2))],
+                    )
+                    subs.append(sub)
+                    drained[id(sub)] = 0
+                elif op < 12 and subs:  # and leaves mid-chaos
+                    sub = subs.pop(int(rng.integers(0, len(subs))))
+                    plane.unsubscribe(sub)  # close FIRST: no more enqueues
+                    drained[id(sub)] += len(sub.drain())
+                    st = sub.stats()  # the closed endpoint's final ledger
+                    assert (
+                        drained[id(sub)]
+                        == st["delivered"] - st["coalesced"]
+                    )
+                else:  # dashboard consumers drain under fire
+                    for sub in subs:
+                        drained[id(sub)] += len(sub.drain())
 
             # quiesce under the armed schedule: drain must return (no
             # hang) and surfaces every terminal apply failure
@@ -200,6 +239,44 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
             )
             assert eps == we
             ref.close()
+
+        # faults disarmed: one last flush pushes every stale subscriber a
+        # fresh answer.  The delivery ledger must balance for every
+        # policy, and each coalesce subscriber's final update must be
+        # non-degraded, current-version, and bit-match a fault-free
+        # replica fed the same window membership.
+        plane.flush()
+        for sub in subs:
+            ups = sub.drain()
+            drained[id(sub)] += len(ups)
+            st = sub.stats()
+            assert drained[id(sub)] == st["delivered"] - st["coalesced"]
+            if sub.policy != "coalesce" or not ups:
+                continue  # drop loses newest by contract; ledger above
+            up = ups[-1]
+            assert not up.degraded
+            t, lo, hi, _beta = sub.key
+            assert up.version == reg[t].version
+            members = [p for p in reg[t].ids() if lo <= p <= hi]
+            assert (up.hist is None) == (not members)
+            if members:
+                ref = TenantRegistry(num_buckets=T)
+                ref.ingest_many(
+                    t, {pid: oracle[(t, pid)] for pid in members}
+                )
+                [(wh, we)] = ref.query_many(
+                    [(t, lo, hi)], BETA, strict=False
+                )
+                assert np.array_equal(
+                    np.asarray(up.hist.boundaries),
+                    np.asarray(wh.boundaries),
+                )
+                assert np.array_equal(
+                    np.asarray(up.hist.sizes), np.asarray(wh.sizes)
+                )
+                assert up.eps == we
+                ref.close()
+        plane.close()  # the in-memory push plane dies with the process
 
         # a final acked burst that never gets flushed: recovery must
         # replay it from the log alone

@@ -16,6 +16,8 @@ import pytest
 from repro.core import faults
 from repro.core.arena import NodeArena
 from repro.core.stream import HistogramStore
+from repro.core.tenant import TenantRegistry
+from repro.serve.subscriptions import SubscriptionPlane
 
 
 def _store(tmp_path, n=3):
@@ -84,6 +86,62 @@ def test_snapshot_load_faultable(tmp_path):
             HistogramStore.load(snap)
     loaded = HistogramStore.load(snap)
     assert len(loaded.summaries) == len(store.summaries)
+
+
+def _plane_with_sub():
+    reg = TenantRegistry(num_buckets=8)
+    plane = SubscriptionPlane(reg)
+    sub = plane.subscribe("m", 0, 8, 16)
+    rng = np.random.default_rng(0)
+    reg.ingest("m", 0, rng.normal(size=64))
+    plane.flush()
+    [first] = sub.drain()
+    assert not first.degraded  # primed: last-known-good is recorded
+    return reg, plane, sub
+
+
+def test_subs_eval_faultable():
+    """An armed ``subs.eval`` turns the evaluation pass degraded (the
+    last-known-good contract); disarming heals to a fresh push."""
+    reg, plane, sub = _plane_with_sub()
+    try:
+        rng = np.random.default_rng(1)
+        with faults.inject("subs.eval"):
+            reg.ingest("m", 1, rng.normal(size=64))
+            plane.flush()
+            ups = sub.drain()
+            assert ups and all(u.degraded for u in ups)
+            assert plane.eval_failures >= 1
+        plane.flush()  # healed: the still-stale window re-evaluates fresh
+        ups = sub.drain()
+        assert ups and not ups[-1].degraded
+        assert ups[-1].version == reg["m"].version
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_subs_deliver_faultable():
+    """An armed ``subs.deliver`` loses no answers: the subscriber stays
+    at its old version and the next pass after disarm re-delivers from
+    the plane's answer cache — without a fresh merge dispatch."""
+    reg, plane, sub = _plane_with_sub()
+    try:
+        rng = np.random.default_rng(2)
+        with faults.inject("subs.deliver"):
+            reg.ingest("m", 1, rng.normal(size=64))
+            plane.flush()
+            assert sub.drain() == []  # delivery faulted, nothing enqueued
+            assert plane.deliver_failures >= 1
+        batches = plane.stats()["eval_batches"]
+        plane.flush()  # redelivery comes from the cache: no new dispatch
+        assert plane.stats()["eval_batches"] == batches
+        ups = sub.drain()
+        assert ups and not ups[-1].degraded
+        assert ups[-1].version == reg["m"].version
+    finally:
+        plane.close()
+        reg.close()
 
 
 def test_checkpoint_save_and_restore_faultable(tmp_path):

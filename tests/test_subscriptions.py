@@ -1,0 +1,385 @@
+"""Standing-query subscription plane (serve/subscriptions.py).
+
+The push plane's whole contract is "the same answer the pull path gives,
+without the polling": every test here pins a piece of that —
+
+* **bit-identity** — across random ingest/evict/subscribe/unsubscribe
+  interleavings (shared-arena and per-tenant layouts), every pushed
+  update's ``(hist, eps)`` equals a *cold* ``query_many`` pull at the
+  same store version (tree caches cleared first, so the comparison
+  cannot be satisfied by a shared cache entry);
+* **dedup accounting** — N subscribers over W distinct windows cost W
+  evaluations and ONE merge dispatch per tick, machine-checked through
+  ``merge_dispatches`` and the plane's counters;
+* **overflow policies** — coalesce/drop/block behavior and counters;
+* **degraded pushes** — a quarantined tenant's subscribers receive the
+  last-known-good answer flagged ``degraded=True`` (the
+  ``query_many(degraded_ok=True)`` contract), and heal to a fresh push
+  once the breaker closes.
+
+Sequencing is entirely event-driven (``plane.flush()`` barriers) — no
+sleeps anywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.core import TenantRegistry, faults
+from repro.core.resilience import BreakerPolicy
+from repro.serve.subscriptions import SubscriptionPlane
+
+T = 8
+BETA = 16
+N_VALUES = 32
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _mk(plane_of=SubscriptionPlane, **kw):
+    reg = TenantRegistry(num_buckets=T, **kw)
+    return reg, plane_of(reg)
+
+
+def _cold_pull(reg, key):
+    """Fresh-from-the-tree answer for one subscription key — the caches
+    are cleared first, so a pushed answer cannot match by aliasing."""
+    name, lo, hi, beta = key
+    reg[name]._tree._cache.clear()
+    [ans] = reg.query_many([(name, lo, hi)], beta, strict=False)
+    return ans
+
+
+def _assert_update_matches_pull(reg, update):
+    hist, eps = _cold_pull(reg, (update.tenant, update.lo, update.hi,
+                                 update.beta))
+    assert (update.hist is None) == (hist is None)
+    if hist is not None:
+        assert np.array_equal(
+            np.asarray(update.hist.boundaries), np.asarray(hist.boundaries)
+        )
+        assert np.array_equal(
+            np.asarray(update.hist.sizes), np.asarray(hist.sizes)
+        )
+    assert update.eps == eps
+
+
+@pytest.mark.parametrize("shared_arena", [False, True])
+def test_push_matches_pull_bit_identical(shared_arena):
+    """Random interleavings of ingest / budget-eviction / subscribe /
+    unsubscribe: after every flush barrier, each live subscriber's latest
+    pushed answer bit-matches a cold pull at the same store version."""
+    rng = np.random.default_rng(7 + shared_arena)
+    reg, plane = _mk(shared_arena=shared_arena, budget=6000)
+    tenants = ["t0", "t1", "t2"]
+    live = []  # (sub, last update seen)
+    last_up = {}
+    next_pid = {t: 0 for t in tenants}
+    try:
+        for step in range(40):
+            op = rng.integers(0, 10)
+            t = tenants[int(rng.integers(0, 3))]
+            if op < 5:  # ingest (ticks the plane, may evict under budget)
+                next_pid[t] += int(rng.integers(1, 3))
+                reg.ingest(t, next_pid[t], rng.normal(size=N_VALUES))
+            elif op < 7:  # subscribe a random window
+                lo = int(rng.integers(0, max(1, next_pid[t])))
+                hi = lo + int(rng.integers(0, 8))
+                sub = plane.subscribe(t, lo, hi, BETA)
+                live.append(sub)
+            elif op < 8 and live:  # unsubscribe
+                sub = live.pop(int(rng.integers(0, len(live))))
+                plane.unsubscribe(sub)
+                last_up.pop(id(sub), None)
+            elif op < 9:  # explicit eviction sweep
+                reg.enforce_budget()
+            else:  # barrier + spot-check everything delivered so far
+                plane.flush()
+                for sub in live:
+                    ups = sub.drain()
+                    if ups:
+                        last_up[id(sub)] = ups[-1]
+
+        plane.flush()  # final barrier: every sub now has a current answer
+        for sub in live:
+            ups = sub.drain()
+            if ups:
+                last_up[id(sub)] = ups[-1]
+            up = last_up.get(id(sub))
+            assert up is not None, f"no update ever pushed for {sub.key}"
+            assert not up.degraded  # no faults armed here
+            name = sub.key[0]
+            assert up.version == reg[name].version
+            _assert_update_matches_pull(reg, up)
+        # every delivery accounted: accepted pushes minus drains = pending
+        stats = plane.stats()
+        assert stats["updates_delivered"] > 0
+        assert stats["dropped"] == 0  # coalesce default drops nothing
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_dedup_shared_windows_one_eval():
+    """10 subscribers over 2 distinct windows: one tick costs exactly 2
+    window evaluations, 1 merge dispatch, 10 deliveries, 8 saved."""
+    reg, plane = _mk()
+    try:
+        rng = np.random.default_rng(0)
+        store = reg.tenant("m")  # store-level: no plane ticks while priming
+        store.ingest(0, rng.normal(size=N_VALUES))
+        store.ingest(1, rng.normal(size=N_VALUES))
+        subs = [plane.subscribe("m", w, w, BETA) for w in (0, 1)
+                for _ in range(5)]
+        d0 = reg.merge_dispatches
+        plane.flush()
+        assert reg.merge_dispatches - d0 == 1
+        st = plane.stats()
+        assert st["windows_evaluated"] == 2
+        assert st["eval_batches"] == 1
+        assert st["updates_delivered"] == 10
+        assert st["dedup_saved"] == 8
+        for sub in subs:
+            [up] = sub.drain()
+            _assert_update_matches_pull(reg, up)
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_one_dispatch_per_tick_cross_tenant():
+    """Stale windows across MANY tenants still pack into a single
+    cross-tenant ``query_many`` merge dispatch per tick."""
+    reg, plane = _mk(shared_arena=True)
+    try:
+        rng = np.random.default_rng(1)
+        names = [f"t{i}" for i in range(6)]
+        subs = [plane.subscribe(n, 0, 4, BETA) for n in names]
+        for n in names:  # store-level ingest: versions move, no ticks
+            for pid in range(3):
+                reg.tenant(n).ingest(pid, rng.normal(size=N_VALUES))
+        for tick in range(3):
+            d0 = reg.merge_dispatches
+            b0 = plane.stats()["eval_batches"]
+            for n in names:
+                reg.tenant(n).ingest(3 + tick, rng.normal(size=N_VALUES))
+            plane.mark_stale(names)  # ONE tick covering all six tenants
+            plane.flush()
+            assert reg.merge_dispatches - d0 == 1
+            assert plane.stats()["eval_batches"] - b0 == 1
+        for sub in subs:
+            ups = sub.drain()
+            assert ups  # every tick pushed (cap 8 > 3 ticks: none lost)
+            _assert_update_matches_pull(reg, ups[-1])
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_coalesce_policy_keeps_newest():
+    reg, plane = _mk()
+    try:
+        rng = np.random.default_rng(2)
+        sub = plane.subscribe("m", 0, 8, BETA, queue_cap=1)
+        for pid in range(3):
+            reg.ingest("m", pid, rng.normal(size=N_VALUES))
+            plane.flush()
+        st = sub.stats()
+        assert st["delivered"] == 3
+        assert st["coalesced"] == 2  # two older updates displaced
+        assert st["pending"] == 1
+        [up] = sub.drain()
+        assert up.version == reg["m"].version  # the survivor is newest
+        _assert_update_matches_pull(reg, up)
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_drop_policy_discards_newest_and_counts():
+    reg, plane = _mk()
+    try:
+        rng = np.random.default_rng(3)
+        sub = plane.subscribe("m", 0, 8, BETA, policy="drop", queue_cap=1)
+        versions = []
+        for pid in range(3):
+            reg.ingest("m", pid, rng.normal(size=N_VALUES))
+            plane.flush()
+            versions.append(reg["m"].version)
+        st = sub.stats()
+        assert st["delivered"] == 1  # only the first made it in
+        assert st["dropped"] == 2  # the two newer ones were the casualties
+        [up] = sub.drain()
+        assert up.version == versions[0]  # oldest kept — drop ≠ coalesce
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_block_policy_backpressures_until_consumer_drains():
+    """cap=1 block subscriber: the second update waits for the consumer;
+    ``get()`` frees the slot and the flush barrier then completes."""
+    reg, plane = _mk()
+    try:
+        rng = np.random.default_rng(4)
+        sub = plane.subscribe("m", 0, 8, BETA, policy="block", queue_cap=1)
+        reg.ingest("m", 0, rng.normal(size=N_VALUES))
+        plane.flush()
+        v0 = reg["m"].version
+        reg.ingest("m", 1, rng.normal(size=N_VALUES))  # worker now blocks
+        first = sub.get(timeout=10.0)  # frees the slot, unblocks delivery
+        assert first is not None and first.version == v0
+        plane.flush()  # completes only because the consumer drained
+        second = sub.get(timeout=10.0)
+        assert second is not None
+        assert second.version == reg["m"].version
+        st = sub.stats()
+        assert st["coalesced"] == 0 and st["dropped"] == 0  # nothing lost
+        _assert_update_matches_pull(reg, second)
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_invalid_policy_and_cap_rejected():
+    reg, plane = _mk()
+    try:
+        with pytest.raises(ValueError):
+            plane.subscribe("m", 0, 1, BETA, policy="mystery")
+        with pytest.raises(ValueError):
+            plane.subscribe("m", 0, 1, BETA, queue_cap=0)
+        assert len(plane) == 0
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_quarantined_tenant_pushes_degraded_then_heals():
+    """Breaker-open tenant: subscribers get the last-known-good answer
+    flagged degraded (never advancing their version); breaker closed →
+    the next tick re-pushes fresh, bit-matching the pull path."""
+    policy = BreakerPolicy(threshold=1, cooldown=0.0, probes=1)
+    reg, plane = _mk(breaker=policy)
+    try:
+        rng = np.random.default_rng(5)
+        sub = plane.subscribe("m", 0, 8, BETA)
+        reg.ingest("m", 0, rng.normal(size=N_VALUES))
+        plane.flush()
+        [fresh0] = sub.drain()
+        assert not fresh0.degraded
+
+        # trip the breaker: one poisoned ingest (threshold=1)
+        with faults.inject("tenant.apply"):
+            with pytest.raises(faults.FaultError):
+                reg.ingest("m", 1, rng.normal(size=N_VALUES))
+        assert reg._breakers["m"].state == "open"
+        # the version still moves (store-level ingest bypasses the
+        # registry door) — the subscriber is stale AND quarantined
+        reg.tenant("m").ingest(2, rng.normal(size=N_VALUES))
+        plane.mark_stale(["m"])
+        plane.flush()
+        # a degraded window is re-pushed on EVERY pass until it heals
+        # (tick and flush may coalesce into one pass or run as two)
+        degs = sub.drain()
+        assert degs and all(u.degraded for u in degs)
+        deg = degs[-1]
+        assert deg.eps >= fresh0.eps  # honestly widened
+        assert plane.stats()["degraded_pushed"] == len(degs)
+
+        # cooldown=0: the next registry ingest closes the breaker, and
+        # its tick re-evaluates the still-stale window fresh
+        reg.ingest("m", 3, rng.normal(size=N_VALUES))
+        plane.flush()
+        ups = sub.drain()
+        assert ups and not ups[-1].degraded
+        assert ups[-1].version == reg["m"].version
+        _assert_update_matches_pull(reg, ups[-1])
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_registry_close_closes_planes_and_health_surfaces_stats():
+    reg, plane = _mk()
+    rng = np.random.default_rng(6)
+    sub = plane.subscribe("m", 0, 4, BETA)
+    reg.ingest("m", 0, rng.normal(size=N_VALUES))
+    plane.flush()
+    health = reg.health()
+    assert health["subscriptions"]["subscriptions"] == 1
+    assert health["subscriptions"]["updates_delivered"] == 1
+    assert health["subscriptions"]["last_lag_seconds"] >= 0.0
+    reg.close()  # closes attached planes
+    assert sub.closed
+    assert sub.get(timeout=0.0) is not None  # pending update still readable
+    with pytest.raises(RuntimeError):
+        plane.subscribe("m", 0, 1, BETA)
+
+
+def test_unsubscribe_stops_deliveries_and_prunes_state():
+    reg, plane = _mk()
+    try:
+        rng = np.random.default_rng(8)
+        keep = plane.subscribe("m", 0, 8, BETA)
+        gone = plane.subscribe("m", 0, 8, BETA)
+        reg.ingest("m", 0, rng.normal(size=N_VALUES))
+        plane.flush()
+        assert len(gone.drain()) == 1
+        plane.unsubscribe(gone)
+        assert len(plane) == 1
+        reg.ingest("m", 1, rng.normal(size=N_VALUES))
+        plane.flush()
+        assert gone.pending() == 0  # closed endpoints receive nothing
+        assert len(keep.drain()) == 2
+        plane.unsubscribe(keep)
+        # last subscriber gone: tenant refs and the eval cache both prune
+        plane.flush()
+        assert plane.stats()["tenants"] == 0
+        assert not plane._seen
+    finally:
+        plane.close()
+        reg.close()
+
+
+def test_service_surface(tmp_path):
+    """HistogramService exposes subscribe/unsubscribe; updates ride the
+    durable record() path and health() carries the plane stats."""
+    from repro.serve import HistogramService
+
+    svc = HistogramService(str(tmp_path / "svc"), num_buckets=T)
+    try:
+        rng = np.random.default_rng(9)
+        sub = svc.subscribe("latency_ms", 0, 4, BETA)
+        svc.record("latency_ms", 0, rng.normal(size=N_VALUES))
+        svc.subscriptions.flush()
+        [up] = sub.drain()
+        assert up.tenant == "latency_ms" and not up.degraded
+        _assert_update_matches_pull(svc.registry, up)
+        assert svc.health()["subscriptions"]["subscriptions"] == 1
+        svc.unsubscribe(sub)
+        assert sub.closed
+    finally:
+        svc.close()
+
+
+def test_hub_surface():
+    """TelemetryHub.subscribe reuses one plane across calls."""
+    from repro.core.telemetry import TelemetryHub
+
+    hub = TelemetryHub(T=T)
+    try:
+        rng = np.random.default_rng(10)
+        s1 = hub.subscribe("grad_norm", 0, 4, BETA)
+        s2 = hub.subscribe("step_ms", 0, 4, BETA)
+        assert s1.plane is s2.plane
+        hub.record("grad_norm", 0, rng.normal(size=N_VALUES))
+        s1.plane.flush()
+        [up] = s1.drain()
+        assert up.tenant == "grad_norm"
+        hub.unsubscribe(s1)
+        assert s1.closed and not s2.closed
+    finally:
+        hub.close()
