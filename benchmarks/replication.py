@@ -1,0 +1,270 @@
+"""Hot-standby replication: ship overhead, replica lag, failover drill.
+
+Three questions, machine-checked (the acceptance criteria of the
+replication subsystem, see core/replication.py):
+
+  * **What does ship-before-ack cost?**  The same batched stream is
+    ingested through a WAL-only registry and a WAL + ``Replicator``
+    (dir transport) registry.  The shipper moves the freshly committed
+    bytes and rewrites the (un-fsynced) manifest per group commit, so
+    its cost must stay marginal next to the fsync it rides behind:
+    reported as ``overhead_ratio``, CI asserts ≤ 1.1×.
+  * **How stale is a tailing replica?**  Over ingest→tail cycles the
+    follower records its post-tail staleness (manifest age) and the
+    tail-pass latency; reported as p50/p99 seconds.
+  * **What does failover cost — and lose?**  The primary is killed
+    (no close, no checkpoint) mid-stream, the follower promotes with
+    the epoch fence, and the drill measures time-to-first-answer on the
+    promoted registry.  ``acked_loss_count`` must be 0 and the promoted
+    answers must bit-match a never-crashed replica (``bit_identical``);
+    the deposed primary's next append must raise ``PrimaryFenced``.
+
+Results print as CSV rows and are written to ``BENCH_replication.json``
+(schema ``bench_replication/v1``; CI smoke-checks it at tiny sizes via
+``--smoke``).
+
+Run standalone: ``PYTHONPATH=src python benchmarks/replication.py``
+or as a section of ``python -m benchmarks.run --only replication``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import TenantRegistry
+from repro.core.replication import DirTransport, Follower, Replicator
+from repro.core.resilience import PrimaryFenced
+
+SCHEMA = "bench_replication/v1"
+
+T = 32
+BETA = 16
+
+
+def _batches(parts: dict[int, np.ndarray], size: int):
+    pids = sorted(parts)
+    for i in range(0, len(pids), size):
+        yield {pid: parts[pid] for pid in pids[i : i + size]}
+
+
+def _ingest_seconds(reg, parts, batch: int, reps: int) -> float:
+    """Best-of-``reps`` wall time to ingest the whole stream in batches
+    (fresh pids per rep keep everything append-only and jit-warm)."""
+    out = []
+    n = len(parts)
+    for r in range(reps):
+        shifted = {pid + r * 10 * n: v for pid, v in parts.items()}
+        t0 = time.perf_counter()
+        for b in _batches(shifted, batch):
+            reg.ingest_many("svc", b)
+        out.append(time.perf_counter() - t0)
+    return float(min(out))
+
+
+def _pctl(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def main(
+    emit,
+    *,
+    partitions: int = 64,
+    values: int = 8192,
+    batch: int = 8,
+    reps: int = 3,
+    out_path: str = "BENCH_replication.json",
+) -> dict:
+    rng = np.random.default_rng(0)
+    parts = {
+        pid: rng.lognormal(-1.8, 0.55, size=values).astype(np.float32)
+        for pid in range(partitions)
+    }
+    base = tempfile.mkdtemp(prefix="bench-replication-")
+    try:
+        # ---- ship overhead: WAL+ship vs WAL-only (group commit) ----
+        warm = TenantRegistry(num_buckets=T)
+        warm.ingest_many("svc", next(_batches(parts, batch)))  # jit warm
+        warm.close()
+
+        wal_only = TenantRegistry(
+            num_buckets=T, wal_dir=os.path.join(base, "wal-base")
+        )
+        wal_seconds = _ingest_seconds(wal_only, parts, batch, reps)
+        wal_only.close()
+
+        shipped = TenantRegistry(
+            num_buckets=T, wal_dir=os.path.join(base, "wal-ship")
+        )
+        repl = Replicator(
+            shipped._wal, [DirTransport(os.path.join(base, "standby-ovh"))]
+        ).attach(shipped)
+        ship_seconds = _ingest_seconds(shipped, parts, batch, reps)
+        ship_stats = repl.stats()
+        shipped.close()
+        overhead_ratio = ship_seconds / wal_seconds
+
+        # ---- replica lag over ingest→tail cycles ----
+        preg = TenantRegistry(
+            num_buckets=T, wal_dir=os.path.join(base, "wal-lag")
+        )
+        standby = os.path.join(base, "standby-lag")
+        Replicator(preg._wal, [DirTransport(standby)]).attach(preg)
+        follower = Follower(standby, num_buckets=T)
+        lag_seconds, tail_ms = [], []
+        for i, b in enumerate(_batches(parts, batch)):
+            preg.ingest_many("svc", {p + 10**6: v for p, v in b.items()})
+            t0 = time.perf_counter()
+            follower.tail()
+            tail_ms.append(1e3 * (time.perf_counter() - t0))
+            lag = follower.lag()
+            assert lag["records"] == 0  # caught up after every tail
+            lag_seconds.append(lag["seconds"])
+        follower.close()
+        preg.close()
+
+        # ---- failover drill: kill -9 → promote → first answer ----
+        d = os.path.join(base, "drill")
+        reg = TenantRegistry(num_buckets=T, wal_dir=os.path.join(d, "wal"))
+        drill_standby = os.path.join(d, "standby")
+        drill_repl = Replicator(
+            reg._wal, [DirTransport(drill_standby)]
+        ).attach(reg)
+        fol = Follower(drill_standby, num_buckets=T)
+        n_acked = min(partitions, 16)
+        acked = {pid: parts[pid][: min(values, 2048)] for pid in range(n_acked)}
+        for pid, v in acked.items():
+            reg.ingest("svc", pid, v)  # returned ⇒ durable AND shipped
+        fol.tail()  # warm standby: tailing continuously, like production
+        reg.ingest("svc", n_acked, acked[0])  # in-flight at the kill
+        old_wal = reg._wal
+        fence = drill_repl.fence
+        del reg  # kill -9: no close, no checkpoint
+
+        t0 = time.perf_counter()
+        promoted = fol.promote(fence=fence)
+        [first] = promoted.query_many(
+            [("svc", 0, n_acked - 1)], BETA, strict=False
+        )
+        time_to_first_answer = time.perf_counter() - t0
+
+        acked_loss = sum(
+            1 for pid in acked if pid not in promoted["svc"].summaries
+        )
+        ref = TenantRegistry(num_buckets=T)
+        ref.ingest_many(
+            "svc",
+            {
+                pid: (acked[pid] if pid in acked else acked[0])
+                for pid in promoted["svc"].ids()
+            },
+        )
+        [(wh, we)] = ref.query_many(
+            [("svc", 0, n_acked - 1)], BETA, strict=False
+        )
+        hist, eps = first
+        bit_identical = (
+            hist is not None
+            and np.array_equal(
+                np.asarray(hist.boundaries), np.asarray(wh.boundaries)
+            )
+            and np.array_equal(np.asarray(hist.sizes), np.asarray(wh.sizes))
+            and eps == we
+        )
+        ref.close()
+        try:
+            old_wal.append("svc", 10**6, acked[0])
+            fenced = False
+        except PrimaryFenced:
+            fenced = True
+        old_wal.close()
+        fol.close()
+
+        result = {
+            "schema": SCHEMA,
+            "partitions": partitions,
+            "values_per_partition": values,
+            "batch": batch,
+            "T": T,
+            "beta": BETA,
+            "ship": {
+                "wal_seconds": wal_seconds,
+                "replicated_seconds": ship_seconds,
+                "overhead_ratio": overhead_ratio,
+                "ships": ship_stats["ships"],
+                "bytes_shipped": ship_stats["bytes_shipped"],
+            },
+            "lag": {
+                "cycles": len(lag_seconds),
+                "seconds_p50": _pctl(lag_seconds, 50),
+                "seconds_p99": _pctl(lag_seconds, 99),
+                "tail_ms_p50": _pctl(tail_ms, 50),
+                "tail_ms_p99": _pctl(tail_ms, 99),
+            },
+            "failover": {
+                "acked_records": n_acked,
+                "time_to_first_answer_seconds": time_to_first_answer,
+                "promoted_epoch": fol.promoted_epoch,
+                "acked_loss_count": acked_loss,
+                "bit_identical": bool(bit_identical),
+                "old_primary_fenced": fenced,
+            },
+            "zero_acked_loss": acked_loss == 0,
+            "failover_bit_identical": bool(bit_identical),
+        }
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+
+        emit(
+            "replication_ship_overhead",
+            overhead_ratio,
+            f"WAL+ship {ship_seconds*1e3:.0f} ms vs WAL {wal_seconds*1e3:.0f} "
+            f"ms for {partitions}×{values} f32 ({ship_stats['ships']} ships, "
+            f"{ship_stats['bytes_shipped']} B)",
+        )
+        emit(
+            "replication_lag_p99_seconds",
+            _pctl(lag_seconds, 99),
+            f"{len(lag_seconds)} ingest→tail cycles, tail p99 "
+            f"{_pctl(tail_ms, 99):.2f} ms",
+        )
+        emit(
+            "replication_failover_ttfa_seconds",
+            time_to_first_answer,
+            f"promote epoch {fol.promoted_epoch} + first answer over "
+            f"{n_acked} acked records (loss {acked_loss}, "
+            f"bit_identical {bit_identical}, fenced {fenced})",
+        )
+        emit("replication_json", 0.0, f"written to {out_path}")
+        return result
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes for CI: validates the pipeline + JSON schema only",
+    )
+    ap.add_argument("--out", default="BENCH_replication.json")
+    ap.add_argument("--partitions", type=int, default=64)
+    args = ap.parse_args()
+    kw = dict(out_path=args.out, partitions=args.partitions)
+    if args.smoke:
+        # values large enough that the per-batch fsync dominates — the
+        # 1.1× ship-overhead gate is meaningful, not noise
+        kw.update(partitions=12, values=8192, batch=6, reps=3)
+    print("name,value,derived")
+    main(
+        lambda name, v, derived="": print(
+            f"{name},{v:.3f},{derived}", flush=True
+        ),
+        **kw,
+    )

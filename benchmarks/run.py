@@ -29,6 +29,10 @@
                         re-pull: update-latency p50/p99, one merge
                         dispatch per tick, dedup counters
                         (writes BENCH_serving.json)
+  * replication       — hot-standby WAL shipping: ship-before-ack
+                        overhead (≤ 1.1× gate), replica lag p50/p99,
+                        kill -9 → promote failover drill with zero
+                        acked loss (writes BENCH_replication.json)
   * roofline          — dry-run derived roofline rows (if results exist)
 """
 import argparse
@@ -39,6 +43,7 @@ from benchmarks import ingest_throughput, interval_query, multi_tenant
 from benchmarks import arena as arena_bench
 from benchmarks import durability as durability_bench
 from benchmarks import faults as faults_bench
+from benchmarks import replication as replication_bench
 from benchmarks import retention as retention_bench
 from benchmarks import roofline_report
 from benchmarks import serving as serving_bench
@@ -67,6 +72,7 @@ def main() -> None:
         "durability": durability_bench.main,
         "faults": faults_bench.main,
         "serving": serving_bench.main,
+        "replication": replication_bench.main,
     }
     for key, fn in sections.items():
         if chosen is None or key in chosen:

@@ -53,6 +53,8 @@ CLASS_ATTR_LOCKS: dict[tuple[str, str], str] = {
     ("NodeArena", "_lock"): "arena._lock",
     ("SubscriptionPlane", "cv"): "subs.cv",
     ("Subscription", "cv"): "subs.queue",
+    ("Replicator", "_lock"): "repl.replicator",
+    ("Follower", "_lock"): "repl.follower",
 }
 
 # module-level lock names → lock id (qualified by defining basename)
@@ -79,6 +81,9 @@ RECEIVER_CLASS: dict[str, str] = {
     "_tree": "IntervalTree",
     "plane": "SubscriptionPlane",  # tenant.py's _notify_stale loop var
     "sub": "Subscription",
+    "replicator": "Replicator",
+    "_replication": "Replicator",
+    "follower": "Follower",
 }
 
 # constructor-argument callbacks: attribute call on self that is really a

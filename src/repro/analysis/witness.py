@@ -49,6 +49,9 @@ class LockOrderError(AssertionError):
 # rationale per edge).  Lower rank = acquired first (outermost).  Gaps
 # are deliberate — future locks slot in without renumbering.
 RANKS: dict[str, int] = {
+    "repl.replicator": 2,       # Replicator._lock (ship serialization)
+    "repl.follower": 4,         # Follower._lock (tail/apply state)
+    "repl.dirgate": 5,          # per-follower-dir send-vs-fence gate
     "subs.cv": 6,               # SubscriptionPlane.cv's underlying RLock
     "subs.queue": 8,            # Subscription.cv (delivery queue, key=id)
     "registry._lock": 10,       # TenantRegistry._lock (RLock)

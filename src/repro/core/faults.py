@@ -14,6 +14,7 @@ fault-tolerant layer threads through:
     core/tenant.py    tenant.merge / tenant.apply
     core/stream.py    snapshot.save / snapshot.save.corrupt / snapshot.load
     checkpoint/       checkpoint.save / checkpoint.restore
+    core/replication.py  repl.ship / repl.tail / repl.apply / repl.promote
 
 Design rules
 ------------
@@ -91,6 +92,10 @@ SITES: frozenset[str] = frozenset({
     "snapshot.load",
     "checkpoint.save",
     "checkpoint.restore",
+    "repl.ship",
+    "repl.tail",
+    "repl.apply",
+    "repl.promote",
 })
 
 

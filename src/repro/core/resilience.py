@@ -30,7 +30,18 @@ behavior is testable without real time passing:
 * :class:`IngestBackpressure` — raised to the *submitter* when durable
   ingest cannot make its ack true (the WAL append/fsync failed after
   retries).  A sick disk pushes back on producers instead of queueing
-  acked-but-undurable partitions without bound.
+  acked-but-undurable partitions without bound.  The exception carries
+  ``retry_after`` — the backoff the exhausted retry schedule would have
+  slept next — so callers (and the replication shipper) can pace their
+  resubmit instead of hot-looping; ``health()["backpressure"]`` mirrors
+  the latest rejection for dashboards.
+* :class:`PrimaryFenced` / :class:`NotPrimary` — the replication plane's
+  epoch-fencing contract (core/replication.py): after a failover
+  ``promote()`` stamps the new epoch and fences the deposed primary,
+  whose late WAL appends are rejected with :class:`PrimaryFenced`
+  (never retried, never wrapped in backpressure — the split-brain must
+  surface, not pace).  :class:`NotPrimary` rejects ingest on a
+  replica-role service.
 """
 from __future__ import annotations
 
@@ -45,6 +56,8 @@ __all__ = [
     "BreakerPolicy",
     "CircuitBreaker",
     "IngestBackpressure",
+    "NotPrimary",
+    "PrimaryFenced",
     "RetryPolicy",
     "TenantQuarantined",
 ]
@@ -53,7 +66,36 @@ __all__ = [
 class IngestBackpressure(RuntimeError):
     """Durable ingest rejected: the WAL could not make the ack true
     (append or fsync failed after bounded retries).  Nothing was
-    enqueued — the caller owns the partition and may resubmit."""
+    enqueued — the caller owns the partition and may resubmit.
+
+    ``retry_after`` (seconds, ``None`` when unknown) is the pacing hint:
+    the backoff delay the exhausted retry schedule would have applied
+    next.  Callers that resubmit sooner are hot-looping against a disk
+    that just refused this exact work.
+    """
+
+    def __init__(self, message: str, *, retry_after: float | None = None):
+        super().__init__(message)
+        self.retry_after = retry_after
+
+
+class PrimaryFenced(RuntimeError):
+    """WAL append rejected by epoch fencing: a follower was promoted at
+    a higher epoch than this (now deposed) primary's.  Not a transient
+    fault — the caller must stop writing, not retry."""
+
+    def __init__(self, epoch: int, fence_epoch: int):
+        super().__init__(
+            f"primary fenced: log epoch {epoch} < fence epoch "
+            f"{fence_epoch} (a follower was promoted)"
+        )
+        self.epoch = int(epoch)
+        self.fence_epoch = int(fence_epoch)
+
+
+class NotPrimary(RuntimeError):
+    """Write rejected: this service runs in ``role="replica"`` and only
+    the primary accepts ingest (promote() flips the role)."""
 
 
 class TenantQuarantined(RuntimeError):
@@ -91,6 +133,12 @@ class RetryPolicy:
             if self.jitter > 0.0:
                 d *= 1.0 - self.jitter * rng.random()
             yield d
+
+    def retry_after(self) -> float:
+        """The (un-jittered) backoff that would follow the final attempt
+        — the pacing hint :class:`IngestBackpressure` hands callers when
+        this schedule is exhausted."""
+        return min(self.cap, self.base * (2.0 ** max(0, self.attempts - 1)))
 
 
 def retry_call(
@@ -226,10 +274,21 @@ class Answer(tuple):
 
     degraded = False  # class default: plain answers read False
     stale_version: int | None = None  # store version the cached answer saw
+    lag_seconds: float | None = None  # replication lag (replica-served)
+
+    @property
+    def histogram(self):
+        return self[0]
+
+    @property
+    def eps(self) -> float:
+        return self[1]
 
     @staticmethod
-    def make(hist, eps: float, *, degraded: bool, stale_version=None):
+    def make(hist, eps: float, *, degraded: bool, stale_version=None,
+             lag_seconds=None):
         a = Answer((hist, eps))
         a.degraded = degraded
         a.stale_version = stale_version
+        a.lag_seconds = lag_seconds
         return a

@@ -19,6 +19,13 @@ Three layers, three checks
   compares the tree's leaf arena row against the summary bits (the
   pooled row is a write-once copy; a mismatch means the plane — or the
   summary — was corrupted in memory).
+* :func:`scrub_divergence` — the replication cross-check: checksums
+  every tenant/partition summary on a primary registry against a
+  follower's (same CRC currency as :func:`scrub_store`), reporting
+  partitions whose bits diverge and partitions only one side holds.
+  Partitions the follower simply hasn't applied yet are *lag*, not
+  divergence — they appear under ``behind`` so the caller can separate
+  "catching up" from "corrupted in flight".
 * :func:`scrub_registry` — runs :func:`scrub_store` over every tenant
   and, with ``repair=True``, routes each corrupted tenant through
   **WAL-replay rebuild**: the corrupted partitions are dropped, the
@@ -39,6 +46,7 @@ import numpy as np
 
 __all__ = [
     "checksum_array",
+    "scrub_divergence",
     "scrub_registry",
     "scrub_store",
     "verify_snapshot",
@@ -147,7 +155,7 @@ def _wal_records_for(reg, tenant: str, pids: set[int]) -> dict[int, np.ndarray]:
     if wal is None:
         return {}
     out: dict[int, np.ndarray] = {}
-    for _path, _first, records, _torn in wal._scan():
+    for _path, _first, records, _torn, _epoch in wal._scan():
         for rec in records:
             if rec.tenant is not None and str(rec.tenant) == tenant:
                 if rec.pid in pids:
@@ -200,3 +208,66 @@ def scrub_registry(reg, *, repair: bool = False) -> dict:
             out["dropped"][name] = lost
     reg.last_scrub = out
     return out
+
+
+def _summary_crcs(reg) -> dict[str, dict[int, int]]:
+    """``{tenant: {pid: crc}}`` snapshot of one registry, recomputed from
+    the live summary bits (so in-memory rot on either side shows up as a
+    divergence, not just a replication bug)."""
+    with reg._lock:
+        names = sorted(reg._stores)
+    out: dict[str, dict[int, int]] = {}
+    for name in names:
+        store = reg[name]
+        with store._lock:
+            out[name] = {
+                pid: checksum_array(s.boundaries, s.sizes)
+                for pid, s in store.summaries.items()
+            }
+    return out
+
+
+def scrub_divergence(primary, follower) -> dict:
+    """Cross-check a follower registry's summaries against its primary's.
+
+    Returns ``{"tenants", "checked", "diverged": {name: [pids]},
+    "behind": {name: [pids]}, "extra": {name: [pids]}, "ok"}``:
+
+    * ``diverged`` — partitions both sides hold whose summary CRCs
+      differ.  Replication ships raw WAL records and summarization is
+      bit-deterministic, so any mismatch means corruption (in flight, on
+      the follower's disk, or in either heap) — never a rounding story.
+    * ``behind`` — partitions the primary holds that the follower hasn't
+      applied yet: replication lag, resolved by the next ``tail()``.
+    * ``extra`` — partitions only the follower holds.  Normally empty;
+      after a retention sweep on the primary it is the eviction lag
+      mirror of ``behind``.
+
+    ``ok`` is True iff ``diverged`` is empty — lag alone never fails the
+    scrub (the staleness SLO owns that judgement).
+    """
+    p, f = _summary_crcs(primary), _summary_crcs(follower)
+    diverged: dict[str, list[int]] = {}
+    behind: dict[str, list[int]] = {}
+    extra: dict[str, list[int]] = {}
+    checked = 0
+    for name in sorted(set(p) | set(f)):
+        pc, fc = p.get(name, {}), f.get(name, {})
+        bad = sorted(pid for pid in pc.keys() & fc.keys() if pc[pid] != fc[pid])
+        lag = sorted(pc.keys() - fc.keys())
+        ahead = sorted(fc.keys() - pc.keys())
+        checked += len(pc.keys() & fc.keys())
+        if bad:
+            diverged[name] = bad
+        if lag:
+            behind[name] = lag
+        if ahead:
+            extra[name] = ahead
+    return {
+        "tenants": len(set(p) | set(f)),
+        "checked": checked,
+        "diverged": diverged,
+        "behind": behind,
+        "extra": extra,
+        "ok": not diverged,
+    }

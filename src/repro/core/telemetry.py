@@ -271,8 +271,11 @@ class TelemetryHub:
 
     def health(self) -> dict:
         """Serving-plane health aggregate: breaker/quarantine states,
-        degraded-answer and backpressure counters, WAL/pool stats, last
-        recovery/scrub reports (``TenantRegistry.health``)."""
+        degraded-answer and backpressure counters (including the last
+        backpressure reject's retry-after hint), WAL/pool stats, last
+        recovery/scrub reports, and — when a :class:`Replicator` is
+        attached to the registry — replication ship counters
+        (``TenantRegistry.health``)."""
         return self.registry.health()
 
     def quantile(

@@ -243,6 +243,12 @@ class TenantRegistry(PoolStateView):
         self._stale_listeners: list = []
         self.last_scrub: dict | None = None  # scrub() report (core/scrub.py)
         self.last_salvage: dict | None = None  # recover(salvage=True) report
+        # hot-standby shipper (core/replication.py) — attached via
+        # Replicator.attach(): the async ack path ships through the
+        # pool's on_durable hook, the synchronous ingest path ships in
+        # _wal_log_sync, and health() surfaces its stats.  Runtime
+        # wiring — never persisted.
+        self._replication = None
 
     @property
     def host_row_copies(self) -> int:
@@ -391,6 +397,11 @@ class TenantRegistry(PoolStateView):
             subscriptions = planes[0].stats()
         else:
             subscriptions = [p.stats() for p in planes]
+        # replication stats read outside _lock (the Replicator takes its
+        # own rank-2 lock, which must never nest inside registry._lock)
+        replication = (
+            None if self._replication is None else self._replication.stats()
+        )
         return {
             "status": "degraded" if degraded else "ok",
             "tenants": len(self),
@@ -400,6 +411,8 @@ class TenantRegistry(PoolStateView):
             "pack_fallbacks": self.pack_fallbacks,
             "subscriptions": subscriptions,
             "pool": pool,
+            "backpressure": pool["backpressure"],
+            "replication": replication,
             "wal": self.wal_stats(),
             "last_recovery": self.last_recovery,
             "last_scrub": last_scrub,
@@ -419,6 +432,11 @@ class TenantRegistry(PoolStateView):
             for pid, v in parts.items()
         ]
         self._wal.commit(lsns[-1])
+        if self._replication is not None:
+            # ship-before-ack (core/replication.py): a failed ship fails
+            # the ingest, so the caller never holds an ack the follower
+            # directories don't hold bytes for
+            self._replication.ship()
         return lsns
 
     def wal_stats(self) -> dict | None:

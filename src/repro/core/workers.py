@@ -65,6 +65,22 @@ fsynced at rotation, so a later group commit never needs to revisit it).
 A new process always appends to a **fresh** segment — a torn tail from a
 crash is never appended over.
 
+**Epoch fencing (replication).**  Every fresh segment starts with a
+12-byte header ``b"WEP1" + epoch u64`` stamping the writer's epoch
+(segments without the header — the pre-replication format — read as
+epoch 0).  The epoch is persisted in ``epoch.json`` next to the
+segments, together with an optional ``fenced_at`` mark: ``fence(e)``
+persists the mark and every later ``append`` on a log whose epoch is
+below it raises :class:`~repro.core.resilience.PrimaryFenced` — a
+follower promoted at epoch ``e`` (core/replication.py) permanently
+rejects the deposed primary's late writes, even across a restart of the
+deposed process.  ``segment_view()`` / ``read_segment()`` are the
+shipping surface: the view reports each segment's safe-to-read byte
+length (for the active segment, the flushed record-boundary position),
+and a reader holding a path that ``truncate()`` deleted underneath it
+gets a clean ``None`` ("segment rotated away") instead of a
+FileNotFoundError masquerading as a torn tail.
+
 **Fsync batching (group commit).** ``append`` buffers the record and
 assigns its LSN; ``commit(lsn)`` returns once every append up to ``lsn``
 is durable.  Concurrent committers share one ``os.fsync``: whoever takes
@@ -117,7 +133,12 @@ import numpy as np
 
 from repro.analysis.witness import OrderedLock, OrderedRLock
 from repro.core import faults
-from repro.core.resilience import IngestBackpressure, RetryPolicy, retry_call
+from repro.core.resilience import (
+    IngestBackpressure,
+    PrimaryFenced,
+    RetryPolicy,
+    retry_call,
+)
 
 __all__ = [
     "IngestPool",
@@ -125,12 +146,89 @@ __all__ = [
     "PoolStateView",
     "WalRecord",
     "WriteAheadLog",
+    "atomic_write_json",
+    "read_segment_epoch",
+    "scan_wal_bytes",
 ]
 
 _SENTINEL = object()  # shuts down one pool worker
 
 _WAL_MAGIC = b"WAL1"
 _WAL_PREFIX = struct.Struct("<4sQII")  # magic, lsn, crc32, header_len
+
+_SEG_MAGIC = b"WEP1"
+_SEG_HEADER = struct.Struct("<4sQ")  # magic, writer epoch
+
+
+def read_segment_epoch(data: bytes) -> tuple[int, int]:
+    """``(epoch, header_bytes)`` of a segment's byte prefix.  Segments
+    written before the epoch header existed start directly with a record
+    and read as epoch 0 with a 0-byte header."""
+    if len(data) >= _SEG_HEADER.size:
+        magic, epoch = _SEG_HEADER.unpack_from(data, 0)
+        if magic == _SEG_MAGIC:
+            return int(epoch), _SEG_HEADER.size
+    return 0, 0
+
+
+def scan_wal_bytes(data: bytes, at: int = 0) -> tuple[list["WalRecord"], int]:
+    """Parse complete records from ``data[at:]``; returns ``(records,
+    next_at)`` where ``next_at`` sits just past the last complete record.
+    A short/torn/corrupt suffix is left unconsumed — incremental tailers
+    (the replication follower) re-try from ``next_at`` once more bytes
+    arrive, and recovery counts it as the segment's torn tail."""
+    records: list[WalRecord] = []
+    while at < len(data):
+        if at + _WAL_PREFIX.size > len(data):
+            break  # torn/short prefix
+        magic, lsn, crc, hlen = _WAL_PREFIX.unpack_from(data, at)
+        if magic != _WAL_MAGIC:
+            break
+        body_at = at + _WAL_PREFIX.size
+        if body_at + hlen > len(data):
+            break  # torn/short header
+        try:
+            header = json.loads(data[body_at : body_at + hlen])
+            nbytes = int(header["nbytes"])
+        except (ValueError, KeyError, UnicodeDecodeError):
+            break
+        pay_at = body_at + hlen
+        if pay_at + nbytes > len(data):
+            break  # torn/short payload
+        blob = data[body_at : pay_at + nbytes]
+        if binascii.crc32(blob) != crc:
+            break  # corrupt record
+        values = np.frombuffer(
+            data[pay_at : pay_at + nbytes], dtype=header["dtype"]
+        ).reshape(header["shape"])
+        records.append(
+            WalRecord(
+                lsn=int(lsn),
+                tenant=header["tenant"],
+                pid=int(header["pid"]),
+                values=np.array(values),  # writable copy
+            )
+        )
+        at = pay_at + nbytes
+    return records, at
+
+
+def atomic_write_json(path: str, obj, *, fsync: bool = True) -> None:
+    """Write small JSON state durably: tmp + fsync + rename (+ dir
+    fsync), so a crash leaves either the old file or the new one."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if fsync:
+        dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
 
 
 class WalRecord(NamedTuple):
@@ -161,6 +259,7 @@ class WriteAheadLog:
         segment_bytes: int = 4 << 20,
         fsync: bool = True,
         retry: RetryPolicy | None = None,
+        epoch: int | None = None,
     ):
         self.dir = str(dir)
         self.segment_bytes = int(segment_bytes)
@@ -192,16 +291,36 @@ class WriteAheadLog:
         self.last_fsync_seconds = 0.0
         self.bytes_written = 0
         self.torn_records_dropped = 0
+        # epoch fencing (module docstring): the writer's epoch is stamped
+        # into every fresh segment header; fence() persists a fenced_at
+        # mark that permanently rejects appends from lower-epoch writers
+        disk_epoch, fenced_at = self._load_epoch_state()
+        self.epoch = max(disk_epoch, 0 if epoch is None else int(epoch))
+        self._fence_epoch: int | None = fenced_at
+        if self.epoch != disk_epoch:
+            self._store_epoch_state()
+        # per-tenant cumulative appended mass (value counts) — the ship
+        # manifest's drift currency (core/replication.py): a follower
+        # bounds its staleness by manifest mass − mass it has scanned
+        self._mass: dict = {}
+        # tracked segments found missing on disk by segment_view() —
+        # out-of-band deletion, always an anomaly worth surfacing
+        self.vanished_segments = 0
         # closed segments: path -> (first_lsn, last_valid_lsn)
         self._segments: dict[str, tuple[int, int]] = {}
         self._recovered: list[WalRecord] = []
         first = None
         last = 0
-        for path, first_lsn, records, torn in self._scan():
+        for path, first_lsn, records, torn, seg_epoch in self._scan():
             self._recovered.extend(records)
             self.torn_records_dropped += torn
             last_valid = records[-1].lsn if records else first_lsn - 1
             self._segments[path] = (first_lsn, last_valid)
+            for rec in records:
+                key = rec.tenant
+                self._mass[key] = self._mass.get(key, 0) + int(
+                    rec.values.size
+                )
             if first is None:
                 first = first_lsn
             last = max(last, last_valid)
@@ -244,6 +363,10 @@ class WriteAheadLog:
         crc = binascii.crc32(payload, binascii.crc32(header))
         faults.hit("wal.append", tenant=tenant, pid=pid)
         with self._lock:
+            if self._fence_epoch is not None and self.epoch < self._fence_epoch:
+                # a follower was promoted past us: this log's writer is a
+                # deposed primary and must never extend the history
+                raise PrimaryFenced(self.epoch, self._fence_epoch)
             lsn = self._next_lsn
             if (
                 self._fd is None
@@ -274,6 +397,7 @@ class WriteAheadLog:
             self.appends += 1
             self.bytes_written += len(data)
             self._written_lsn = lsn
+            self._mass[tenant] = self._mass.get(tenant, 0) + int(v.size)
         return lsn
 
     def commit(self, upto: int | None = None) -> None:
@@ -356,7 +480,129 @@ class WriteAheadLog:
                 self._synced_lsn = max(self._synced_lsn, self._written_lsn)
         self._active_path = os.path.join(self.dir, f"wal-{first_lsn:020d}.log")
         self._fd = open(self._active_path, "wb")
+        # stamp the writer's epoch (fencing: a promoted follower's scan
+        # and the dir transport reject lower-epoch history)
+        self._fd.write(_SEG_HEADER.pack(_SEG_MAGIC, self.epoch))
+        self._fd.flush()
         self._segments[self._active_path] = (first_lsn, first_lsn - 1)
+
+    # ------------------------------------------------------ epoch fencing
+    def _epoch_path(self) -> str:
+        return os.path.join(self.dir, "epoch.json")
+
+    def _load_epoch_state(self) -> tuple[int, int | None]:
+        try:
+            with open(self._epoch_path()) as f:
+                st = json.load(f)
+            fenced = st.get("fenced_at")
+            return int(st.get("epoch", 0)), (
+                None if fenced is None else int(fenced)
+            )
+        except (FileNotFoundError, ValueError, OSError):
+            return 0, None
+
+    def _store_epoch_state(self) -> None:
+        atomic_write_json(
+            self._epoch_path(),
+            {"epoch": self.epoch, "fenced_at": self._fence_epoch},
+            fsync=self.fsync_enabled,
+        )
+
+    def fence(self, min_epoch: int) -> None:
+        """Reject every future append unless this log's epoch is ≥
+        ``min_epoch`` (:class:`PrimaryFenced`).  Persisted: a deposed
+        primary that restarts and reopens its log stays fenced."""
+        min_epoch = int(min_epoch)
+        with self._lock:
+            if self._fence_epoch is None or min_epoch > self._fence_epoch:
+                self._fence_epoch = min_epoch
+                self._store_epoch_state()
+
+    # ------------------------------------------------------- ship surface
+    def segment_view(self) -> list[dict]:
+        """Snapshot of the live segments for a tail reader (the
+        replication shipper), LSN order.  ``size`` is the byte length
+        that is safe to read now: for the active segment the flushed
+        position — between appends that is always a record boundary, so
+        a bounded read never sees a half-written record (a failed
+        rollback leaves a torn tail, which the follower's incremental
+        scan simply refuses to consume until it is overwritten)."""
+        with self._lock:
+            out = []
+            for path, (first, _last) in sorted(
+                self._segments.items(), key=lambda kv: kv[1][0]
+            ):
+                active = path == self._active_path
+                if active and self._fd is not None:
+                    size = self._fd.tell()
+                else:
+                    try:
+                        size = os.path.getsize(path)
+                    except FileNotFoundError:
+                        # vanished out-of-band (operator rm, not our
+                        # truncate — that untracks first): count it so
+                        # stats() surfaces the anomaly, and skip
+                        self.vanished_segments += 1
+                        continue
+                out.append(
+                    {
+                        "path": path,
+                        "first_lsn": first,
+                        "size": int(size),
+                        "active": active,
+                    }
+                )
+            return out
+
+    def read_segment(
+        self, path: str, offset: int = 0, length: int | None = None
+    ) -> bytes | None:
+        """Read ``length`` bytes of a segment from ``offset`` for a tail
+        reader.  Returns ``None`` — the clean "segment rotated away"
+        signal — when the file vanished because :meth:`truncate` deleted
+        it between the reader's :meth:`segment_view` listing and this
+        read.  (Before this contract existed the race surfaced as a
+        FileNotFoundError indistinguishable from a torn-tail
+        misdiagnosis.)  A missing file the log still *tracks* is a real
+        I/O fault and raises."""
+        try:
+            with open(path, "rb") as f:
+                if offset:
+                    f.seek(int(offset))
+                return f.read(-1 if length is None else int(length))
+        except FileNotFoundError:
+            with self._lock:
+                if path in self._segments:
+                    raise  # tracked but unreadable: not a rotation
+            return None
+
+    def read_active(self, offset: int) -> tuple[str, bytes, int] | None:
+        """``(path, data, size)`` of the active segment from ``offset``
+        to its current flushed boundary — measured and read atomically
+        under the log lock, so a concurrent append *rollback* (which
+        shrinks the file back to the pre-append boundary) can never
+        interleave between the measure and the read and hand the shipper
+        bytes the primary just disowned.  ``size < offset`` tells the
+        shipper to truncate its copy back to ``size``.  ``None`` when no
+        segment is active yet."""
+        offset = int(offset)
+        with self._lock:
+            if self._fd is None or self._active_path is None:
+                return None
+            path = self._active_path
+            size = self._fd.tell()
+            if size <= offset:
+                return path, b"", size
+            with open(path, "rb") as f:
+                f.seek(offset)
+                data = f.read(size - offset)
+            return path, data, size
+
+    def mass_by_tenant(self) -> dict:
+        """Cumulative appended mass (value counts) per tenant route for
+        the ship manifest (includes records recovered at open)."""
+        with self._lock:
+            return dict(self._mass)
 
     # ----------------------------------------------------- applied prefix
     def mark_applied(self, lsns) -> None:
@@ -402,9 +648,12 @@ class WriteAheadLog:
         return list(self._recovered)
 
     def _scan(self):
-        """Yield ``(path, first_lsn, [WalRecord], torn_count)`` per segment
-        in LSN order, stopping each segment at its first invalid record
-        (torn tail ⇒ the ack for that record never returned)."""
+        """Yield ``(path, first_lsn, [WalRecord], torn_count, epoch)``
+        per segment in LSN order, stopping each segment at its first
+        invalid record (torn tail ⇒ the ack for that record never
+        returned).  A segment deleted by a concurrent :meth:`truncate`
+        between the listing and the read is skipped — it rotated away
+        with all of its records applied, which is not a torn tail."""
         try:
             names = sorted(
                 n
@@ -419,48 +668,24 @@ class WriteAheadLog:
                 first_lsn = int(name[len("wal-") : -len(".log")])
             except ValueError:
                 continue  # not a segment file
-            records, torn = self._scan_segment(path)
-            yield path, first_lsn, records, torn
+            scanned = self._scan_segment(path)
+            if scanned is None:
+                continue  # rotated away under us
+            records, torn, epoch = scanned
+            yield path, first_lsn, records, torn, epoch
 
     @staticmethod
-    def _scan_segment(path: str) -> tuple[list[WalRecord], int]:
-        records: list[WalRecord] = []
-        with open(path, "rb") as f:
-            data = f.read()
-        at = 0
-        while at < len(data):
-            if at + _WAL_PREFIX.size > len(data):
-                return records, 1  # torn prefix
-            magic, lsn, crc, hlen = _WAL_PREFIX.unpack_from(data, at)
-            if magic != _WAL_MAGIC:
-                return records, 1
-            body_at = at + _WAL_PREFIX.size
-            if body_at + hlen > len(data):
-                return records, 1  # torn header
-            try:
-                header = json.loads(data[body_at : body_at + hlen])
-                nbytes = int(header["nbytes"])
-            except (ValueError, KeyError, UnicodeDecodeError):
-                return records, 1
-            pay_at = body_at + hlen
-            if pay_at + nbytes > len(data):
-                return records, 1  # torn payload
-            blob = data[body_at : pay_at + nbytes]
-            if binascii.crc32(blob) != crc:
-                return records, 1  # corrupt record
-            values = np.frombuffer(
-                data[pay_at : pay_at + nbytes], dtype=header["dtype"]
-            ).reshape(header["shape"])
-            records.append(
-                WalRecord(
-                    lsn=int(lsn),
-                    tenant=header["tenant"],
-                    pid=int(header["pid"]),
-                    values=np.array(values),  # writable copy
-                )
-            )
-            at = pay_at + nbytes
-        return records, 0
+    def _scan_segment(path: str) -> tuple[list[WalRecord], int, int] | None:
+        """``(records, torn_count, epoch)`` of one segment file, or
+        ``None`` when the file vanished (truncated away concurrently)."""
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            return None
+        epoch, at = read_segment_epoch(data)
+        records, end = scan_wal_bytes(data, at)
+        return records, (0 if end >= len(data) else 1), epoch
 
     # -------------------------------------------------------- truncation
     def truncate(self, stable: int | None = None) -> list[str]:
@@ -515,6 +740,9 @@ class WriteAheadLog:
                 "stable_lsn": self._stable,
                 "records_recovered": len(self._recovered),
                 "torn_records_dropped": self.torn_records_dropped,
+                "epoch": self.epoch,
+                "fence_epoch": self._fence_epoch,
+                "vanished_segments": self.vanished_segments,
             }
 
     def close(self) -> None:
@@ -634,6 +862,13 @@ class IngestPool:
         self.apply_retries = 0
         self.wal_append_retries = 0
         self.backpressure_rejects = 0
+        # most recent backpressure rejection (reason/retry_after/at) —
+        # health()["backpressure"] mirrors this so dashboards see pacing
+        self.last_backpressure: dict | None = None
+        # replication hook: called as on_durable() after a submit's WAL
+        # commit lands (no pool locks held) — the Replicator ships here so
+        # an ack implies the record reached every follower directory
+        self.on_durable: Callable[[], None] | None = None
 
     # --------------------------------------------------------------- submit
     def submit(self, item, route: int = 0) -> None:
@@ -666,13 +901,18 @@ class IngestPool:
                         lambda: self.wal.append(*self.wal_record(item)),
                         self.retry,
                         wait=self._closing.wait,
+                        # epoch fencing is permanent, not a sick disk:
+                        # never retried, never wrapped in backpressure
+                        retryable=lambda e: not isinstance(e, PrimaryFenced),
                         on_retry=self._count_append_retry,
                     )
+                except PrimaryFenced:
+                    raise
                 except BaseException as e:
-                    self.backpressure_rejects += 1
-                    raise IngestBackpressure(
+                    raise self._backpressure(
+                        "append",
                         f"WAL append failed after "
-                        f"{self.retry.attempts} attempt(s): {e!r}"
+                        f"{self.retry.attempts} attempt(s): {e!r}",
                     ) from e
             with self.cv:
                 self.pending += 1
@@ -681,11 +921,27 @@ class IngestPool:
             try:
                 self.wal.commit(lsn)  # durable before the ack
             except BaseException as e:
-                self.backpressure_rejects += 1
-                raise IngestBackpressure(
+                raise self._backpressure(
+                    "fsync",
                     "WAL fsync failed after retries — the partition was "
-                    f"accepted in-memory but is NOT durable: {e!r}"
+                    f"accepted in-memory but is NOT durable: {e!r}",
                 ) from e
+            if self.on_durable is not None:
+                # ship-before-ack: a raising shipper fails the submit, so
+                # the producer never sees an ack the followers don't hold
+                self.on_durable()
+
+    def _backpressure(self, reason: str, message: str) -> IngestBackpressure:
+        """Count + remember a backpressure rejection and build the
+        exception with its pacing hint (satellite: retry-after)."""
+        retry_after = self.retry.retry_after()
+        self.backpressure_rejects += 1
+        self.last_backpressure = {
+            "reason": reason,
+            "retry_after": retry_after,
+            "at": time.time(),
+        }
+        return IngestBackpressure(message, retry_after=retry_after)
 
     def _count_append_retry(self, attempt: int, exc: BaseException) -> None:
         self.wal_append_retries += 1
@@ -855,4 +1111,5 @@ class IngestPool:
             "apply_retries": self.apply_retries,
             "wal_append_retries": self.wal_append_retries,
             "backpressure_rejects": self.backpressure_rejects,
+            "backpressure": self.last_backpressure,
         }

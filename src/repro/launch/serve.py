@@ -5,6 +5,12 @@ request's generation latency is recorded as a durable histogram window,
 and a standing subscription on the latency metric demonstrates the push
 plane — the pushed update's p-quantile answer and eps are printed after
 the batch, then the sidecar checkpoints and closes.
+
+``--replicate-to DIR`` additionally ships the sidecar's WAL to a
+hot-standby directory (core/replication.py): after the batch, a
+replica-role service is opened over the shipped log and its
+bounded-staleness answer (eps widened by the lag-drift bound) is printed
+next to the primary's, demonstrating zero-loss WAL shipping end to end.
 """
 from __future__ import annotations
 
@@ -32,7 +38,15 @@ def main() -> None:
         help="attach a HistogramService sidecar recording per-request "
         "generation latency, with a standing push subscription",
     )
+    ap.add_argument(
+        "--replicate-to", default=None,
+        help="hot-standby directory: ship the sidecar's WAL there and "
+        "print a replica-role bounded-staleness answer after the batch "
+        "(requires --metrics-dir)",
+    )
     args = ap.parse_args()
+    if args.replicate_to is not None and args.metrics_dir is None:
+        ap.error("--replicate-to requires --metrics-dir")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -48,7 +62,10 @@ def main() -> None:
     )
     svc = sub = None
     if args.metrics_dir is not None:
-        svc = HistogramService(args.metrics_dir, num_buckets=64)
+        replicate_to = (args.replicate_to,) if args.replicate_to else ()
+        svc = HistogramService(
+            args.metrics_dir, num_buckets=64, replicate_to=replicate_to
+        )
         # standing dashboard panel: p-latency over the whole run so far
         sub = svc.subscribe("gen_latency_ms", 0, 1 << 20, beta=64)
 
@@ -83,6 +100,22 @@ def main() -> None:
             f"delivered={stats['updates_delivered']} "
             f"dispatches={stats['eval_batches']}"
         )
+        if args.replicate_to is not None:
+            replica = HistogramService(
+                args.replicate_to, role="replica", num_buckets=64
+            )
+            replica.sync()
+            ans = replica.query_many(
+                [("gen_latency_ms", 0, 1 << 20)], beta=64
+            )[0]
+            repl = svc.health()["replication"]
+            print(
+                f"replica answer: eps={ans.eps:g} degraded={ans.degraded} "
+                f"lag_s={ans.lag_seconds} "
+                f"(primary shipped_lsn={repl['shipped_lsn']} "
+                f"ships={repl['ships']})"
+            )
+            replica.close()
         svc.checkpoint()
         svc.close()
 

@@ -24,6 +24,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.histogram import Histogram, build_exact, merge_list, quantile
+from repro.core.replication import DirTransport, Follower, Replicator
+from repro.core.resilience import NotPrimary
 from repro.core.tenant import TenantRegistry
 from repro.models.model import decode_step, forward_hidden, init_cache, prefill
 from repro.serve.subscriptions import Subscription, SubscriptionPlane
@@ -148,13 +150,54 @@ class HistogramService:
     >>> svc.record("latency_ms", window_id, samples)
     >>> svc.quantile("latency_ms", lo, hi, 0.95)
     >>> svc.checkpoint()        # atomic snapshot + WAL truncation
+
+    **Roles (core/replication.py).**  ``role="primary"`` (default) with
+    ``replicate_to=[dir_or_transport, ...]`` ships every WAL byte to
+    those followers *before the ingest ack* — zero acked loss across a
+    primary kill.  ``role="replica"`` serves reads from the shipped
+    directory instead: ``record``/``record_async`` raise
+    :class:`~repro.core.resilience.NotPrimary`, ``sync()`` tails new
+    shipped bytes, ``query_many`` answers with ``eps`` honestly widened
+    by the replication-lag drift bound and ``degraded=True`` past the
+    ``staleness_slo``, and ``promote()`` is the failover: fence the old
+    primary, drain, adopt the shipped log, flip the role to primary.
     """
 
-    def __init__(self, data_dir: str, *, salvage: bool = True, **registry_kwargs):
+    def __init__(
+        self,
+        data_dir: str,
+        *,
+        salvage: bool = True,
+        role: str = "primary",
+        replicate_to=(),
+        staleness_slo: float | None = None,
+        **registry_kwargs,
+    ):
+        if role not in ("primary", "replica"):
+            raise ValueError(f"role must be primary|replica, got {role!r}")
         self.data_dir = str(data_dir)
         os.makedirs(self.data_dir, exist_ok=True)
         self.snapshot_path = os.path.join(self.data_dir, "registry.npz")
         self.wal_dir = os.path.join(self.data_dir, "wal")
+        self.role = role
+        self.staleness_slo = staleness_slo
+        self.replicator: Replicator | None = None
+        self.follower: Follower | None = None
+        if role == "replica":
+            # the wal/ subdirectory is the *shipped* directory: startup
+            # "recovery" is simply one tail pass over whatever the
+            # primary has shipped so far
+            self.follower = Follower(
+                self.wal_dir,
+                staleness_slo=staleness_slo,
+                **registry_kwargs,
+            )
+            self.registry = self.follower.registry
+            self.follower.tail()
+            self.recovery = None
+            self.salvage = None
+            self._plane = None
+            return
         # salvage=True (the service default): a snapshot whose payload
         # checksums fail is moved aside and the state rebuilt from the
         # WAL alone — a serving sidecar must start, not crash-loop on a
@@ -170,16 +213,37 @@ class HistogramService:
         self.salvage = self.registry.last_salvage
         # standing-query plane, created on first subscribe()
         self._plane: SubscriptionPlane | None = None
+        if replicate_to:
+            # a string/PathLike names a standby *data_dir*: ship into its
+            # wal/ subdirectory so the standby has the exact layout a
+            # replica-role (and later promoted-primary) service expects
+            transports = [
+                DirTransport(os.path.join(str(t), "wal"))
+                if isinstance(t, (str, os.PathLike)) else t
+                for t in replicate_to
+            ]
+            self.replicator = Replicator(
+                self.registry._wal, transports
+            ).attach(self.registry)
+            # followers start from the full shipped history: push
+            # everything the log already holds before the first ack
+            self.replicator.ship()
 
     # ---- ingest plane ----------------------------------------------------
     def record(self, metric: str, window_id: int, values) -> None:
         """Durably ingest one window of raw samples (fsynced before
-        return; see the WAL design note in core/workers.py)."""
+        return; see the WAL design note in core/workers.py).  With
+        replication attached the record is shipped to every follower
+        before this returns."""
+        if self.role != "primary":
+            raise NotPrimary(f"record() on a {self.role}-role service")
         self.registry.ingest(metric, window_id, values)
 
     def record_async(self, metric: str, window_id: int, values) -> None:
-        """Durable enqueue: the WAL append+fsync happens before this
-        returns, summarization happens on the worker pool."""
+        """Durable enqueue: the WAL append+fsync (and replication ship)
+        happens before this returns, summarization on the worker pool."""
+        if self.role != "primary":
+            raise NotPrimary(f"record_async() on a {self.role}-role service")
         self.registry.ingest_async(metric, window_id, values)
 
     def flush(self) -> None:
@@ -200,10 +264,26 @@ class HistogramService:
         ``degraded_ok=True``: a failed merge dispatch (or a missed
         ``deadline``) serves last-known-good answers flagged
         ``degraded=True`` with honestly widened eps instead of a 500 —
-        check ``ans.degraded`` (plain fresh answers read False)."""
+        check ``ans.degraded`` (plain fresh answers read False).
+
+        On a replica the batch is served from the follower's registry
+        with ``eps`` widened by the lag-drift bound and ``lag_seconds``
+        attached; ``degraded=True`` marks any answer that cannot be
+        proven to bit-match the primary's acked state."""
+        if self.follower is not None and self.role == "replica":
+            return self.follower.query_many(
+                panels, beta, strict=strict, deadline=deadline
+            )
         return self.registry.query_many(
             panels, beta, strict=strict, degraded_ok=True, deadline=deadline
         )
+
+    def sync(self) -> int:
+        """Replica: apply newly shipped WAL bytes (one tail pass);
+        returns records applied.  No-op (0) on a primary."""
+        if self.follower is None or self.role != "replica":
+            return 0
+        return self.follower.tail()
 
     def metrics(self) -> list[str]:
         return self.registry.names()
@@ -240,11 +320,34 @@ class HistogramService:
     def unsubscribe(self, sub: Subscription) -> None:
         self.subscriptions.unsubscribe(sub)
 
+    # ---- failover plane --------------------------------------------------
+    def promote(self, *, fence=None, epoch: int | None = None,
+                receivers=()) -> None:
+        """Replica → primary failover (core/replication.py): fence the
+        deposed primary (``fence`` = its ``Replicator.fence`` /
+        ``WriteAheadLog.fence``, best-effort — a dead primary is fine),
+        drain the shipped suffix, adopt the shipped log as this
+        service's WAL, re-attach the subscription plane, flip the role.
+        After this returns, ``record()`` works and ``query_many`` serves
+        un-widened primary answers."""
+        if self.follower is None or self.role != "replica":
+            raise NotPrimary("promote() requires a replica-role service")
+        planes = [self._plane] if self._plane is not None else []
+        self.follower.promote(
+            fence=fence, epoch=epoch, planes=planes, receivers=receivers
+        )
+        self.role = "primary"
+
     # ---- health plane ----------------------------------------------------
     def health(self) -> dict:
         """Serving-plane health aggregate (breakers, quarantine, WAL,
-        degraded counters, last recovery/scrub) — the /healthz payload."""
-        return self.registry.health()
+        degraded counters, last recovery/scrub, replication lag/epoch/
+        role) — the /healthz payload."""
+        out = self.registry.health()
+        out["role"] = self.role
+        if self.follower is not None:
+            out["replication"] = self.follower.stats()
+        return out
 
     def scrub(self, *, repair: bool = False) -> dict:
         """On-demand integrity scrub of every tenant (core/scrub.py);

@@ -307,6 +307,43 @@ class SubscriptionPlane:
             while self._completed < target and not self._closing.is_set():
                 self.cv.wait()
 
+    def reattach(self, new_registry) -> None:
+        """Re-home this plane onto another registry — the failover leg of
+        ``Follower.promote()`` (core/replication.py): live subscriptions
+        keep their keys and queues, evaluation continues against the
+        promoted registry's stores, and every subscribed tenant is marked
+        stale so subscribers receive a fresh post-failover answer (their
+        ``version`` counters may regress; ``seq`` stays monotonic).
+
+        The new registry's tenants are created eagerly *before* the swap
+        (the evaluation worker assumes subscribed tenants exist), and the
+        listener hookup moves atomically under the plane condition.
+        """
+        with self.cv:
+            names = list(self._tenant_refs)
+        for name in names:
+            new_registry.tenant(name)  # outside cv: registry._lock ranks above
+        old = self.registry
+        with self.cv:
+            if self._closing.is_set():
+                return
+            self.registry = new_registry
+            # force a full re-evaluation: versions on the new registry are
+            # not comparable to the cached ones
+            self._seen.clear()
+            now = time.monotonic()
+            for name in names:
+                self._marks.setdefault(name, now)
+            if names:
+                self._epoch += 1
+                self._ensure_worker()
+                self.cv.notify_all()
+        try:
+            old._stale_listeners.remove(self)
+        except ValueError:
+            pass
+        new_registry._stale_listeners.append(self)
+
     def close(self) -> None:
         """Stop the worker (finishing any pending pass), close every
         subscription, detach from the registry.  Idempotent."""

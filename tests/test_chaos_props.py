@@ -22,7 +22,14 @@ process (drops the registry without close) and recovers.  Invariants:
   ledger balances (enqueued = drained + coalesced, i.e. zero
   *uncounted* loss), and once faults disarm every coalesce subscriber's
   final pushed answer is non-degraded, current-version, and bit-matches
-  a fault-free replica fed the same partitions.
+  a fault-free replica fed the same partitions;
+* **replication** (core/replication.py) — under armed ``repl.ship`` /
+  ``repl.tail`` / ``repl.apply`` (plus the WAL faults), every
+  non-degraded replica answer bit-matches a fault-free replica fed the
+  same partitions, the reported mass-lag bounds the replica's true gap
+  to the acked set, and after ``kill -9`` of the primary the promoted
+  follower holds every acked record (zero acked loss) with the deposed
+  primary fenced.
 
 Runs in the fast lane: few cases, tiny arrays, one jit shape.
 """
@@ -36,6 +43,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IngestBackpressure, TenantRegistry, faults
+from repro.core.replication import DirTransport, Follower, Replicator
+from repro.core.resilience import PrimaryFenced
 from repro.serve.subscriptions import SubscriptionPlane
 
 settings.register_profile("chaos", deadline=None, max_examples=6)
@@ -312,6 +321,161 @@ def test_chaos_no_acked_loss_no_hangs_honest_answers(case):
             _bit_match(rec, ref, t, min(ids), max(ids))
             ref.close()
         rec.close()  # must return promptly — no hung close
+    finally:
+        faults.reset()
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def _arm_repl_faults(stack, seed):
+    stack.enter_context(
+        faults.inject(
+            "wal.append", exc=OSError(28, "ENOSPC"), prob=0.06, seed=seed
+        )
+    )
+    stack.enter_context(
+        faults.inject(
+            "wal.fsync", exc=OSError(5, "EIO"), prob=0.06, seed=seed + 1
+        )
+    )
+    stack.enter_context(
+        faults.inject("repl.ship", prob=0.10, seed=seed + 2)
+    )
+    stack.enter_context(
+        faults.inject("repl.tail", prob=0.15, seed=seed + 3)
+    )
+    stack.enter_context(
+        faults.inject("repl.apply", prob=0.15, seed=seed + 4)
+    )
+
+
+@given(chaos_case())
+def test_chaos_replication_bounded_staleness_and_zero_loss_failover(case):
+    seed, n_tenants, n_ops = case
+    rng = np.random.default_rng(seed)
+    tenants = [f"t{i}" for i in range(n_tenants)]
+    base = tempfile.mkdtemp(prefix="chaos-repl-")
+    try:
+        reg = TenantRegistry(
+            num_buckets=T, wal_dir=os.path.join(base, "pwal")
+        )
+        standby = os.path.join(base, "standby")
+        repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+        follower = Follower(standby, num_buckets=T)
+        oracle: dict[tuple[str, int], np.ndarray] = {}
+        must: set[tuple[str, int]] = set()  # acked ⇒ shipped ⇒ survives
+        next_pid = {t: 0 for t in tenants}
+        observed = []  # non-degraded replica answers served under chaos
+
+        def draw_item():
+            t = tenants[int(rng.integers(0, n_tenants))]
+            next_pid[t] += int(rng.integers(1, 3))
+            v = rng.normal(size=N_VALUES).astype(np.float32)
+            oracle[(t, next_pid[t])] = v
+            return t, next_pid[t], v
+
+        with contextlib.ExitStack() as stack:
+            _arm_repl_faults(stack, seed)
+            for _ in range(n_ops):
+                op = rng.integers(0, 10)
+                if op < 4:  # sync ingest: ack ⇒ durable AND shipped
+                    t, pid, v = draw_item()
+                    try:
+                        reg.ingest(t, pid, v)
+                        must.add((t, pid))
+                    except (faults.FaultError, OSError):
+                        pass  # append OR ship failed: no ack issued
+                elif op < 6:  # async ingest: ack ⇒ durable AND shipped
+                    t, pid, v = draw_item()
+                    try:
+                        reg.ingest_async(t, pid, v)
+                        must.add((t, pid))
+                    except (IngestBackpressure, faults.FaultError):
+                        pass
+                elif op < 8:  # follower tails under fire
+                    try:
+                        follower.tail()
+                    except faults.FaultError:
+                        pass  # no scan state committed (pinned in
+                        # tests/test_failpoint_sites.py)
+                else:  # replica_query: bounded-staleness serving
+                    t = tenants[int(rng.integers(0, n_tenants))]
+                    hi = next_pid[t] + 1
+                    [ans] = follower.query_many([(t, 0, hi)], BETA)
+                    # the reported mass-lag must bound the true gap to
+                    # the acked set: every acked record the follower
+                    # hasn't applied is un-scanned mass
+                    drift = follower.drift_by_tenant()
+                    have = (
+                        set(follower.registry[t].ids())
+                        if t in follower.registry
+                        else set()
+                    )
+                    gap = sum(
+                        N_VALUES
+                        for (mt, pid) in must
+                        if mt == t and pid not in have
+                    )
+                    if drift is None:
+                        assert ans.degraded  # unknown lag: never "fresh"
+                    else:
+                        assert drift.get(t, 0) >= gap
+                        if gap > 0:
+                            assert ans.degraded
+                    if not ans.degraded:
+                        observed.append((t, sorted(have), 0, hi, ans))
+
+        # faults disarmed: every non-degraded replica answer bit-matches
+        # a fault-free replica fed the partitions the follower held
+        for t, ids, lo, hi, (hist, eps) in observed:
+            members = [p for p in ids if lo <= p <= hi]
+            ref = TenantRegistry(num_buckets=T)
+            if members:
+                ref.ingest_many(t, {p: oracle[(t, p)] for p in members})
+            [(wh, we)] = ref.query_many([(t, lo, hi)], BETA, strict=False)
+            assert (hist is None) == (wh is None)
+            if hist is not None:
+                assert np.array_equal(
+                    np.asarray(hist.boundaries), np.asarray(wh.boundaries)
+                )
+                assert np.array_equal(
+                    np.asarray(hist.sizes), np.asarray(wh.sizes)
+                )
+                assert eps == we
+            ref.close()
+
+        # kill -9 the primary (no close, no checkpoint) and fail over
+        old_wal = reg._wal
+        fence = repl.fence
+        del reg
+        promoted = follower.promote(fence=fence)
+        # zero acked loss: the promoted follower holds every acked record
+        for t, pid in sorted(must):
+            assert t in promoted, f"acked tenant {t} lost in failover"
+            assert (
+                pid in promoted[t].summaries
+            ), f"acked ({t}, {pid}) lost in failover"
+        # failover fidelity: every promoted partition (acked or the
+        # harmless shipped-but-unacked superset) bit-matches a replica
+        for t in promoted.names():
+            ids = promoted[t].ids()
+            assert {(t, pid) for pid in ids} <= set(oracle)
+            if not ids:
+                continue
+            ref = TenantRegistry(num_buckets=T)
+            ref.ingest_many(t, {pid: oracle[(t, pid)] for pid in ids})
+            _bit_match(promoted, ref, t, min(ids), max(ids))
+            ref.close()
+        # the deposed primary is fenced at its own log, and the promoted
+        # registry ingests at the new epoch
+        with pytest.raises(PrimaryFenced):
+            old_wal.append(
+                "t0", 10**6, np.zeros(N_VALUES, dtype=np.float32)
+            )
+        t, pid, v = draw_item()
+        promoted.ingest(t, pid, v)
+        assert pid in promoted[t].summaries
+        old_wal.close()
+        follower.close()  # closes the promoted registry too
     finally:
         faults.reset()
         shutil.rmtree(base, ignore_errors=True)

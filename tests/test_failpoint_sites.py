@@ -1,7 +1,7 @@
 """Every declared failpoint is injectable — exercising the sites that
 had no test references before the failpoint lint rule existed
 (``scripts/analyze.py`` now fails CI for any ``faults.SITES`` member no
-test touches: arena.*, snapshot.save/load, checkpoint.*).
+test touches: arena.*, snapshot.save/load, checkpoint.*, repl.*).
 
 Each test arms the site, drives the real call path through it, and
 checks both the fault delivery and that disarming restores service —
@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import faults
 from repro.core.arena import NodeArena
+from repro.core.replication import DirTransport, Follower, Replicator
 from repro.core.stream import HistogramStore
 from repro.core.tenant import TenantRegistry
 from repro.serve.subscriptions import SubscriptionPlane
@@ -142,6 +143,82 @@ def test_subs_deliver_faultable():
     finally:
         plane.close()
         reg.close()
+
+
+def _repl_pair(tmp_path):
+    reg = TenantRegistry(num_buckets=8, wal_dir=str(tmp_path / "pwal"))
+    standby = str(tmp_path / "standby")
+    repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    return reg, repl, standby
+
+
+def test_repl_ship_faultable(tmp_path):
+    """An armed ``repl.ship`` fails the ingest *ack* (ship-before-ack —
+    the caller must not believe the record replicated); disarming lets
+    the re-ship converge the follower from the tracked offsets."""
+    reg, repl, standby = _repl_pair(tmp_path)
+    rng = np.random.default_rng(0)
+    with faults.inject("repl.ship"):
+        with pytest.raises(faults.FaultError):
+            reg.ingest("m", 0, rng.normal(size=64).astype(np.float32))
+        assert repl.stats()["ship_failures"] == 0  # faulted pre-lock
+    # healed: the next ingest ships its record AND the stranded one
+    reg.ingest("m", 1, rng.normal(size=64).astype(np.float32))
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 2
+    f.close()
+    reg.close()
+
+
+def test_repl_tail_faultable(tmp_path):
+    reg, _repl, standby = _repl_pair(tmp_path)
+    rng = np.random.default_rng(1)
+    reg.ingest("m", 0, rng.normal(size=64).astype(np.float32))
+    f = Follower(standby, num_buckets=8)
+    with faults.inject("repl.tail"):
+        with pytest.raises(faults.FaultError):
+            f.tail()
+    assert f.stats()["records_applied"] == 0  # nothing half-applied
+    assert f.tail() == 1  # healed on disarm
+    f.close()
+    reg.close()
+
+
+def test_repl_apply_faultable_idempotent_rescan(tmp_path):
+    """A fault mid-apply commits NO scan state: the next tail re-scans
+    the same bytes and the pid dedup keeps the replay exactly-once."""
+    reg, _repl, standby = _repl_pair(tmp_path)
+    rng = np.random.default_rng(2)
+    for pid in range(3):
+        reg.ingest("m", pid, rng.normal(size=64).astype(np.float32))
+    f = Follower(standby, num_buckets=8)
+    with faults.inject("repl.apply"):
+        with pytest.raises(faults.FaultError):
+            f.tail()
+    st = f.stats()
+    assert st["apply_failures"] == 1 and st["applied_lsn"] == 0
+    assert f.tail() == 3  # full re-scan, every record exactly once
+    assert f.lag()["records"] == 0
+    f.close()
+    reg.close()
+
+
+def test_repl_promote_faultable(tmp_path):
+    reg, repl, standby = _repl_pair(tmp_path)
+    rng = np.random.default_rng(3)
+    reg.ingest("m", 0, rng.normal(size=64).astype(np.float32))
+    f = Follower(standby, num_buckets=8)
+    f.tail()
+    with faults.inject("repl.promote"):
+        with pytest.raises(faults.FaultError):
+            f.promote(fence=repl.fence)
+    assert f.promoted_epoch is None  # faulted before any state change
+    reg.ingest("m", 1, rng.normal(size=64).astype(np.float32))  # not fenced
+    promoted = f.promote(fence=repl.fence)  # healed on disarm
+    assert f.promoted_epoch == 1
+    assert promoted["m"].version > 0
+    f.close()
+    reg.close()
 
 
 def test_checkpoint_save_and_restore_faultable(tmp_path):

@@ -1,0 +1,417 @@
+"""Hot-standby replication (core/replication.py): WAL shipping over both
+in-tree transports, bounded-staleness replica reads, epoch fencing and
+zero-loss promote — plus the tail-reader vs ``truncate()`` race contract
+(deterministic interleavings, no sleeps).
+"""
+import json
+import os
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.replication import (
+    DirTransport,
+    Follower,
+    Replicator,
+    StreamReceiver,
+    StreamTransport,
+    manifest_path,
+)
+from repro.core.resilience import (
+    IngestBackpressure,
+    NotPrimary,
+    PrimaryFenced,
+    RetryPolicy,
+)
+from repro.core.scrub import scrub_divergence
+from repro.core.tenant import TenantRegistry
+from repro.core.workers import WriteAheadLog, read_segment_epoch
+from repro.serve import HistogramService
+
+
+def _vals(rng, n=96):
+    return rng.normal(size=n).astype(np.float32)
+
+
+def _primary(tmp_path, name="pwal", **kw):
+    return TenantRegistry(num_buckets=8, wal_dir=str(tmp_path / name), **kw)
+
+
+def _bitmatch(a, b, queries, beta=16):
+    """Assert two registries answer ``queries`` identically, bit for bit."""
+    ra = a.query_many(queries, beta, strict=False)
+    rb = b.query_many(queries, beta, strict=False)
+    for (ha, ea), (hb, eb) in zip(ra, rb):
+        assert ea == eb
+        assert (ha is None) == (hb is None)
+        if ha is not None:
+            np.testing.assert_array_equal(
+                np.asarray(ha.boundaries), np.asarray(hb.boundaries)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ha.sizes), np.asarray(hb.sizes)
+            )
+
+
+# --------------------------------------------------------------- transports
+def test_dir_ship_tail_bitmatch(tmp_path):
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(0)
+    for pid in range(4):
+        reg.ingest("t", pid, _vals(rng))  # sync path ships per ingest
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 4
+    _bitmatch(reg, f.registry, [("t", 0, 7)])
+    lag = f.lag()
+    assert lag["known"] and lag["records"] == 0 and lag["mass"] == 0
+    st = repl.stats()
+    assert st["shipped_lsn"] == 4 and st["ship_failures"] == 0
+    f.close()
+    reg.close()
+
+
+def test_stream_ship_tail_bitmatch_and_fence(tmp_path):
+    standby = str(tmp_path / "standby")
+    a, b = socket.socketpair()
+    recv = StreamReceiver(b, standby)
+    reg = _primary(tmp_path)
+    Replicator(reg._wal, [StreamTransport(a)]).attach(reg)
+    rng = np.random.default_rng(1)
+    reg.ingest("t", 0, _vals(rng))
+    reg.ingest_async("t", 1, _vals(rng))  # async path ships via on_durable
+    reg.flush()
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 2
+    _bitmatch(reg, f.registry, [("t", 0, 3)])
+    # a promoted follower directory rejects the deposed primary's frames
+    # at the receiver; the rejection surfaces at the *sender* as
+    # PrimaryFenced, which fails the ingest ack
+    with open(os.path.join(standby, "epoch.json"), "w") as fh:
+        json.dump({"epoch": 7}, fh)
+    with pytest.raises(PrimaryFenced):
+        reg.ingest("t", 2, _vals(rng))
+    assert recv.rejected >= 1
+    recv.close()
+    f.close()
+    reg.close()
+
+
+def test_frame_is_idempotent_and_torn_tail_refused(tmp_path):
+    """A half-shipped record is refused by the follower's scan until the
+    re-ship overwrites it — the byte-frame "content from offset is
+    exactly this" contract converges instead of corrupting."""
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    tr = DirTransport(standby)
+    repl = Replicator(reg._wal, [tr]).attach(reg)
+    rng = np.random.default_rng(2)
+    reg.ingest("t", 0, _vals(rng))
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 1
+    # ship only half of the next record's bytes by hand
+    reg._replication = None  # detach auto-ship for the manual frame
+    reg._pool.on_durable = None
+    reg.ingest("t", 1, _vals(rng))
+    view = reg._wal.segment_view()[-1]
+    shipped = repl._offsets[view["path"]]
+    whole = reg._wal.read_active(shipped)[1]
+    tr.send(view["path"], shipped, whole[: len(whole) // 2], epoch=0)
+    assert f.tail() == 0  # torn tail: nothing consumed, nothing applied
+    assert repl.ship() == len(whole)  # re-ship from the tracked offset
+    assert f.tail() == 1  # the full frame overwrote the torn bytes
+    _bitmatch(reg, f.registry, [("t", 0, 3)])
+    f.close()
+    reg.close()
+
+
+def test_ship_is_incremental(tmp_path):
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(3)
+    reg.ingest("t", 0, _vals(rng))
+    shipped = repl.bytes_shipped
+    assert repl.ship() == 0  # nothing new: no bytes move
+    assert repl.bytes_shipped == shipped
+    reg.ingest("t", 1, _vals(rng))
+    assert repl.bytes_shipped > shipped
+    reg.close()
+
+
+# ---------------------------------------- tail reader vs truncate() (race)
+def test_read_segment_rotated_away_is_clean_none(tmp_path):
+    """The deterministic interleaving of the historical race: a tail
+    reader lists a closed segment, ``truncate()`` deletes it, the read
+    lands after.  The reader gets the clean ``None`` signal — not a
+    raw FileNotFoundError — and the shipper drops tracking."""
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_bytes=256)
+    rng = np.random.default_rng(4)
+    lsns = [wal.append("t", pid, _vals(rng)) for pid in range(6)]
+    wal.commit()
+    view = wal.segment_view()
+    assert len(view) > 2, "segments must have rotated for this test"
+    victim = view[0]["path"]
+    # interleave: reader holds the view; truncation deletes the segment
+    wal.mark_applied(lsns)
+    assert victim in wal.truncate()
+    assert wal.read_segment(victim, 0, 16) is None  # clean signal
+    # a shipper holding stale tracking converges without error
+    standby = str(tmp_path / "standby")
+    repl = Replicator(wal, [DirTransport(standby)])
+    repl._offsets[victim] = 7
+    repl.ship()
+    assert victim not in repl._offsets
+    f = Follower(standby, num_buckets=8)
+    f.tail()
+    # the follower holds whatever survived truncation (the horizon
+    # segment onward) — never a torn or misparsed suffix
+    assert f.stats()["apply_failures"] == 0
+    f.close()
+    wal.close()
+
+
+def test_vanished_tracked_segment_is_an_anomaly_not_masked(tmp_path):
+    """Out-of-band deletion (not our truncate) must surface: the read
+    raises and ``segment_view`` counts the vanished segment."""
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_bytes=256)
+    rng = np.random.default_rng(5)
+    for pid in range(6):
+        wal.append("t", pid, _vals(rng))
+    wal.commit()
+    victim = wal.segment_view()[0]
+    assert not victim["active"]
+    os.remove(victim["path"])
+    with pytest.raises(FileNotFoundError):
+        wal.read_segment(victim["path"], 0, 16)
+    before = len(wal.segment_view())
+    assert wal.stats()["vanished_segments"] >= 1
+    assert before == len(wal.segment_view())  # stable, just skipped
+    wal.close()
+
+
+def test_rewind_frame_shrinks_follower_copy(tmp_path):
+    """``size < offset`` (append rollback rewound the active segment):
+    the shipper sends an empty frame at the true boundary and the
+    follower adopts the shorter length — both without consuming past a
+    record boundary."""
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(6)
+    reg.ingest("t", 0, _vals(rng))
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 1
+    view = reg._wal.segment_view()[-1]
+    true_off = repl._offsets[view["path"]]
+    # poison the shipper's offset as if bytes beyond the boundary had
+    # shipped and then been rolled back on the primary
+    repl._offsets[view["path"]] = true_off + 64
+    name = os.path.basename(view["path"])
+    with open(os.path.join(standby, name), "ab") as fh:
+        fh.write(b"\x00" * 64)  # the disowned bytes on the follower
+    f._offsets[name] = f._offsets.get(name, 0)  # follower state unchanged
+    repl.ship()
+    assert repl._offsets[view["path"]] == true_off
+    assert os.path.getsize(os.path.join(standby, name)) == true_off
+    reg.ingest("t", 1, _vals(rng))
+    assert f.tail() == 1  # tailing resumes cleanly at the boundary
+    _bitmatch(reg, f.registry, [("t", 0, 3)])
+    f.close()
+    reg.close()
+
+
+# ------------------------------------------------- backpressure (satellite)
+def test_backpressure_carries_retry_after_and_health_row(tmp_path):
+    reg = _primary(tmp_path)
+    reg._pool.retry = RetryPolicy(attempts=1, base=0.05, cap=1.0, jitter=0.0)
+    rng = np.random.default_rng(7)
+    with faults.inject("wal.append", exc=OSError(28, "ENOSPC")):
+        with pytest.raises(IngestBackpressure) as ei:
+            reg.ingest_async("t", 0, _vals(rng))
+    assert ei.value.retry_after == pytest.approx(0.05)
+    row = reg.health()["backpressure"]
+    assert row["reason"] == "append"
+    assert row["retry_after"] == pytest.approx(0.05)
+    assert row["at"] > 0
+    # healed: the resubmit is accepted, the row keeps the last reject
+    reg.ingest_async("t", 0, _vals(rng))
+    reg.flush()
+    assert reg.health()["backpressure"]["reason"] == "append"
+    reg.close()
+
+
+# ------------------------------------------------------------ epoch fencing
+def test_fence_rejects_appends_and_survives_reopen(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    rng = np.random.default_rng(8)
+    wal.append("t", 0, _vals(rng))
+    wal.commit()
+    wal.fence(3)
+    with pytest.raises(PrimaryFenced):
+        wal.append("t", 1, _vals(rng))
+    wal.close()
+    # the fence is persisted: a deposed primary stays fenced across its
+    # own restart...
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    with pytest.raises(PrimaryFenced):
+        wal2.append("t", 1, _vals(rng))
+    wal2.close()
+    # ...until it is reopened AT the fencing epoch (rejoin as a new
+    # primary after a failback)
+    wal3 = WriteAheadLog(str(tmp_path / "wal"), epoch=3)
+    assert wal3.append("t", 1, _vals(rng)) > 0
+    assert wal3.stats()["epoch"] == 3
+    wal3.close()
+
+
+def test_segments_carry_writer_epoch(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal"), epoch=2)
+    rng = np.random.default_rng(9)
+    wal.append("t", 0, _vals(rng))
+    wal.commit()
+    path = wal.segment_view()[0]["path"]
+    with open(path, "rb") as fh:
+        epoch, hdr = read_segment_epoch(fh.read())
+    assert epoch == 2 and hdr > 0
+    wal.close()
+    # a follower configured past that epoch refuses to apply the records
+    f = Follower(str(tmp_path / "wal"), min_epoch=3, num_buckets=8)
+    assert f.tail() == 0
+    assert f.stats()["fenced_segments_skipped"] >= 1
+    f.close()
+
+
+def test_dir_transport_fenced_after_promote_fails_the_ack(tmp_path):
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(10)
+    reg.ingest("t", 0, _vals(rng))
+    f = Follower(standby, num_buckets=8)
+    f.tail()
+    f.promote()  # no fence callable: the deposed primary is unreachable
+    # the directory's epoch.json now outranks the old primary: its next
+    # ingest fails at the ship (sync path raises the fence directly)
+    with pytest.raises(PrimaryFenced):
+        reg.ingest("t", 1, _vals(rng))
+    f.close()
+    reg.close()
+
+
+# ------------------------------------------------------- failover (service)
+def test_service_promote_zero_loss_and_plane_reattach(tmp_path):
+    pdir = str(tmp_path / "primary")
+    sdir = str(tmp_path / "standby")
+    svc = HistogramService(pdir, num_buckets=8, replicate_to=(sdir,))
+    rng = np.random.default_rng(11)
+    acked = {}
+    for pid in range(5):
+        v = _vals(rng)
+        svc.record("m", pid, v)  # returned = acked = shipped
+        acked[pid] = v
+    rep = HistogramService(sdir, role="replica", num_buckets=8)
+    with pytest.raises(NotPrimary):
+        rep.record("m", 9, _vals(rng))
+    sub = rep.subscribe("m", 0, 7, beta=16)
+    rep.sync()
+    # kill -9 the primary: no close/checkpoint, just stop talking to it
+    fence = svc.replicator.fence
+    del svc
+    rep.promote(fence=fence)
+    assert rep.role == "primary"
+    # every acked record survived the failover
+    oracle = TenantRegistry(num_buckets=8)
+    for pid, v in acked.items():
+        oracle.ingest("m", pid, v)
+    _bitmatch(oracle, rep.registry, [("m", 0, 7)])
+    # the promoted service ingests at the new epoch and the re-homed
+    # subscription plane pushes from the promoted registry
+    rep.record("m", 5, _vals(rng))
+    rep.subscriptions.flush()
+    ups = sub.drain()
+    assert ups and ups[-1].version == rep.registry["m"].version
+    assert rep.health()["role"] == "primary"
+    assert rep.health()["replication"]["role"] == "primary"
+    # restart from the promoted directory as a plain primary: recovery
+    # replays the adopted log
+    rep.close()
+    oracle.close()
+    svc2 = HistogramService(sdir, num_buckets=8)
+    assert svc2.registry["m"].version > 0
+    svc2.close()
+
+
+# ------------------------------------------------ bounded-staleness reads
+def test_replica_reads_widen_eps_and_flag_degraded(tmp_path):
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    repl = Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(12)
+    for pid in range(3):
+        reg.ingest("t", pid, _vals(rng, 128))
+    now = [0.0]
+    f = Follower(standby, num_buckets=8, staleness_slo=5.0, clock=lambda: now[0])
+    f.tail()
+    with open(manifest_path(standby)) as fh:
+        now[0] = json.load(fh)["wall"]
+    # fully caught up: plain eps, not degraded, finite lag attached
+    fresh = f.query_many([("t", 0, 3)], 16)[0]
+    base_eps = reg.query_many([("t", 0, 3)], 16, strict=False)[0][1]
+    assert fresh.eps == base_eps and not fresh.degraded
+    assert fresh.lag_seconds == pytest.approx(0.0, abs=1e-6)
+    # primary advances, replica does not tail: eps widens by exactly the
+    # un-scanned mass and the answer degrades
+    reg.ingest("t", 3, _vals(rng, 200))
+    stale = f.query_many([("t", 0, 3)], 16)[0]
+    assert stale.degraded
+    assert stale.eps == pytest.approx(base_eps + 200)
+    assert f.drift_by_tenant()["t"] == 200
+    # catching up heals it
+    f.tail()
+    healed = f.query_many([("t", 0, 3)], 16)[0]
+    assert not healed.degraded and healed.eps < stale.eps
+    # SLO breach degrades even a zero-drift replica
+    now[0] += 100.0
+    over = f.query_many([("t", 0, 3)], 16)[0]
+    assert over.degraded and over.lag_seconds > 5.0
+    # no manifest at all: widening is inf — never a guess
+    os.remove(manifest_path(standby))
+    unknown = f.query_many([("t", 0, 3)], 16)[0]
+    assert unknown.degraded and unknown.eps == float("inf")
+    assert f.lag()["known"] is False
+    f.close()
+    repl.close()
+    reg.close()
+
+
+# ------------------------------------------------------- scrub divergence
+def test_scrub_divergence_detects_lag_and_corruption(tmp_path):
+    reg = _primary(tmp_path)
+    standby = str(tmp_path / "standby")
+    Replicator(reg._wal, [DirTransport(standby)]).attach(reg)
+    rng = np.random.default_rng(13)
+    for pid in range(3):
+        reg.ingest("t", pid, _vals(rng))
+    f = Follower(standby, num_buckets=8)
+    f.tail()
+    rep = scrub_divergence(reg, f.registry)
+    assert rep["ok"] and rep["checked"] == 3 and rep["diverged"] == {}
+    # primary ahead: behind, not diverged
+    reg._replication = None
+    reg._pool.on_durable = None
+    reg.ingest("t", 3, _vals(rng))
+    rep = scrub_divergence(reg, f.registry)
+    assert rep["ok"] and rep["behind"] == {"t": [3]}
+    # bit-rot a follower summary: CRC mismatch is real divergence
+    s = f.registry["t"].summaries[0]
+    rotted = np.array(s.sizes, copy=True)
+    rotted[0] += 1.0
+    object.__setattr__(s, "sizes", rotted)
+    rep = scrub_divergence(reg, f.registry)
+    assert not rep["ok"] and rep["diverged"] == {"t": [0]}
+    f.close()
+    reg.close()
