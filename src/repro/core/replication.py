@@ -17,10 +17,12 @@ Zero acked loss, by construction
 --------------------------------
 The shipper runs on the ingest ack path: ``IngestPool.submit`` calls its
 ``on_durable`` hook after the group-commit fsync and *before* returning,
-and the synchronous ingest path ships right after its own commit
-(core/tenant.py ``_wal_log_sync`` hook).  A ship failure therefore fails
-the submit — the producer never holds an ack the follower directories
-don't hold bytes for.  The streams are byte-level and idempotent: each
+and the synchronous ingest path ships right after its commit + apply
+(core/tenant.py ``_replication_ship``, outside the tenant's
+breaker-attributed try — a replication outage fails the ingest but never
+quarantines the tenant).  A ship failure therefore fails the submit —
+the producer never holds an ack the follower directories don't hold
+bytes for.  The streams are byte-level and idempotent: each
 frame means "the segment's content from ``offset`` is exactly these
 bytes; truncate anything beyond", so re-shipping after a partial failure
 converges instead of corrupting.  A follower may hold *more* than the
@@ -43,6 +45,21 @@ and both in-tree transports refuse to deliver frames stamped with a
 lower epoch.  Segment files carry their writer's epoch in a 12-byte
 header (core/workers.py); a follower configured with ``min_epoch``
 additionally refuses to *apply* records from lower-epoch segments.
+
+Snapshot bootstrap
+------------------
+``checkpoint()`` truncates snapshot-covered segments out of the WAL, so
+a standby attached *after* a checkpoint can never receive that prefix
+as log bytes.  Two pieces keep this from becoming silent data loss: the
+WAL's durable shed-mass ledger (core/workers.py ``mass.json``) keeps
+``mass_by_tenant()`` cumulative across truncation and restart, so the
+manifest always claims the full history and an un-bootstrapped replica
+degrades honestly; and ``Replicator.bootstrap`` ships the snapshot
+itself (plus a ``bootstrap.json`` seed crediting the covered mass) as
+atomic blobs, so a fresh :class:`Follower` adopts the snapshot-covered
+state and serves non-degraded, bit-matching answers.  When shed mass
+exists and the snapshot cannot be shipped, ``bootstrap`` refuses rather
+than under-replicate.
 
 Bounded-staleness replica reads
 -------------------------------
@@ -84,6 +101,7 @@ from repro.core.tenant import TenantRegistry
 from repro.core.workers import (
     WriteAheadLog,
     atomic_write_json,
+    mass_meta_path,
     read_segment_epoch,
     scan_wal_bytes,
 )
@@ -141,6 +159,17 @@ def _apply_frame(dir: str, name: str, offset: int, data: bytes) -> None:
         f.truncate(int(offset) + len(data))
 
 
+def _apply_blob(dir: str, name: str, data: bytes) -> None:
+    """One whole auxiliary file (snapshot bootstrap), written atomically
+    — a reader never sees a torn blob, unlike the truncate-as-you-go
+    segment frame files."""
+    path = os.path.join(dir, os.path.basename(name))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
 def _check_epoch(dir: str, epoch: int) -> None:
     dest = _dir_epoch(dir)
     if dest > epoch:
@@ -165,6 +194,11 @@ class DirTransport:
         with _dir_gate(self.dir):
             _check_epoch(self.dir, epoch)
             _apply_frame(self.dir, name, offset, data)
+
+    def send_blob(self, name: str, data: bytes, *, epoch: int) -> None:
+        with _dir_gate(self.dir):
+            _check_epoch(self.dir, epoch)
+            _apply_blob(self.dir, name, data)
 
     def send_manifest(self, manifest: dict, *, epoch: int) -> None:
         with _dir_gate(self.dir):
@@ -203,6 +237,17 @@ class StreamTransport:
                 "kind": "frame",
                 "name": os.path.basename(name),
                 "offset": int(offset),
+                "length": len(data),
+                "epoch": int(epoch),
+            },
+            data,
+        )
+
+    def send_blob(self, name: str, data: bytes, *, epoch: int) -> None:
+        self._roundtrip(
+            {
+                "kind": "blob",
+                "name": os.path.basename(name),
                 "length": len(data),
                 "epoch": int(epoch),
             },
@@ -249,6 +294,7 @@ class StreamReceiver:
         os.makedirs(self.dir, exist_ok=True)
         self.frames = 0
         self.rejected = 0
+        self.faults = 0  # stream terminations, incl. apply failures
         self._thread = threading.Thread(
             target=self._serve, name="repl-receiver", daemon=True
         )
@@ -276,6 +322,8 @@ class StreamReceiver:
                             int(header["offset"]),
                             payload,
                         )
+                    elif header["kind"] == "blob":
+                        _apply_blob(self.dir, header["name"], payload)
                     else:
                         atomic_write_json(
                             manifest_path(self.dir),
@@ -285,7 +333,18 @@ class StreamReceiver:
                     self.frames += 1
                 self.sock.sendall(_ACK.pack(1, dest))
         except (ConnectionError, OSError, ValueError):
-            return  # peer closed (or close() shut us down)
+            # peer closed, close() shut us down, OR a follower-side
+            # fault (disk error applying a frame, malformed header).
+            # Either way the stream is dead: shut it down so a sender
+            # blocked in its ack wait gets ConnectionError and fails
+            # the submit fast, instead of wedging the primary's ingest
+            # ack path forever.
+            self.faults += 1
+            try:
+                self.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            return
 
     def close(self) -> None:
         try:
@@ -334,6 +393,61 @@ class Replicator:
         registry._pool.on_durable = self.ship
         return self
 
+    def bootstrap(self, snapshot_path: str) -> bool:
+        """Ship the checkpoint snapshot plus a seed-mass record so a
+        fresh follower can reconstruct state the WAL no longer holds.
+
+        A primary restarted after a ``checkpoint()`` has truncated the
+        snapshot-covered prefix out of its log; shipping only the WAL
+        suffix would leave followers *silently* missing that history
+        (their drift bound would read 0 against a manifest that excluded
+        it).  When the log has shed mass this call is mandatory and
+        raises if it cannot run — no snapshot on disk, or a transport
+        without ``send_blob`` — rather than under-replicate; with
+        nothing shed it is a best-effort catch-up accelerator.  The
+        seed record (``bootstrap.json``) carries the shed per-tenant
+        mass so the follower's drift bound credits the snapshot-covered
+        prefix it will never see as WAL bytes.  Returns True when the
+        snapshot was shipped.
+        """
+        shed = self.wal.shed_mass_by_tenant()
+        needed = any(shed.values())
+        have = os.path.exists(snapshot_path)
+        with self._lock:
+            carriers = [
+                tr for tr in self.transports if hasattr(tr, "send_blob")
+            ]
+            if needed and (not have or len(carriers) < len(self.transports)):
+                raise ValueError(
+                    "WAL no longer holds snapshot-covered history (shed "
+                    f"mass {sum(shed.values())}) and the followers cannot "
+                    "be bootstrapped: "
+                    + (
+                        f"no snapshot at {snapshot_path}"
+                        if not have
+                        else "a transport does not support send_blob"
+                    )
+                )
+            if not have:
+                return False
+            with open(snapshot_path, "rb") as f:
+                blob = f.read()
+            seed = json.dumps(
+                {
+                    "epoch": self.wal.epoch,
+                    "mass": {
+                        ("" if t is None else str(t)): int(m)
+                        for t, m in shed.items()
+                    },
+                }
+            ).encode()
+            # snapshot first, seed second: a follower that sees the seed
+            # requires the snapshot it credits to already be in place
+            for tr in carriers:
+                tr.send_blob("registry.npz", blob, epoch=self.wal.epoch)
+                tr.send_blob("bootstrap.json", seed, epoch=self.wal.epoch)
+        return True
+
     def ship(self) -> int:
         """Ship every unshipped WAL byte to every follower; returns the
         byte count.  Raises on any transport failure (the caller — the
@@ -359,32 +473,40 @@ class Replicator:
                 del self._offsets[path]  # truncated away: follower keeps it
         sent = 0
         for seg in view:
-            path, size = seg["path"], seg["size"]
+            path = seg["path"]
             off = self._offsets.get(path, 0)
+            end: int | None = seg["size"]
             if seg["active"]:
                 got = self.wal.read_active(off)
-                if got is None:
+                if got is not None and got[0] == path:
+                    _apath, data, cur = got
+                    if cur < off:
+                        # append rollback shrank the segment: rewind the
+                        # copies
+                        self._send(path, cur, b"")
+                        self._offsets[path] = cur
+                        continue
+                    if data:
+                        self._send(path, off, data)
+                        self._offsets[path] = off + len(data)
+                        sent += len(data)
                     continue
-                apath, data, cur = got
-                if apath != path:
-                    continue  # rotated since the view: closed next round
-                if cur < off:
-                    # append rollback shrank the segment: rewind the copies
-                    self._send(path, cur, b"")
-                    self._offsets[path] = cur
-                    continue
-                if not data:
-                    continue
-                self._send(path, off, data)
-                self._offsets[path] = off + len(data)
-                sent += len(data)
-            else:
-                if off >= size:
-                    continue
-                data = self.wal.read_segment(path, off, size - off)
-                if data is None:
-                    self._offsets.pop(path, None)  # rotated away
-                    continue
+                # the log rotated (or closed) between segment_view() and
+                # read_active(): ``path`` is closed and immutable NOW, so
+                # ship its remaining tail through the closed-segment read
+                # in this same round — the manifest published below
+                # claims these bytes, and the ingest ack must never
+                # return while the followers lack them
+                end = None
+            if end is not None and off >= end:
+                continue
+            data = self.wal.read_segment(
+                path, off, None if end is None else end - off
+            )
+            if data is None:
+                self._offsets.pop(path, None)  # rotated away
+                continue
+            if data:
                 self._send(path, off, data)
                 self._offsets[path] = off + len(data)
                 sent += len(data)
@@ -452,7 +574,11 @@ class Follower:
 
     Owns (or adopts) a :class:`TenantRegistry` with no WAL of its own —
     the shipped directory *is* its log, adopted wholesale at
-    :meth:`promote`.  ``tail()`` incrementally parses new segment bytes
+    :meth:`promote`.  A shipped ``registry.npz`` + ``bootstrap.json``
+    pair (:meth:`Replicator.bootstrap`) is adopted at construction:
+    the snapshot becomes the starting registry and its covered mass is
+    credited to the drift bound — that is how checkpoint-truncated
+    history reaches a fresh replica.  ``tail()`` incrementally parses new segment bytes
     from remembered offsets and applies fresh records through the same
     grouped summarizer + pid/watermark dedup recovery uses, so tailing
     is idempotent: a fault between apply and state-commit re-scans the
@@ -473,11 +599,43 @@ class Follower:
     ):
         self.dir = str(dir)
         os.makedirs(self.dir, exist_ok=True)
+        boot_registry: TenantRegistry | None = None
+        boot_mass: dict[str, int] = {}
+        if registry is None:
+            snap = os.path.join(self.dir, "registry.npz")
+            if os.path.exists(snap):
+                # snapshot bootstrap (Replicator.bootstrap): the primary
+                # checkpointed history out of its WAL — adopt the shipped
+                # snapshot and credit its covered mass, so the drift
+                # bound starts honest instead of silently reading 0
+                try:
+                    boot_registry = TenantRegistry.load(snap)
+                    with open(os.path.join(self.dir, "bootstrap.json")) as f:
+                        boot_mass = {
+                            str(t): int(m)
+                            for t, m in (
+                                json.load(f).get("mass") or {}
+                            ).items()
+                        }
+                except Exception:
+                    # torn/corrupt bootstrap: start empty and credit
+                    # nothing — the drift bound then *includes* the
+                    # missing prefix, so the replica degrades honestly
+                    # instead of answering wrong
+                    if boot_registry is not None:
+                        boot_registry.close()
+                    boot_registry = None
+                    boot_mass = {}
         self.registry = (
             registry
             if registry is not None
-            else TenantRegistry(**registry_kwargs)
+            else (
+                boot_registry
+                if boot_registry is not None
+                else TenantRegistry(**registry_kwargs)
+            )
         )
+        self._boot_mass = boot_mass
         self.min_epoch = int(min_epoch)
         self.staleness_slo = (
             None if staleness_slo is None else float(staleness_slo)
@@ -487,7 +645,10 @@ class Follower:
         self._offsets: dict[str, int] = {}  # basename -> bytes consumed
         self._epochs: dict[str, int] = {}  # basename -> segment epoch
         self._data_start: dict[str, int] = {}  # basename -> header size
-        self._seen_mass: dict[str, int] = {}  # pre-dedup scanned mass
+        # pre-dedup scanned mass, seeded with the bootstrap snapshot's
+        # covered mass (the prefix this replica holds without ever
+        # seeing its WAL bytes)
+        self._seen_mass: dict[str, int] = dict(boot_mass)
         self.applied_lsn = 0
         self.tails = 0
         self.records_applied = 0
@@ -590,13 +751,15 @@ class Follower:
             self._data_start[name] = start
             data = data[start:]
             off = start
-        if self._epochs.get(name, 0) < self.min_epoch:
-            # a fenced (deposed-primary) segment: never apply, but keep
-            # the offset pinned so repeated tails stay O(new bytes)
-            self.fenced_segments_skipped += 1
-            return (name, off + len(data), [])
         if not data:
             return None
+        if self._epochs.get(name, 0) < self.min_epoch:
+            # a fenced (deposed-primary) segment: never apply, but keep
+            # the offset pinned so repeated tails stay O(new bytes) —
+            # and count only when bytes actually arrived, so idle tail
+            # polling doesn't inflate the stat
+            self.fenced_segments_skipped += 1
+            return (name, off + len(data), [])
         records, consumed = scan_wal_bytes(data, 0)
         if not records:
             return None  # incomplete record tail — retry once more arrives
@@ -763,7 +926,22 @@ class Follower:
             pass
         # adopt the shipped segments as the promoted primary's own WAL:
         # a fresh higher-epoch segment for new appends, everything
-        # already applied marked so checkpoint truncation works
+        # already applied marked so checkpoint truncation works.  The
+        # bootstrap snapshot's covered mass goes into the adopted log's
+        # durable shed ledger first, so this promoted primary's own
+        # ship manifests stay cumulative for *its* future followers.
+        if any(self._boot_mass.values()):
+            atomic_write_json(
+                mass_meta_path(self.dir),
+                {
+                    "shed": {
+                        t: int(m)
+                        for t, m in self._boot_mass.items()
+                        if m
+                    },
+                    "pending": {},
+                },
+            )
         wal = WriteAheadLog(self.dir, epoch=new_epoch)
         wal.mark_applied(r.lsn for r in wal.recovered_records())
         reg = self.registry

@@ -432,12 +432,17 @@ class TenantRegistry(PoolStateView):
             for pid, v in parts.items()
         ]
         self._wal.commit(lsns[-1])
-        if self._replication is not None:
-            # ship-before-ack (core/replication.py): a failed ship fails
-            # the ingest, so the caller never holds an ack the follower
-            # directories don't hold bytes for
-            self._replication.ship()
         return lsns
+
+    def _replication_ship(self) -> None:
+        """Ship-before-ack (core/replication.py): a failed ship fails
+        the ingest, so the caller never holds an ack the follower
+        directories don't hold bytes for.  Runs *outside* the
+        breaker-attributed try (like the async path's ``on_durable``
+        hook): a replication transport outage is a cluster condition,
+        not tenant poison — it must not quarantine healthy tenants."""
+        if self._replication is not None:
+            self._replication.ship()
 
     def wal_stats(self) -> dict | None:
         """WAL depth / fsync-latency / footprint counters (telemetry),
@@ -461,6 +466,7 @@ class TenantRegistry(PoolStateView):
             self._breaker_fail(name)
             raise
         self._breaker_ok(name)
+        self._replication_ship()
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])
@@ -480,6 +486,7 @@ class TenantRegistry(PoolStateView):
             self._breaker_fail(name)
             raise
         self._breaker_ok(name)
+        self._replication_ship()
         if self._wal is not None:
             self._wal.mark_applied(lsns)
         self._enforce_budget_cached([name])

@@ -213,6 +213,11 @@ def scan_wal_bytes(data: bytes, at: int = 0) -> tuple[list["WalRecord"], int]:
     return records, at
 
 
+def mass_meta_path(dir: str) -> str:
+    """The WAL directory's durable cumulative-mass ledger (mass.json)."""
+    return os.path.join(str(dir), "mass.json")
+
+
 def atomic_write_json(path: str, obj, *, fsync: bool = True) -> None:
     """Write small JSON state durably: tmp + fsync + rename (+ dir
     fsync), so a crash leaves either the old file or the new one."""
@@ -301,8 +306,15 @@ class WriteAheadLog:
             self._store_epoch_state()
         # per-tenant cumulative appended mass (value counts) — the ship
         # manifest's drift currency (core/replication.py): a follower
-        # bounds its staleness by manifest mass − mass it has scanned
-        self._mass: dict = {}
+        # bounds its staleness by manifest mass − mass it has scanned.
+        # Truncation removes record *bytes* but their mass must survive
+        # a reopen, or a follower attached after a checkpoint would
+        # bound its drift at 0 and silently miss the snapshot-covered
+        # prefix: ``_shed_mass`` (mass.json) is the durable ledger of
+        # mass truncated out of the log, and ``_mass`` = shed + in-log.
+        self._shed_mass, pending = self._load_mass_state()
+        self._mass: dict = {k: v for k, v in self._shed_mass.items() if v}
+        self._seg_mass: dict[str, dict] = {}  # path -> per-tenant mass
         # tracked segments found missing on disk by segment_view() —
         # out-of-band deletion, always an anomaly worth surfacing
         self.vanished_segments = 0
@@ -311,19 +323,34 @@ class WriteAheadLog:
         self._recovered: list[WalRecord] = []
         first = None
         last = 0
+        had_pending = bool(pending)
         for path, first_lsn, records, torn, seg_epoch in self._scan():
             self._recovered.extend(records)
             self.torn_records_dropped += torn
             last_valid = records[-1].lsn if records else first_lsn - 1
             self._segments[path] = (first_lsn, last_valid)
+            charged = pending.pop(os.path.basename(path), None)
+            if charged is not None:
+                # a truncate() crashed between charging this segment to
+                # the shed ledger and unlinking it: the bytes are still
+                # here (about to be counted by the scan) — un-charge
+                for k, m in charged.items():
+                    self._shed_mass[k] = self._shed_mass.get(k, 0) - int(m)
+                    self._mass[k] = self._mass.get(k, 0) - int(m)
+            seg_m = self._seg_mass.setdefault(path, {})
             for rec in records:
                 key = rec.tenant
                 self._mass[key] = self._mass.get(key, 0) + int(
                     rec.values.size
                 )
+                seg_m[key] = seg_m.get(key, 0) + int(rec.values.size)
             if first is None:
                 first = first_lsn
             last = max(last, last_valid)
+        if had_pending:
+            # pending entries whose files are gone really were unlinked
+            # (their mass stays shed); settle the ledger either way
+            self._store_mass_state()
         self._next_lsn = last + 1
         self._written_lsn = last  # highest appended (durable: on disk)
         self._synced_lsn = last
@@ -398,6 +425,8 @@ class WriteAheadLog:
             self.bytes_written += len(data)
             self._written_lsn = lsn
             self._mass[tenant] = self._mass.get(tenant, 0) + int(v.size)
+            sm = self._seg_mass.setdefault(self._active_path, {})
+            sm[tenant] = sm.get(tenant, 0) + int(v.size)
         return lsn
 
     def commit(self, upto: int | None = None) -> None:
@@ -507,6 +536,52 @@ class WriteAheadLog:
             {"epoch": self.epoch, "fenced_at": self._fence_epoch},
             fsync=self.fsync_enabled,
         )
+
+    # -------------------------------------------------- mass ledger
+    @staticmethod
+    def _decode_mass(d: dict) -> dict:
+        return {(None if k == "" else k): int(v) for k, v in d.items()}
+
+    @staticmethod
+    def _encode_mass(d: dict) -> dict:
+        return {("" if k is None else str(k)): int(v) for k, v in d.items() if v}
+
+    def _load_mass_state(self) -> tuple[dict, dict]:
+        """``(shed, pending)`` from mass.json: per-tenant mass truncated
+        out of the log forever, plus per-segment charges written just
+        before an unlink (reconciled at open if the unlink never ran)."""
+        try:
+            with open(mass_meta_path(self.dir)) as f:
+                st = json.load(f)
+            return (
+                self._decode_mass(st.get("shed") or {}),
+                {
+                    name: self._decode_mass(mm)
+                    for name, mm in (st.get("pending") or {}).items()
+                },
+            )
+        except (FileNotFoundError, ValueError, OSError):
+            return {}, {}
+
+    def _store_mass_state(self, pending: dict | None = None) -> None:
+        atomic_write_json(
+            mass_meta_path(self.dir),
+            {
+                "shed": self._encode_mass(self._shed_mass),
+                "pending": {
+                    name: self._encode_mass(mm)
+                    for name, mm in (pending or {}).items()
+                },
+            },
+            fsync=self.fsync_enabled,
+        )
+
+    def shed_mass_by_tenant(self) -> dict:
+        """Per-tenant mass of records truncated out of this log — state
+        a follower can only obtain through a snapshot bootstrap
+        (core/replication.py ``Replicator.bootstrap``)."""
+        with self._lock:
+            return {k: v for k, v in self._shed_mass.items() if v}
 
     def fence(self, min_epoch: int) -> None:
         """Reject every future append unless this log's epoch is ≥
@@ -705,19 +780,48 @@ class WriteAheadLog:
                 (first for first, _last in self._segments.values()),
                 default=None,
             )
-            for path, (first, last_valid) in list(self._segments.items()):
-                if (
+            victims = [
+                path
+                for path, (first, last_valid) in self._segments.items()
+                if not (
                     path == self._active_path
                     or first == horizon
                     or last_valid > stable
-                ):
-                    continue
+                )
+            ]
+            if not victims:
+                return removed
+            # charge the victims' mass to the durable shed ledger BEFORE
+            # unlinking (listed as "pending" so a crash in between is
+            # reconciled at the next open): the ship manifest's
+            # cumulative mass must never silently lose the truncated
+            # prefix, or a follower's drift bound would read 0 while it
+            # is missing snapshot-covered history
+            pending = {
+                os.path.basename(p): dict(self._seg_mass.get(p, {}))
+                for p in victims
+            }
+            for mm in pending.values():
+                for k, m in mm.items():
+                    self._shed_mass[k] = self._shed_mass.get(k, 0) + int(m)
+            self._store_mass_state(pending)
+            for path in victims:
                 try:
                     os.unlink(path)
+                except FileNotFoundError:
+                    pass  # already gone — its bytes left the log anyway
                 except OSError:
-                    continue  # already gone — harmless
+                    # cannot remove (e.g. EACCES): the segment stays in
+                    # the log — give its charged mass back
+                    for k, m in pending.pop(os.path.basename(path)).items():
+                        self._shed_mass[k] = (
+                            self._shed_mass.get(k, 0) - int(m)
+                        )
+                    continue
                 del self._segments[path]
+                self._seg_mass.pop(path, None)
                 removed.append(path)
+            self._store_mass_state()  # settle: pending cleared
         return removed
 
     # ------------------------------------------------------------- stats

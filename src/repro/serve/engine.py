@@ -225,6 +225,12 @@ class HistogramService:
             self.replicator = Replicator(
                 self.registry._wal, transports
             ).attach(self.registry)
+            # a checkpoint may have truncated snapshot-covered history
+            # out of the WAL: bootstrap-ship the snapshot so a fresh
+            # standby is not silently missing that prefix (raises,
+            # rather than under-replicating, when that history cannot
+            # be shipped)
+            self.replicator.bootstrap(self.snapshot_path)
             # followers start from the full shipped history: push
             # everything the log already holds before the first ack
             self.replicator.ship()
@@ -337,6 +343,12 @@ class HistogramService:
             fence=fence, epoch=epoch, planes=planes, receivers=receivers
         )
         self.role = "primary"
+        if any(self.follower._boot_mass.values()):
+            # this replica was snapshot-bootstrapped: the adopted WAL
+            # alone cannot rebuild the snapshot-covered prefix, so
+            # persist a checkpoint now — a restart of the promoted
+            # service must recover the full state, not just the suffix
+            self.checkpoint()
 
     # ---- health plane ----------------------------------------------------
     def health(self) -> dict:

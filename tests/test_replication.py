@@ -6,6 +6,7 @@ zero-loss promote — plus the tail-reader vs ``truncate()`` race contract
 import json
 import os
 import socket
+import struct
 
 import numpy as np
 import pytest
@@ -20,6 +21,7 @@ from repro.core.replication import (
     manifest_path,
 )
 from repro.core.resilience import (
+    BreakerPolicy,
     IngestBackpressure,
     NotPrimary,
     PrimaryFenced,
@@ -222,6 +224,209 @@ def test_rewind_frame_shrinks_follower_copy(tmp_path):
     _bitmatch(reg, f.registry, [("t", 0, 3)])
     f.close()
     reg.close()
+
+
+def test_ship_rotation_race_ships_closed_tail_same_round(tmp_path):
+    """Deterministic interleaving of the ack-path race: the active
+    segment rotates between ``segment_view()`` and ``read_active()``.
+    The old segment is closed-and-immutable at that point, so its
+    unshipped tail must ship in the SAME round — ship() returning (and
+    the manifest/shipped_lsn it publishes) is what lets the ingest ack
+    out, and zero acked loss forbids an ack the followers lack bytes
+    for."""
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    rng = np.random.default_rng(20)
+    for pid in range(3):
+        wal.append("t", pid, _vals(rng))
+    wal.commit()
+    standby = str(tmp_path / "standby")
+    repl = Replicator(wal, [DirTransport(standby)])
+    real = wal.read_active
+
+    def rotated(off):
+        got = real(off)
+        # simulate: by the time the shipper reads, a new segment is active
+        return None if got is None else (got[0] + ".next", b"", 0)
+
+    wal.read_active = rotated
+    assert repl.ship() > 0  # the closed tail moved this round
+    del wal.read_active
+    assert repl.shipped_lsn == 3
+    f = Follower(standby, num_buckets=8)
+    assert f.tail() == 3  # every byte the manifest claims is present
+    lag = f.lag()
+    assert lag["known"] and lag["records"] == 0 and lag["mass"] == 0
+    f.close()
+    wal.close()
+
+
+def test_receiver_fault_fails_sender_fast_instead_of_wedging(tmp_path):
+    """A follower-side fault (malformed header / apply error) must not
+    leave the primary blocked forever in its ack wait: the receiver
+    shuts the stream down and the sender's submit fails fast."""
+    a, b = socket.socketpair()
+    recv = StreamReceiver(b, str(tmp_path / "standby"))
+    tr = StreamTransport(a)
+    a.settimeout(10.0)  # regression guard: error, never an infinite hang
+    # a malformed header: the receiver's json parse raises ValueError
+    a.sendall(struct.pack("<I", 8) + b"notjson!")
+    with pytest.raises((ConnectionError, OSError)):
+        tr.send("wal-x.log", 0, b"y", epoch=0)
+    assert recv.faults >= 1
+    recv.close()
+    tr.close()
+
+
+def test_fenced_skip_counter_quiet_on_idle_tails(tmp_path):
+    """``fenced_segments_skipped`` counts fenced *bytes arriving*, not
+    idle tail polls — it must not inflate unboundedly while nothing
+    ships."""
+    wal = WriteAheadLog(str(tmp_path / "wal"), epoch=2)
+    rng = np.random.default_rng(21)
+    wal.append("t", 0, _vals(rng))
+    wal.commit()
+    wal.close()
+    f = Follower(str(tmp_path / "wal"), min_epoch=3, num_buckets=8)
+    assert f.tail() == 0
+    baseline = f.stats()["fenced_segments_skipped"]
+    assert baseline == 1
+    for _ in range(4):
+        assert f.tail() == 0
+    assert f.stats()["fenced_segments_skipped"] == baseline
+    f.close()
+
+
+def test_ship_failure_does_not_quarantine_tenant(tmp_path):
+    """A replication transport outage is a cluster condition, not tenant
+    poison: the sync ingest must fail (no ack) WITHOUT charging the
+    tenant's circuit breaker — else a cluster-wide outage quarantines
+    every healthy tenant."""
+
+    class _Down:
+        def send(self, *a, **k):
+            raise OSError("replication down")
+
+        def send_manifest(self, *a, **k):
+            raise OSError("replication down")
+
+        def close(self):
+            pass
+
+    reg = TenantRegistry(
+        num_buckets=8,
+        wal_dir=str(tmp_path / "wal"),
+        breaker=BreakerPolicy(threshold=1, cooldown=1000.0),
+    )
+    repl = Replicator(reg._wal, [_Down()]).attach(reg)
+    rng = np.random.default_rng(22)
+    with pytest.raises(OSError):
+        reg.ingest("t", 0, _vals(rng))  # ship failed: no ack
+    assert repl.stats()["ship_failures"] == 1
+    health = reg.health()
+    assert health["quarantined"] == []
+    assert health["breakers"]["t"]["state"] == "closed"
+    # the tenant keeps serving once replication is detached/healed
+    reg._replication = None
+    reg._pool.on_durable = None
+    reg.ingest("t", 1, _vals(rng))
+    reg.close()
+
+
+# --------------------------------------------- snapshot bootstrap (standby)
+def test_wal_mass_survives_truncate_and_reopen(tmp_path):
+    """Truncation removes record bytes but never their mass: the shed
+    ledger (mass.json) keeps ``mass_by_tenant`` cumulative across a
+    reopen, so ship manifests can never silently exclude the
+    checkpoint-covered prefix."""
+    wal = WriteAheadLog(str(tmp_path / "wal"), segment_bytes=256)
+    rng = np.random.default_rng(23)
+    lsns = [wal.append("t", pid, _vals(rng)) for pid in range(6)]
+    wal.commit()
+    wal.mark_applied(lsns)
+    total = wal.mass_by_tenant()["t"]
+    assert wal.truncate(), "segments must actually be deleted"
+    assert wal.mass_by_tenant()["t"] == total
+    shed = wal.shed_mass_by_tenant()["t"]
+    assert shed > 0
+    wal.close()
+    wal2 = WriteAheadLog(str(tmp_path / "wal"))
+    assert wal2.mass_by_tenant()["t"] == total
+    assert wal2.shed_mass_by_tenant()["t"] == shed
+    wal2.close()
+
+
+def test_standby_bootstrap_after_checkpoint(tmp_path):
+    """A primary restarted with ``replicate_to`` *after* a checkpoint
+    ships only the WAL suffix as bytes — the snapshot bootstrap must
+    carry the truncated prefix, so the replica's answers are complete
+    and non-degraded, and failover (plus a restart of the promoted
+    service) still loses nothing."""
+    pdir, sdir = str(tmp_path / "primary"), str(tmp_path / "standby")
+    svc = HistogramService(pdir, num_buckets=8)
+    svc.registry._wal.segment_bytes = 256  # rotate per record
+    rng = np.random.default_rng(24)
+    acked = {}
+    for pid in range(4):
+        v = _vals(rng)
+        svc.record("m", pid, v)
+        acked[pid] = v
+    svc.checkpoint()  # truncates the covered segments out of the WAL
+    assert svc.registry._wal.shed_mass_by_tenant(), "history must be shed"
+    svc.close()
+    svc = HistogramService(pdir, num_buckets=8, replicate_to=(sdir,))
+    v = _vals(rng)
+    svc.record("m", 4, v)
+    acked[4] = v
+    rep = HistogramService(sdir, role="replica", num_buckets=8)
+    rep.sync()
+    [ans] = rep.query_many([("m", 0, 7)], 16)
+    assert not ans.degraded  # provably complete — not silently partial
+    oracle = TenantRegistry(num_buckets=8)
+    for pid, val in acked.items():
+        oracle.ingest("m", pid, val)
+    _bitmatch(oracle, rep.registry, [("m", 0, 7)])
+    # failover: the promoted follower holds the full acked set, the
+    # pre-checkpoint prefix included
+    fence = svc.replicator.fence
+    del svc
+    rep.promote(fence=fence)
+    _bitmatch(oracle, rep.registry, [("m", 0, 7)])
+    rep.close()
+    # a restart of the promoted service recovers the full state too
+    svc2 = HistogramService(sdir, num_buckets=8)
+    _bitmatch(oracle, svc2.registry, [("m", 0, 7)])
+    svc2.close()
+    oracle.close()
+
+
+def test_replicate_to_refused_when_history_unshippable(tmp_path):
+    """Shed mass with no snapshot to bootstrap from: attaching a
+    follower must refuse loudly instead of shipping a silently partial
+    history."""
+    pdir, sdir = str(tmp_path / "primary"), str(tmp_path / "standby")
+    svc = HistogramService(pdir, num_buckets=8)
+    svc.registry._wal.segment_bytes = 256
+    rng = np.random.default_rng(25)
+    for pid in range(4):
+        svc.record("m", pid, _vals(rng))
+    svc.checkpoint()
+    svc.close()
+    os.remove(os.path.join(pdir, "registry.npz"))
+    with pytest.raises(ValueError, match="bootstrap"):
+        HistogramService(pdir, num_buckets=8, replicate_to=(sdir,))
+
+
+def test_stream_blob_delivery_is_atomic(tmp_path):
+    a, b = socket.socketpair()
+    standby = str(tmp_path / "standby")
+    recv = StreamReceiver(b, standby)
+    tr = StreamTransport(a)
+    tr.send_blob("bootstrap.json", b'{"mass": {}}', epoch=0)
+    with open(os.path.join(standby, "bootstrap.json"), "rb") as f:
+        assert f.read() == b'{"mass": {}}'
+    assert not os.path.exists(os.path.join(standby, "bootstrap.json.tmp"))
+    recv.close()
+    tr.close()
 
 
 # ------------------------------------------------- backpressure (satellite)
